@@ -1,0 +1,149 @@
+"""Shared benchmark infrastructure.
+
+Every table/figure benchmark runs the same protocol the paper uses,
+shrunk to CPU scale (see DESIGN.md §6): train a small member of the
+relevant model family on the synthetic corpus until converged-ish, then
+prune with each method at each sparsity and measure held-out perplexity.
+The dense model + calibration batches are trained once per family and
+cached on disk so the whole suite stays fast.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+
+from repro.checkpoint import store
+from repro.core.driver import parallel_prune
+from repro.core.pruner import PrunerConfig
+from repro.core.scheduler import SchedulerConfig
+from repro.core.sequential import SequentialConfig, prune_model
+from repro.core.sparsity import SparsitySpec
+from repro.data import CalibConfig, CorpusConfig, MarkovCorpus, calibration_batches
+from repro.models.registry import ModelDef, model_def
+from repro.train import AdamWConfig, TrainConfig, Trainer, evaluate_ppl
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "experiments/bench_cache")
+
+# paper protocol constants (scaled): Sec 4.1 uses 128 x max-seq calibration
+CALIB = CalibConfig(num_sequences=32, seq_len=64, batch_size=8, seed=1234)
+EVAL_BATCHES = 6
+EVAL_BATCH, EVAL_SEQ = 8, 64
+
+
+def opt_family_config():
+    """OPT-125M family member (LayerNorm + GELU), trainable on CPU."""
+    from repro.configs.opt125m_proxy import tiny_config
+    return tiny_config()
+
+
+def llama_family_config():
+    """LLaMA family member (RMSNorm + SwiGLU + GQA), trainable on CPU."""
+    from repro.configs.opt125m_proxy import tiny_config
+    return tiny_config().replace(arch="llama-proxy", norm="rmsnorm", act="silu",
+                                 num_kv_heads=2, qkv_bias=False)
+
+
+@dataclasses.dataclass
+class Trained:
+    model: ModelDef
+    params: dict
+    corpus: MarkovCorpus
+    dense_ppl: float
+    family: str = "opt"
+
+
+def family_pruner(family: str) -> PrunerConfig:
+    """Paper Sec. 4.1: OPT warm-starts from SparseGPT with eps=1e-6;
+    LLaMA warm-starts from Wanda with eps=1e-3.  K=20, T=3."""
+    if family == "opt":
+        return PrunerConfig(warm_start="sparsegpt", fista_iters=20,
+                            eps=1e-6, patience=3, max_outer=12)
+    return PrunerConfig(warm_start="wanda", fista_iters=20,
+                        eps=1e-3, patience=3, max_outer=12)
+
+
+def train_family(name: str, cfg=None, steps: int = 300, seed: int = 0,
+                 corpus_seed: int = 11) -> Trained:
+    """Train (or load from cache) the family's dense model."""
+    cfg = cfg or (opt_family_config() if name == "opt" else llama_family_config())
+    model = model_def(cfg)
+    corpus = MarkovCorpus(CorpusConfig(vocab=cfg.vocab, seed=corpus_seed))
+    cache_name = f"dense_{name}_{steps}_{seed}_{corpus_seed}"
+    params0 = model.init(jax.random.PRNGKey(seed))
+    if store.exists(CACHE_DIR, cache_name):
+        params, extra = store.load(CACHE_DIR, cache_name, like=params0)
+        return Trained(model, params, corpus, extra["dense_ppl"], family=name)
+    tr = Trainer(model, corpus, TrainConfig(
+        steps=steps, batch=16, seq=EVAL_SEQ, log_every=50, seed=seed,
+        optim=AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=steps)))
+    tr.run()
+    ppl = evaluate_ppl(model, tr.params, corpus, EVAL_BATCH, EVAL_SEQ, EVAL_BATCHES)
+    store.save(CACHE_DIR, cache_name, tr.params, extra={"dense_ppl": ppl})
+    return Trained(model, tr.params, corpus, ppl, family=name)
+
+
+FAST_PRUNER = PrunerConfig(fista_iters=12, max_outer=8, patience=2, eps=1e-4)
+
+
+def prune_and_eval(t: Trained, method: str, spec: SparsitySpec,
+                   correction: str = "intra", calib: Optional[CalibConfig] = None,
+                   pruner: Optional[PrunerConfig] = None) -> Dict[str, float]:
+    calib_batches = calibration_batches(t.corpus, calib or CALIB)
+    cfg = SequentialConfig(spec=spec, pruner=pruner or family_pruner(t.family),
+                           method=method, error_correction=correction)
+    t0 = time.perf_counter()
+    pruned, reports = prune_model(t.model, t.params, calib_batches, cfg)
+    dt = time.perf_counter() - t0
+    ppl = evaluate_ppl(t.model, pruned, t.corpus, EVAL_BATCH, EVAL_SEQ, EVAL_BATCHES)
+    rel = float(np.mean([r.rel_error for r in reports])) if reports else 0.0
+    return {"ppl": ppl, "mean_rel_err": rel, "prune_seconds": dt,
+            "params": pruned}
+
+
+def zero_shot_metrics(t: Trained, params) -> Dict[str, float]:
+    """Zero-shot proxies (Table 3 analog): next-token top-1/top-5 accuracy
+    on the held-out split + mean NLL."""
+    import jax.numpy as jnp
+    it = t.corpus.batches(EVAL_BATCH, EVAL_SEQ, split="valid")
+    top1 = top5 = count = 0
+    nll = 0.0
+
+    @jax.jit
+    def logits_of(p, tokens):
+        return t.model.forward_logits(p, {"tokens": tokens})
+
+    for _ in range(4):
+        _, toks = next(it)
+        tokens = jnp.asarray(toks[:, :-1])
+        labels = toks[:, 1:]
+        lg = np.asarray(logits_of(params, tokens), np.float32)
+        pred = lg.argsort(axis=-1)
+        top1 += int((pred[..., -1] == labels).sum())
+        top5 += int((pred[..., -5:] == labels[..., None]).sum())
+        lse = np.log(np.exp(lg - lg.max(-1, keepdims=True)).sum(-1)) + lg.max(-1)
+        ll = np.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+        nll += float((lse - ll).sum())
+        count += labels.size
+    return {"top1": top1 / count, "top5": top5 / count, "nll": nll / count}
+
+
+def write_result(name: str, payload) -> str:
+    os.makedirs("experiments/bench", exist_ok=True)
+    path = f"experiments/bench/{name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def print_table(title: str, rows: List[Dict], cols: List[str]) -> None:
+    print(f"\n== {title} ==")
+    print(" | ".join(f"{c:>12}" for c in cols))
+    for r in rows:
+        print(" | ".join(f"{r.get(c, ''):>12.4f}" if isinstance(r.get(c), float)
+                         else f"{str(r.get(c, '')):>12}" for c in cols))

@@ -1,0 +1,86 @@
+"""Kernel microbenchmarks + derived roofline accounting.
+
+CPU wall times of the interpret-mode Pallas kernels are NOT TPU
+predictions; the meaningful numbers here are the DERIVED columns —
+bytes moved / FLOPs per call and the v5e-bound microseconds they imply
+(the kernels' roofline positions), plus the fused-vs-unfused HBM-traffic
+ratio the fista_step kernel is designed around.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=3) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_fista_step(m=512, n=512) -> Dict:
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    a = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32) * 0.2)
+    G = a @ a.T
+    B = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    wall = _time(jax.jit(lambda y, G, B: ref.fista_prox_step(y, G, B, 0.01, 0.005)),
+                 y, G, B)
+    flops = 2.0 * m * n * n
+    fused_bytes = 4.0 * (2 * m * n + n * n)        # read Y,B,G; write out
+    unfused_bytes = 4.0 * (5 * m * n + n * n)      # + YG, P round-trips
+    return {"name": "fista_step", "m": m, "n": n,
+            "us_per_call_cpu": wall * 1e6,
+            "flops": flops, "bytes_fused": fused_bytes,
+            "tpu_compute_us": flops / PEAK_FLOPS * 1e6,
+            "tpu_memory_us": fused_bytes / HBM_BW * 1e6,
+            "fusion_traffic_ratio": fused_bytes / unfused_bytes}
+
+
+def bench_round24(m=1024, n=4096) -> Dict:
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    wall = _time(jax.jit(ref.round24), w)
+    bytes_ = 2.0 * 4 * m * n
+    return {"name": "round24", "m": m, "n": n, "us_per_call_cpu": wall * 1e6,
+            "bytes": bytes_, "tpu_memory_us": bytes_ / HBM_BW * 1e6}
+
+
+def bench_spmm24(B=8, m=1024, n=4096) -> Dict:
+    rng = np.random.default_rng(2)
+    w = ref.round24(jnp.asarray(rng.normal(size=(m, n)).astype(np.float32)))
+    vals, meta = ref.pack24(w.astype(jnp.bfloat16))
+    x = jnp.asarray(rng.normal(size=(B, n)).astype(np.float32)).astype(jnp.bfloat16)
+    wall = _time(jax.jit(lambda x, v, mt: ref.spmm24(x, v, mt, n)), x, vals, meta)
+    dense_bytes = 2.0 * m * n
+    packed_bytes = 2.0 * vals.size + meta.size
+    return {"name": "spmm24", "B": B, "m": m, "n": n,
+            "us_per_call_cpu": wall * 1e6,
+            "weight_bytes_dense": dense_bytes,
+            "weight_bytes_packed": packed_bytes,
+            "traffic_ratio": packed_bytes / dense_bytes,
+            "tpu_decode_bound_dense_us": dense_bytes / HBM_BW * 1e6,
+            "tpu_decode_bound_packed_us": packed_bytes / HBM_BW * 1e6}
+
+
+def run_all() -> List[Dict]:
+    rows = [bench_fista_step(), bench_round24(), bench_spmm24()]
+    print("\n== Kernel microbench (derived TPU-v5e roofline positions) ==")
+    for r in rows:
+        extras = {k: v for k, v in r.items()
+                  if k not in ("name",) and isinstance(v, float)}
+        print(f"{r['name']}: " + "  ".join(f"{k}={v:.3g}" for k, v in extras.items()))
+    from benchmarks import common
+    common.write_result("kernel_bench", rows)
+    return rows

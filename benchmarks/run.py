@@ -1,0 +1,80 @@
+"""Benchmark orchestrator: one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run             # fast protocol
+    PYTHONPATH=src python -m benchmarks.run --full      # full protocol
+    PYTHONPATH=src python -m benchmarks.run --only table1,fig3
+
+Every benchmark prints its table and writes experiments/bench/<name>.json.
+The headline assertion of the suite (the paper's claim) is checked at the
+end: FISTAPruner ppl <= Wanda and SparseGPT at 50% and 2:4 on both
+families.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="more training steps + wider sweeps")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,table3,ptbc4,fig3,fig4a,"
+                         "fig4b,seeds,kernels")
+    args = ap.parse_args()
+
+    steps = 500 if args.full else 300
+    from benchmarks import figures, kernel_bench, tables
+
+    registry = {
+        "table1": lambda: tables.table1_opt_family(steps),
+        "table2": lambda: tables.table2_llama_family(steps),
+        "table3": lambda: tables.table3_zeroshot(steps),
+        "ptbc4": lambda: tables.tables_ptb_c4(steps),
+        "fig3": lambda: figures.fig3_sparsity_sweep(
+            steps, ratios=(0.2, 0.35, 0.5, 0.65, 0.8) if args.full
+            else (0.2, 0.5, 0.7)),
+        "fig4a": lambda: figures.fig4a_error_correction(steps),
+        "fig4b": lambda: figures.fig4b_calibration(
+            steps, counts=(2, 4, 8, 16, 32) if args.full else (2, 8, 32)),
+        "seeds": lambda: figures.seed_sensitivity(
+            steps, seeds=(0, 1, 2, 3, 4) if args.full else (0, 1, 2)),
+        "kernels": kernel_bench.run_all,
+    }
+    names = args.only.split(",") if args.only else list(registry)
+
+    results = {}
+    t0 = time.perf_counter()
+    for name in names:
+        print(f"\n########## {name} ##########")
+        t1 = time.perf_counter()
+        results[name] = registry[name]()
+        print(f"[{name} done in {time.perf_counter()-t1:.1f}s]")
+
+    # headline claim check (paper Tables 1-2 ordering)
+    ok = True
+    for tbl in ("table1", "table2"):
+        if tbl not in results:
+            continue
+        rows = results[tbl]
+        for sp in ("50%", "2:4"):
+            get = lambda m: next((r["ppl"] for r in rows
+                                  if r["method"] == m and r["sparsity"] == sp),
+                                 None)
+            f, w, s = get("fista"), get("wanda"), get("sparsegpt")
+            if f is None:
+                continue
+            verdict = f <= w * 1.02 and f <= s * 1.02
+            ok &= verdict
+            print(f"CLAIM {tbl}@{sp}: fista={f:.3f} wanda={w:.3f} "
+                  f"sparsegpt={s:.3f} -> {'PASS' if verdict else 'FAIL'}")
+    print(f"\nbenchmarks completed in {time.perf_counter()-t0:.1f}s; "
+          f"headline ordering: {'PASS' if ok else 'FAIL'}")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

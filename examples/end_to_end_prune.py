@@ -1,0 +1,55 @@
+"""End-to-end driver: train a small LM, prune it with every method, report
+the perplexity table (the paper's Tables 1/2 protocol, CPU scale).
+
+    PYTHONPATH=src python examples/end_to_end_prune.py [--steps 300]
+
+Scale note: the same path runs any assigned architecture at full size on
+real hardware via ``python -m repro.launch.prune --arch <id> --full``; the
+CPU default uses the OPT-125M-family tiny proxy from the paper's own
+model family.
+"""
+import argparse
+
+from repro.core.pruner import PrunerConfig
+from repro.core.sequential import SequentialConfig, prune_model
+from repro.core.sparsity import SparsitySpec
+from repro.data import CalibConfig, CorpusConfig, MarkovCorpus, calibration_batches
+from repro.models.registry import model_def
+from repro.train import AdamWConfig, TrainConfig, Trainer, evaluate_ppl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--sparsity", default="50%")
+    args = ap.parse_args()
+
+    from repro.configs.opt125m_proxy import tiny_config
+    model = model_def(tiny_config())
+    corpus = MarkovCorpus(CorpusConfig(vocab=model.cfg.vocab, seed=11))
+
+    print(f"training dense model ({args.steps} steps)...")
+    tr = Trainer(model, corpus, TrainConfig(
+        steps=args.steps, batch=16, seq=64, log_every=100,
+        optim=AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps)))
+    tr.run()
+    dense_ppl = evaluate_ppl(model, tr.params, corpus, 8, 64, 6)
+    print(f"dense ppl = {dense_ppl:.3f}\n")
+
+    calib = calibration_batches(corpus, CalibConfig(num_sequences=32, seq_len=64,
+                                                    batch_size=8))
+    spec = SparsitySpec.parse(args.sparsity)
+    print(f"{'method':>10} | {'ppl':>8} | {'mean rel err':>12}")
+    for method in ("magnitude", "wanda", "sparsegpt", "fista"):
+        cfg = SequentialConfig(
+            spec=spec, method=method,
+            pruner=PrunerConfig(warm_start="sparsegpt", fista_iters=20,
+                                eps=1e-6, max_outer=12))
+        pruned, reports = prune_model(model, tr.params, calib, cfg)
+        ppl = evaluate_ppl(model, pruned, corpus, 8, 64, 6)
+        rel = sum(r.rel_error for r in reports) / max(len(reports), 1)
+        print(f"{method:>10} | {ppl:8.3f} | {rel:12.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: prune one linear operator with FISTAPruner in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the core API: Gram statistics -> Algorithm 1 -> rounding —
+exactly the per-operator path of the paper (Fig. 1), no model needed.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import gram
+from repro.core.pruner import PrunerConfig, prune_operator, prune_with_method
+from repro.core.sparsity import SparsitySpec, sparsity
+
+# a synthetic "linear operator + calibration activations" problem:
+# W (out=256, in=128) paper layout; X (in, tokens) with CORRELATED features
+# (a decaying spectrum, like real LLM activations) — the regime where
+# convex optimization beats heuristic masks.  With isotropic X all methods
+# provably coincide (the LASSO prox = magnitude mask there).
+rng = np.random.default_rng(0)
+m, n, tokens = 256, 128, 4096
+W = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+mix = rng.normal(size=(n, n)) * (0.95 ** np.arange(n))[None, :]  # spectrum decay
+X = jnp.asarray((mix @ rng.normal(size=(n, tokens))).astype(np.float32))
+
+# 1. accumulate Gram statistics (streaming; here X* = X — no upstream pruning)
+stats = gram.accumulate(gram.init_stats(n), X.T, X.T, (W @ X).T)
+
+# 2. run Algorithm 1 (FISTA + rounding + adaptive lambda bisection)
+spec = SparsitySpec.parse("2:4")
+res = prune_operator(W, stats, spec,
+                     PrunerConfig(warm_start="sparsegpt", fista_iters=20,
+                                  eps=1e-6, max_outer=16))
+
+print(f"sparsity        : {float(sparsity(res.weight)):.3f} (target {1-spec.target_density})")
+print(f"relative error  : {res.rel_error:.4f}  (||W*X - WX||_F / ||WX||_F)")
+print(f"final lambda    : {res.lam:.3e}  after {res.outer_iters} outer iters")
+
+# 3. compare against the baselines on the same statistics
+for method in ("magnitude", "wanda", "sparsegpt"):
+    _, err = prune_with_method(method, W, stats, spec)
+    print(f"{method:>10} err : {err / np.sqrt(float(stats.h)):.4f}")
+print(f"{'fista':>10} err : {res.rel_error:.4f}   <- should be the smallest")

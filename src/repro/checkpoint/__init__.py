@@ -1,0 +1,6 @@
+"""Atomic, crc-verified checkpoint store."""
+from repro.checkpoint.store import (CheckpointCorrupt, exists, latest_step,
+                                    list_steps, load, prune_old, save, step_name)
+
+__all__ = ["CheckpointCorrupt", "exists", "latest_step", "list_steps", "load",
+           "prune_old", "save", "step_name"]

@@ -1,0 +1,156 @@
+"""Atomic, integrity-checked checkpoint store (fault-tolerance substrate).
+
+Layout per checkpoint:
+
+    <dir>/step_000123/
+        arrays.npz          flattened pytree ("/"-joined paths -> arrays)
+        MANIFEST.json       {step, keys, crc32 per key, extra, complete: true}
+
+Writes go to ``<dir>/.tmp.<name>`` then ``os.replace`` onto the final
+path — a crashed writer leaves no half-visible checkpoint, and a reader
+only trusts directories whose manifest says ``complete``.  CRC32 of every
+array is verified on load; corruption => CheckpointCorrupt (the restart
+logic falls back to the previous step).
+
+Used by the trainer (params+opt+data cursor), the pruning scheduler
+(per-unit results) and the serving weight store.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import get_logger
+from repro.utils.tree import flatten_with_paths, set_path
+
+log = get_logger("checkpoint")
+
+
+class CheckpointCorrupt(RuntimeError):
+    pass
+
+
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
+# npz can't hold ml_dtypes (bfloat16 etc.) — store them as same-width uint
+# views and restore from the manifest's recorded dtype.
+_WIDE_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+              "float8_e5m2": np.uint8}
+
+
+def _to_storable(a: np.ndarray) -> np.ndarray:
+    name = str(a.dtype)
+    if name in _WIDE_VIEW:
+        return np.ascontiguousarray(a).view(_WIDE_VIEW[name])
+    return a
+
+
+def _from_storable(a: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _WIDE_VIEW:
+        import ml_dtypes
+        return a.view(getattr(ml_dtypes, dtype_name))
+    return a
+
+
+def save(directory: str, name: str, tree: Any, extra: Optional[Dict] = None) -> str:
+    """Atomically write ``tree`` under <directory>/<name>; returns the path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, name)
+    tmp = os.path.join(directory, f".tmp.{name}.{os.getpid()}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = flatten_with_paths(tree)
+    arrays = {p: np.asarray(x) for p, x in flat}
+    storable = {p: _to_storable(a) for p, a in arrays.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **storable)
+    manifest = {
+        "keys": sorted(arrays.keys()),
+        "crc32": {p: _crc(a) for p, a in storable.items()},
+        "dtypes": {p: str(a.dtype) for p, a in arrays.items()},
+        "extra": extra or {},
+        "complete": True,
+    }
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def exists(directory: str, name: str) -> bool:
+    m = os.path.join(directory, name, "MANIFEST.json")
+    if not os.path.exists(m):
+        return False
+    try:
+        with open(m) as f:
+            return bool(json.load(f).get("complete"))
+    except (json.JSONDecodeError, OSError):
+        return False
+
+
+def load(directory: str, name: str, like: Optional[Any] = None,
+         verify: bool = True) -> Tuple[Any, Dict]:
+    """Load (tree, extra).  ``like`` rebuilds the nested structure (and
+    device dtypes); without it a flat {path: np.array} dict is returned."""
+    base = os.path.join(directory, name)
+    with open(os.path.join(base, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    if not manifest.get("complete"):
+        raise CheckpointCorrupt(f"{base}: incomplete manifest")
+    data = np.load(os.path.join(base, "arrays.npz"))
+    out: Dict[str, np.ndarray] = {}
+    for key in manifest["keys"]:
+        a = data[key]
+        if verify and _crc(a) != manifest["crc32"][key]:
+            raise CheckpointCorrupt(f"{base}: crc mismatch for {key}")
+        out[key] = _from_storable(a, manifest["dtypes"][key])
+    if like is None:
+        return out, manifest["extra"]
+    tree = like
+    for p, ref in flatten_with_paths(like):
+        if p not in out:
+            raise CheckpointCorrupt(f"{base}: missing key {p}")
+        tree = set_path(tree, p, jnp.asarray(out[p], dtype=ref.dtype))
+    return tree, manifest["extra"]
+
+
+def list_steps(directory: str, prefix: str = "step_") -> List[int]:
+    """Completed checkpoint steps, ascending."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith(prefix) and exists(directory, d):
+            try:
+                steps.append(int(d[len(prefix):]))
+            except ValueError:
+                continue
+    return sorted(steps)
+
+
+def latest_step(directory: str, prefix: str = "step_") -> Optional[int]:
+    steps = list_steps(directory, prefix)
+    return steps[-1] if steps else None
+
+
+def step_name(step: int) -> str:
+    return f"step_{step:08d}"
+
+
+def prune_old(directory: str, keep: int = 3, prefix: str = "step_") -> None:
+    """Delete all but the newest ``keep`` complete checkpoints."""
+    steps = list_steps(directory, prefix)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"{prefix}{s:08d}"), ignore_errors=True)

@@ -1,0 +1,7 @@
+"""Architecture configs: one module per assigned arch (+ the paper's own
+OPT-proxy family).  Each exports ``config()`` and ``smoke_config()``."""
+from repro.configs.base import (ALL_ARCHS, SHAPES, ModelConfig, ShapeSpec,
+                                cells, shape_applicable)
+
+__all__ = ["ALL_ARCHS", "SHAPES", "ModelConfig", "ShapeSpec", "cells",
+           "shape_applicable"]

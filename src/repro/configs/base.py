@@ -1,0 +1,213 @@
+"""Config system: one dataclass family covering all assigned architectures.
+
+Every architecture file in ``repro/configs/`` exports ``config()`` returning a
+fully-populated :class:`ModelConfig`, plus ``smoke_config()`` returning a
+reduced same-family config for CPU tests.  Input shapes for the dry-run grid
+are defined here (``SHAPES``) together with per-arch applicability rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0          # routed experts
+    top_k: int = 0
+    expert_ff: int = 0            # per-expert FFN hidden size
+    num_shared: int = 0           # always-on shared experts
+    shared_ff: int = 0            # shared-expert FFN hidden size
+    norm_topk: bool = True        # renormalize top-k router probs
+    router_aux_coef: float = 0.01  # load-balancing aux loss
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD block parameters."""
+    state: int = 128              # N, per-head state size
+    headdim: int = 64             # P
+    ngroups: int = 1              # B/C groups
+    expand: int = 2               # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 256              # SSD chunk length
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma recurrent-block parameters."""
+    lru_width: int = 0            # defaults to d_model when 0
+    conv_width: int = 4
+    block_pattern: Tuple[str, ...] = ("recurrent", "recurrent", "attention")
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    enc_layers: int = 0
+    dec_layers: int = 0
+    enc_seq: int = 1500           # whisper: fixed #frames after conv stub
+
+
+@dataclass(frozen=True)
+class VLMConfig:
+    num_patches: int = 256        # patch embeddings prepended by the stub
+    patch_dim: int = 0            # embedding dim delivered by the stub (=d_model)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    arch: str = ""
+    family: str = "dense"         # dense | moe | ssm | hybrid | encdec | vlm
+    source: str = ""              # provenance note ([arXiv/hf]; verified tier)
+
+    # transformer core
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    d_ff: int = 0
+    vocab: int = 0
+    head_dim: int = 0             # 0 -> d_model // num_heads
+
+    # attention flavor
+    window: Optional[int] = None          # sliding-window size (None = full)
+    rope_theta: float = 10000.0
+    partial_rotary: float = 1.0           # fraction of head_dim rotated
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"                 # rmsnorm | layernorm
+    act: str = "silu"                     # silu(SwiGLU) | gelu (plain MLP)
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    attn_logit_softcap: float = 0.0
+    qk_norm: bool = False
+    # muP-style scaling knobs (MiniCPM): h0 *= emb_scale; residual branches
+    # *= residual_scale; logits *= logit_scale.
+    emb_scale: float = 1.0
+    residual_scale: float = 1.0
+    logit_scale: float = 1.0
+
+    # family extensions
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vlm: Optional[VLMConfig] = None
+
+    # numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True      # False => unroll layers (accurate HLO cost
+                                  # accounting in the dry-run; bigger graphs)
+    attn_impl: str = "xla"        # "xla" (unfused reference) | "flash"
+                                  # (Pallas online-softmax kernel, §Perf it. 3)
+    ce_chunk: int = 0             # 0 = unchunked cross-entropy; else seq-chunk size
+    max_seq: int = 4096
+
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    def replace(self, **kw: Any) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- parameter counting (used for MODEL_FLOPS = 6 N D) -------------
+    def param_count(self, active_only: bool = False) -> int:
+        """Approximate parameter count; ``active_only`` counts MoE active params."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab, self.num_layers
+        hd = self.resolved_head_dim()
+        nq, nkv = self.num_heads, max(self.num_kv_heads, 1)
+        attn = d * (nq * hd) + 2 * d * (nkv * hd) + (nq * hd) * d
+        if self.family == "ssm" and self.ssm is not None:
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = d_in // s.headdim
+            in_proj = d * (2 * d_in + 2 * s.ngroups * s.state + nheads)
+            out_proj = d_in * d
+            per_layer = in_proj + out_proj + d  # + norm
+            return L * per_layer + 2 * v * d if not self.tie_embeddings else L * per_layer + v * d
+        if self.family == "hybrid" and self.rglru is not None:
+            r = self.rglru
+            w = r.lru_width or d
+            n_mat = 3 if self.act in ("silu", "geglu") else 2
+            mlp_p = n_mat * d * f
+            rec_layer = 2 * d * w + 2 * w * w + w * d + mlp_p + 2 * d
+            att_layer = attn + mlp_p + 2 * d
+            n_att = sum(1 for i in range(L)
+                        if r.block_pattern[i % len(r.block_pattern)] == "attention")
+            emb = v * d * (1 if self.tie_embeddings else 2)
+            return (L - n_att) * rec_layer + n_att * att_layer + emb
+        if self.moe is not None:
+            m = self.moe
+            routed = m.num_experts * 3 * d * m.expert_ff
+            active_routed = m.top_k * 3 * d * m.expert_ff
+            shared = m.num_shared * 3 * d * m.shared_ff if m.num_shared else 0
+            # qwen-style single fused shared expert
+            if m.num_shared and m.shared_ff:
+                shared = 3 * d * m.shared_ff
+            ffn = routed + shared + d * m.num_experts
+            ffn_active = active_routed + shared + d * m.num_experts
+        else:
+            n_mat = 3 if self.act == "silu" else 2
+            ffn = n_mat * d * f
+            ffn_active = ffn
+        per_layer = attn + (ffn_active if active_only else ffn) + 2 * d
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.family == "encdec" and self.encdec is not None:
+            e = self.encdec
+            enc_layer = attn + (2 * d * f) + 2 * d
+            dec_layer = attn * 2 + (2 * d * f) + 3 * d  # self+cross attn
+            return e.enc_layers * enc_layer + e.dec_layers * dec_layer + emb
+        return L * per_layer + emb
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input-shape grid (assigned): name -> (seq_len, global_batch, kind)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# Archs with sub-quadratic decode paths run long_500k (see DESIGN.md).
+SUBQUADRATIC_ARCHS = {"mamba2-780m", "recurrentgemma-9b", "mixtral-8x7b"}
+
+ALL_ARCHS: List[str] = [
+    "mamba2-780m",
+    "internvl2-2b",
+    "minicpm-2b",
+    "stablelm-1.6b",
+    "internlm2-20b",
+    "granite-20b",
+    "recurrentgemma-9b",
+    "whisper-base",
+    "qwen2-moe-a2.7b",
+    "mixtral-8x7b",
+]
+
+
+def shape_applicable(arch: str, shape: str) -> Tuple[bool, str]:
+    """(runnable, reason-if-skipped) for one dry-run cell."""
+    if shape == "long_500k" and arch not in SUBQUADRATIC_ARCHS:
+        return False, "pure full-attention arch: 500k-token KV decode is unbounded; skipped per spec"
+    return True, ""
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells, honoring applicability."""
+    for arch in ALL_ARCHS:
+        for shape in SHAPES:
+            ok, why = shape_applicable(arch, shape)
+            if ok or include_skipped:
+                yield arch, shape, ok, why

@@ -1,0 +1,25 @@
+"""granite-20b — code model, arXiv:2405.04324 [hf].
+
+52L d_model=6144 48H (MQA kv=1) d_ff=24576 vocab=49152.  The code
+variant uses LayerNorm + plain GELU MLP (fc1/fc2) and multi-query
+attention; positions here are rotary (assignment labels it llama-arch).
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch="granite-20b", family="dense",
+        source="arXiv:2405.04324; hf",
+        num_layers=52, d_model=6144, num_heads=48, num_kv_heads=1,
+        d_ff=24576, vocab=49152,
+        attn_impl="flash",
+        norm="layernorm", act="gelu", ce_chunk=512, max_seq=8192,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=8, num_kv_heads=1, d_ff=128,
+        vocab=256, param_dtype="float32", compute_dtype="float32",
+        remat=False, ce_chunk=0, max_seq=64)

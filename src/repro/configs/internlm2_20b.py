@@ -1,0 +1,23 @@
+"""internlm2-20b — GQA, arXiv:2403.17297 [hf].
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92544.
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch="internlm2-20b", family="dense",
+        source="arXiv:2403.17297; hf",
+        num_layers=48, d_model=6144, num_heads=48, num_kv_heads=8,
+        d_ff=16384, vocab=92544, rope_theta=1_000_000.0,
+        attn_impl="flash",
+        norm="rmsnorm", act="silu", ce_chunk=512, max_seq=32768,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=8, num_kv_heads=2, d_ff=128,
+        vocab=256, param_dtype="float32", compute_dtype="float32",
+        remat=False, ce_chunk=0, max_seq=64)

@@ -1,0 +1,27 @@
+"""internvl2-2b — InternViT + InternLM2 backbone, arXiv:2404.16821 [hf].
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553.  The ViT frontend
+is a stub: ``input_specs`` delivers precomputed patch embeddings
+(B, 256, d_model) prepended to the token stream.
+"""
+from repro.configs.base import ModelConfig, VLMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch="internvl2-2b", family="vlm",
+        source="arXiv:2404.16821; hf",
+        num_layers=24, d_model=2048, num_heads=16, num_kv_heads=8,
+        d_ff=8192, vocab=92553, rope_theta=1_000_000.0,
+        vlm=VLMConfig(num_patches=256, patch_dim=2048),
+        attn_impl="flash",
+        norm="rmsnorm", act="silu", ce_chunk=512, max_seq=32768,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+        vocab=256, vlm=VLMConfig(num_patches=8, patch_dim=64),
+        param_dtype="float32", compute_dtype="float32", remat=False,
+        ce_chunk=0, max_seq=64)

@@ -1,0 +1,28 @@
+"""mamba2-780m — SSD (state-space duality), arXiv:2405.21060 [unverified].
+
+48L d_model=1536 attn-free, ssm_state=128, vocab=50280.  Sub-quadratic:
+runs the long_500k shape (O(1)-state decode).
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch="mamba2-780m", family="ssm",
+        source="arXiv:2405.21060; unverified",
+        num_layers=48, d_model=1536, vocab=50280,
+        num_heads=0, num_kv_heads=0, d_ff=0,
+        ssm=SSMConfig(state=128, headdim=64, ngroups=1, expand=2,
+                      conv_width=4, chunk=256),
+        tie_embeddings=True, norm="rmsnorm",
+        ce_chunk=512, max_seq=2048,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, vocab=256,
+        ssm=SSMConfig(state=16, headdim=16, ngroups=1, expand=2,
+                      conv_width=4, chunk=8),
+        param_dtype="float32", compute_dtype="float32", remat=False,
+        ce_chunk=0, max_seq=64)

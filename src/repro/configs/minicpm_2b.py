@@ -1,0 +1,32 @@
+"""minicpm-2b — WSD schedule, muP-style scaling, arXiv:2404.06395 [hf].
+
+40L d_model=2304 36H (kv=36) d_ff=5760 vocab=122753.  muP knobs per the
+MiniCPM paper: emb_scale=12, residual branches scaled by 1.4/sqrt(L),
+logits scaled by dim_model_base/d_model = 256/2304; tied embeddings.
+"""
+import math
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch="minicpm-2b", family="dense",
+        source="arXiv:2404.06395; hf",
+        num_layers=40, d_model=2304, num_heads=36, num_kv_heads=36,
+        d_ff=5760, vocab=122753,
+        tie_embeddings=True,
+        emb_scale=12.0, residual_scale=1.4 / math.sqrt(40),
+        logit_scale=256.0 / 2304.0,
+        attn_impl="flash",
+        norm="rmsnorm", act="silu", ce_chunk=512, max_seq=32768,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+        vocab=256, residual_scale=1.4 / math.sqrt(2),
+        logit_scale=256.0 / 64.0,
+        param_dtype="float32", compute_dtype="float32", remat=False,
+        ce_chunk=0, max_seq=64)

@@ -1,0 +1,30 @@
+"""mixtral-8x7b — 8 experts top-2 + SWA, arXiv:2401.04088 [hf].
+
+32L d_model=4096 32H (GQA kv=8) expert_ff=14336 vocab=32000; sliding
+window 4096 => KV cache capped at the window, so long_500k decode is
+bounded and this arch runs the long-context shape.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch="mixtral-8x7b", family="moe",
+        source="arXiv:2401.04088; hf",
+        num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+        d_ff=14336, vocab=32000, window=4096, rope_theta=1_000_000.0,
+        moe=MoEConfig(num_experts=8, top_k=2, expert_ff=14336,
+                      num_shared=0, shared_ff=0, norm_topk=True),
+        attn_impl="flash",
+        norm="rmsnorm", act="silu", ce_chunk=512, max_seq=32768,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=64,
+        vocab=256, window=16,
+        moe=MoEConfig(num_experts=4, top_k=2, expert_ff=64,
+                      num_shared=0, shared_ff=0, norm_topk=True),
+        param_dtype="float32", compute_dtype="float32", remat=False,
+        ce_chunk=0, max_seq=64)

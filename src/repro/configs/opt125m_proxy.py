@@ -1,0 +1,33 @@
+"""opt125m-proxy — the paper's own OPT-125M family (Zhang et al. 2022).
+
+Used by the reproduction benchmarks (Tables 1/4/6 analogs, Figures 3/4):
+a 12L d_model=768 LayerNorm+GELU decoder.  ``tiny_config`` is the
+train-in-repo variant (~1-10M params) used for end-to-end validation:
+train on the synthetic corpus, prune with every method, compare ppl.
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch="opt125m-proxy", family="dense",
+        source="arXiv:2205.01068 (OPT); paper's Table 1 family",
+        num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+        d_ff=3072, vocab=50272, qkv_bias=True,
+        norm="layernorm", act="gelu", ce_chunk=0, max_seq=2048,
+    )
+
+
+def tiny_config() -> ModelConfig:
+    """Trainable-on-CPU member of the same family (for e2e validation)."""
+    return config().replace(
+        num_layers=4, d_model=128, num_heads=4, num_kv_heads=4, d_ff=512,
+        vocab=512, param_dtype="float32", compute_dtype="float32",
+        remat=False, max_seq=128)
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+        vocab=256, param_dtype="float32", compute_dtype="float32",
+        remat=False, max_seq=64)

@@ -1,0 +1,30 @@
+"""qwen2-moe-a2.7b — hf:Qwen/Qwen1.5-MoE-A2.7B [hf].
+
+24L d_model=2048 16H (kv=16) vocab=151936; MoE: 60 routed experts top-4
+(expert_ff=1408) + one fused shared expert (4x1408=5632) with a sigmoid
+gate; router probs NOT renormalized after top-k (qwen flavor); qkv bias.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch="qwen2-moe-a2.7b", family="moe",
+        source="hf:Qwen/Qwen1.5-MoE-A2.7B; hf",
+        num_layers=24, d_model=2048, num_heads=16, num_kv_heads=16,
+        d_ff=1408, vocab=151936, qkv_bias=True, rope_theta=1_000_000.0,
+        moe=MoEConfig(num_experts=60, top_k=4, expert_ff=1408,
+                      num_shared=4, shared_ff=5632, norm_topk=False),
+        attn_impl="flash",
+        norm="rmsnorm", act="silu", ce_chunk=512, max_seq=32768,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=32,
+        vocab=256,
+        moe=MoEConfig(num_experts=8, top_k=2, expert_ff=32,
+                      num_shared=1, shared_ff=64, norm_topk=False),
+        param_dtype="float32", compute_dtype="float32", remat=False,
+        ce_chunk=0, max_seq=64)

@@ -1,0 +1,35 @@
+"""recurrentgemma-9b — RG-LRU + local attention 1:2, arXiv:2402.19427 [unverified].
+
+38L d_model=4096 16H (MQA kv=1) d_ff=12288 vocab=256000.  Block pattern
+(recurrent, recurrent, attention) with window 2048; GeGLU MLPs; Gemma
+embedding scaling and a 30.0 final-logit softcap.  Sub-quadratic: runs
+long_500k (O(1) recurrent state + windowed KV).
+"""
+import math
+
+from repro.configs.base import ModelConfig, RGLRUConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch="recurrentgemma-9b", family="hybrid",
+        source="arXiv:2402.19427; unverified",
+        num_layers=38, d_model=4096, num_heads=16, num_kv_heads=1,
+        d_ff=12288, vocab=256000, window=2048,
+        rglru=RGLRUConfig(lru_width=4096, conv_width=4,
+                          block_pattern=("recurrent", "recurrent", "attention")),
+        tie_embeddings=True, emb_scale=math.sqrt(4096.0), logit_softcap=30.0,
+        attn_impl="flash",
+        norm="rmsnorm", act="geglu", ce_chunk=512, max_seq=524288,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=3, d_model=64, num_heads=4, num_kv_heads=1, d_ff=128,
+        vocab=256, window=16,
+        rglru=RGLRUConfig(lru_width=64, conv_width=4,
+                          block_pattern=("recurrent", "recurrent", "attention")),
+        emb_scale=math.sqrt(64.0),
+        param_dtype="float32", compute_dtype="float32", remat=False,
+        ce_chunk=0, max_seq=64)

@@ -1,0 +1,25 @@
+"""stablelm-1.6b — hf:stabilityai/stablelm-2-1_6b [unverified].
+
+24L d_model=2048 32H (kv=32) d_ff=5632 vocab=100352.  LayerNorm,
+partial rotary 25%, qkv biases (stablelm-2 flavor).
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch="stablelm-1.6b", family="dense",
+        source="hf:stabilityai/stablelm-2-1_6b; unverified",
+        num_layers=24, d_model=2048, num_heads=32, num_kv_heads=32,
+        d_ff=5632, vocab=100352,
+        attn_impl="flash",
+        norm="layernorm", act="silu", partial_rotary=0.25, qkv_bias=True,
+        ce_chunk=512, max_seq=32768,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+        vocab=256, param_dtype="float32", compute_dtype="float32",
+        remat=False, ce_chunk=0, max_seq=64)

@@ -1,0 +1,29 @@
+"""whisper-base — enc-dec with conv frontend stub, arXiv:2212.04356 [unverified].
+
+6L encoder + 6L decoder, d_model=512 8H d_ff=2048 vocab=51865.  The mel/
+conv frontend is a stub: inputs are precomputed frame embeddings
+(B, 1500, 512).  Decoder context is 448 tokens (Whisper's cap) — decode
+shapes clamp seq_len to max_seq.  Encoder is bidirectional; decode
+shapes exercise the decoder serve_step only.
+"""
+from repro.configs.base import EncDecConfig, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch="whisper-base", family="encdec",
+        source="arXiv:2212.04356; unverified",
+        num_layers=12,  # 6 enc + 6 dec (see encdec)
+        d_model=512, num_heads=8, num_kv_heads=8, d_ff=2048, vocab=51865,
+        encdec=EncDecConfig(enc_layers=6, dec_layers=6, enc_seq=1500),
+        norm="layernorm", act="gelu", partial_rotary=0.0,
+        tie_embeddings=True, ce_chunk=0, max_seq=448,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+        vocab=256, encdec=EncDecConfig(enc_layers=2, dec_layers=2, enc_seq=16),
+        param_dtype="float32", compute_dtype="float32", remat=False,
+        max_seq=64)

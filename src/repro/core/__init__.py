@@ -1,0 +1,11 @@
+"""FISTAPruner core: convex model, FISTA solver, Algorithm-1 pruner,
+baselines, intra-layer error correction and the layer-unit scheduler."""
+from repro.core.gram import GramStats, accumulate, init_stats, frob_error, target_correlation
+from repro.core.sparsity import SparsitySpec, round_to
+from repro.core.pruner import PruneResult, PrunerConfig, prune_operator, prune_with_method
+
+__all__ = [
+    "GramStats", "accumulate", "init_stats", "frob_error", "target_correlation",
+    "SparsitySpec", "round_to",
+    "PruneResult", "PrunerConfig", "prune_operator", "prune_with_method",
+]

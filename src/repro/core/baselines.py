@@ -1,0 +1,150 @@
+"""Baseline one-shot pruners the paper compares against (and warm-starts from).
+
+* magnitude : keep largest |w| (global for unstructured, per-group for n:m).
+* Wanda     : score |W_ij| * ||x_j||_2 from calibration activations; per-row
+              comparison groups (Sun et al. 2023), no weight update.
+* SparseGPT : OBS column sweep with Cholesky-factored inverse Hessian and
+              weight compensation (Frantar & Alistarh 2023), blockwise.
+
+All operate in the paper layout W (out=m, in=n) and consume the same
+GramStats as FISTAPruner — one calibration sweep serves every method.
+SparseGPT uses the dense-path Gram H = X X^T by default; pass
+``use_pruned_gram=True`` to run it against X* (what it sees when used as a
+warm start inside the intra-layer-corrected pipeline).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gram as gram_lib
+from repro.core.gram import GramStats
+from repro.core.sparsity import (SparsitySpec, mask_by_score, nm_rank)
+
+
+# ---------------------------------------------------------------------------
+# magnitude
+# ---------------------------------------------------------------------------
+def magnitude(w: jnp.ndarray, spec: SparsitySpec) -> jnp.ndarray:
+    w = jnp.asarray(w, jnp.float32)
+    mask = mask_by_score(jnp.abs(w), spec, rowwise=False)
+    return jnp.where(mask, w, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Wanda
+# ---------------------------------------------------------------------------
+def wanda(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec) -> jnp.ndarray:
+    """|W| * ||x_j||_2 with per-output-row comparison groups."""
+    w = jnp.asarray(w, jnp.float32)
+    norms = jnp.sqrt(jnp.maximum(stats.hdiag, 0.0))        # (n,)
+    score = jnp.abs(w) * norms[None, :]
+    mask = mask_by_score(score, spec, rowwise=True)
+    return jnp.where(mask, w, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# SparseGPT
+# ---------------------------------------------------------------------------
+def _hinv_cholesky(H: jnp.ndarray, damp_rel: float) -> jnp.ndarray:
+    """Upper-Cholesky factor of H^{-1} (SparseGPT's working matrix).
+
+    Returns U upper-triangular with H^{-1} = U^T U ... processed so that
+    U[j, j:] plays the role of the reference implementation's Hinv rows.
+    """
+    n = H.shape[0]
+    Hd = H + (damp_rel * jnp.mean(jnp.diag(H)) + 1e-10) * jnp.eye(n, dtype=H.dtype)
+    Hinv = jnp.linalg.inv(Hd)
+    # reference impl: Hinv = cholesky(Hinv, upper=True)
+    Lc = jnp.linalg.cholesky(Hinv)          # lower: Hinv = Lc Lc^T
+    return Lc.T                              # upper factor
+
+
+@partial(jax.jit, static_argnames=("bs", "nm_n", "nm_m", "ratio", "use_nm"))
+def _sparsegpt_block(W1: jnp.ndarray, U1: jnp.ndarray, ratio: float,
+                     use_nm: bool, nm_n: int, nm_m: int, bs: int):
+    """Process one column block: returns (Q1 pruned block, Err1).
+
+    W1 (m, bs), U1 (bs, bs) the corresponding diagonal block of the upper
+    Cholesky factor of H^{-1}.  Column i of the block is pruned with OBS
+    saliency w^2/d^2 (d = U1[i,i]) and the remaining columns compensated
+    with err * U1[i, i:].
+    """
+    m = W1.shape[0]
+    diag = jnp.diag(U1)                                     # (bs,)
+
+    if not use_nm:
+        # global-within-block threshold (reference implementation)
+        score = (W1 ** 2) / (diag[None, :] ** 2)
+        k = int(round(ratio * m * bs))
+        flat = jnp.sort(score.reshape(-1))
+        thresh = flat[min(max(k - 1, 0), m * bs - 1)] if k > 0 else -jnp.inf
+        prune_mask0 = score <= thresh if k > 0 else jnp.zeros_like(score, bool)
+    else:
+        prune_mask0 = jnp.zeros((m, bs), bool)
+
+    def body(i, carry):
+        W1c, Err1, pmask = carry
+        col = jax.lax.dynamic_slice(W1c, (0, i), (m, 1))[:, 0]
+        d = diag[i]
+
+        if use_nm:
+            # at group starts, pick the n:m mask for columns [i, i+m)
+            def pick(pm):
+                blk = jax.lax.dynamic_slice(W1c, (0, i), (m, nm_m))
+                dg = jax.lax.dynamic_slice(diag, (i,), (nm_m,))
+                sc = (blk ** 2) / (dg[None, :] ** 2)
+                rank = nm_rank(sc[:, None, :], nm_m)[:, 0, :]
+                grp_prune = rank >= nm_n                     # prune smallest m-n
+                return jax.lax.dynamic_update_slice(pm, grp_prune, (0, i))
+
+            pmask = jax.lax.cond(i % nm_m == 0, pick, lambda pm: pm, pmask)
+
+        pruned_here = jax.lax.dynamic_slice(pmask, (0, i), (m, 1))[:, 0]
+        q = jnp.where(pruned_here, 0.0, col)
+        err = (col - q) / d                                 # (m,)
+        # compensate columns i.. (masked to the future) within the block
+        row = U1[i] * (jnp.arange(bs) >= i + 1)             # zero past+self
+        W1c = W1c - err[:, None] * row[None, :]
+        W1c = jax.lax.dynamic_update_slice(W1c, q[:, None], (0, i))
+        Err1 = jax.lax.dynamic_update_slice(Err1, err[:, None], (0, i))
+        return (W1c, Err1, pmask)
+
+    Err0 = jnp.zeros((m, bs), jnp.float32)
+    W1f, Err1, _ = jax.lax.fori_loop(0, bs, body, (W1, Err0, prune_mask0))
+    return W1f, Err1
+
+
+def sparsegpt(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
+              blocksize: int = 128, damp_rel: float = 0.01,
+              use_pruned_gram: bool = False) -> jnp.ndarray:
+    """SparseGPT sweep over column blocks with cross-block compensation."""
+    W = jnp.asarray(w, jnp.float32)
+    m, n = W.shape
+    H = stats.G if use_pruned_gram else stats.H
+    # dead inputs (never activated): reference impl zeroes those columns
+    dead = jnp.diag(H) == 0
+    H = H + jnp.diag(jnp.where(dead, 1.0, 0.0))
+    W = jnp.where(dead[None, :], 0.0, W)
+
+    U = _hinv_cholesky(H, damp_rel)                          # (n, n) upper
+    bs = min(blocksize, n)
+    use_nm = spec.kind == "nm"
+    ratio = 0.0 if use_nm else spec.ratio
+
+    out = W
+    for j1 in range(0, n, bs):
+        j2 = min(j1 + bs, n)
+        cur = j2 - j1
+        W1 = jax.lax.dynamic_slice(out, (0, j1), (m, cur))
+        U1 = U[j1:j2, j1:j2]
+        # rescale so the block factor is self-consistent (reference keeps the
+        # global factor; U rows already encode cross-block couplings below)
+        Q1, Err1 = _sparsegpt_block(W1, U1, ratio, use_nm, spec.n, spec.m, cur)
+        out = jax.lax.dynamic_update_slice(out, Q1, (0, j1))
+        if j2 < n:
+            # lazy batch compensation of all future columns
+            out = out.at[:, j2:].add(-(Err1 @ U[j1:j2, j2:]))
+    return jnp.where(dead[None, :], 0.0, out)

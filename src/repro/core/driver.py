@@ -1,0 +1,96 @@
+"""Parallel pruning driver: sequential math x fault-tolerant scheduler.
+
+Because pruning units are independent under the paper's intra-layer
+scheme (their pruned stream restarts from the dense activation at the
+unit boundary), the driver:
+
+1. runs ONE dense relay pass, recording each unit's input states for
+   every calibration micro-batch (host-side, layer-at-a-time memory);
+2. hands the units to :class:`repro.core.scheduler.PruneScheduler` —
+   any number of workers, retries, speculative duplicates, per-unit
+   checkpoint/resume;
+3. merges the per-unit pruned weights back into the model params.
+
+``error_correction="full"`` is inherently serial (unit k+1 consumes unit
+k's pruned output) and falls back to the serial path in sequential.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+from repro.core import sequential as seq_lib
+from repro.core.scheduler import PruneScheduler, SchedulerConfig
+from repro.core.sequential import OperatorReport, SequentialConfig
+from repro.models.registry import ModelDef
+from repro.utils import get_logger
+
+log = get_logger("driver")
+
+
+def _dense_unit_inputs(model: ModelDef, params: Any, calib_batches: Sequence[Dict],
+                       units) -> Dict[str, List[Dict]]:
+    """One dense relay pass; snapshot each unit's input states."""
+    states = [model.embed(params, b) for b in calib_batches]
+    inputs: Dict[str, List[Dict]] = {}
+    for spec in units:
+        inputs[spec.name] = [dict(s) for s in states]
+        dense_unit = seq_lib._unit_params_of(params, spec)
+        fwd = seq_lib._capture_forward(model, spec)
+        states = [fwd(dense_unit, s)[0] for s in states]
+        states = [model.post_unit(params, spec.layer_index, s) for s in states]
+    return inputs
+
+
+def parallel_prune(model: ModelDef, params: Any, calib_batches: Sequence[Dict],
+                   cfg: SequentialConfig,
+                   sched: SchedulerConfig = SchedulerConfig()
+                   ) -> Tuple[Any, List[OperatorReport], Dict]:
+    if cfg.error_correction == "full":
+        new_params, reports = seq_lib.prune_model(model, params, calib_batches, cfg)
+        return new_params, reports, {"mode": "serial-full"}
+
+    units = {spec.name: spec for spec in model.units()}
+    unit_inputs = _dense_unit_inputs(model, params, calib_batches,
+                                     list(units.values()))
+
+    def run_unit(name: str) -> Dict[str, Any]:
+        spec = units[name]
+        dense_unit = seq_lib._unit_params_of(params, spec)
+        dense_states = unit_inputs[name]
+        pruned_states = [dict(s) for s in dense_states]
+        pruned_unit, reports, _ = seq_lib.prune_unit(
+            model, spec, dense_unit, dense_states, pruned_states, cfg)
+        return {"unit_params": pruned_unit,
+                "reports": [dataclasses.asdict(r) for r in reports]}
+
+    def save_payload(name: str, payload: Dict) -> None:
+        store.save(sched.checkpoint_dir, f"unit_{name}",
+                   {"unit_params": payload["unit_params"]},
+                   extra={"reports": payload["reports"]})
+
+    def load_payload(name: str) -> Dict:
+        spec = units[name]
+        like = {"unit_params": seq_lib._unit_params_of(params, spec)}
+        tree, extra = store.load(sched.checkpoint_dir, f"unit_{name}", like)
+        return {"unit_params": tree["unit_params"], "reports": extra["reports"]}
+
+    has_store = sched.checkpoint_dir is not None
+    scheduler = PruneScheduler(
+        list(units.keys()), run_unit, sched,
+        save_payload=save_payload if has_store else None,
+        load_payload=load_payload if has_store else None)
+    results = scheduler.run()
+
+    new_params = params
+    reports: List[OperatorReport] = []
+    for name, res in results.items():
+        spec = units[name]
+        new_params = seq_lib._write_unit_params(new_params, spec,
+                                                res.payload["unit_params"])
+        reports.extend(OperatorReport(**r) for r in res.payload["reports"])
+    return new_params, reports, scheduler.stats

@@ -1,0 +1,166 @@
+"""Gram-statistic form of the FISTAPruner objective.
+
+The paper's per-operator objective (Eq. 4)
+
+    min_Y  1/2 ||Y X* - W X||_F^2 + lam * sum_i ||Y_i||_1
+
+only touches the calibration data through three sufficient statistics
+(all accumulated streaming over calibration batches, in fp32):
+
+    G = X* X*^T          (n x n)   pruned-path Gram
+    C = X  X*^T          (n x n)   cross Gram (dense path x pruned path)
+    h = ||W X||_F^2      scalar    target energy
+
+With B := W C (m x n) the smooth part and its gradient become
+
+    f(Y)      = 1/2 ( <Y G, Y> - 2 <Y, B> + h )
+    grad f(Y) = Y G - B
+
+and the pruning error of any candidate Y is
+
+    ||Y X* - W X||_F^2 = <Y G, Y> - 2 <Y, B> + h .
+
+After calibration, the pruner never sees X again: memory per operator is
+O(n^2 + m n) instead of O(n p), and every FISTA iteration is one dense
+(m,n)x(n,n) matmul (MXU-friendly).  This is an exact restatement of the
+paper's Appendix B math, not an approximation.
+
+We additionally accumulate
+
+    H    = X X^T   (n x n)   dense-path Gram   (SparseGPT baseline)
+    hdiag = diag(H)          (Wanda's ||x_j||_2^2 metric)
+
+so that every baseline + warm start runs off the same single calibration
+sweep.
+
+Weight-layout convention: the pruner works in the paper's (out=m, in=n)
+layout.  Model code stores (in, out); the boundary transpose happens in
+``core.sequential``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GramStats:
+    """Streaming sufficient statistics for one linear operator.
+
+    Shapes: ``G, C, H`` are (n, n) fp32, ``h`` scalar fp32, ``count`` the
+    number of accumulated columns (tokens) — used for diagnostics only,
+    the objective is scale-covariant.
+    """
+
+    G: jnp.ndarray
+    C: jnp.ndarray
+    H: jnp.ndarray
+    h: jnp.ndarray
+    count: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.G, self.C, self.H, self.h, self.count), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n(self) -> int:
+        return self.G.shape[0]
+
+    @property
+    def hdiag(self) -> jnp.ndarray:
+        """diag(X X^T) = per-input-feature squared activation norms (Wanda)."""
+        return jnp.diag(self.H)
+
+
+def init_stats(n: int) -> GramStats:
+    z = jnp.zeros((n, n), jnp.float32)
+    return GramStats(G=z, C=z, H=z, h=jnp.float32(0.0), count=jnp.float32(0.0))
+
+
+@jax.jit
+def accumulate(stats: GramStats, x_dense: jnp.ndarray, x_pruned: jnp.ndarray,
+               wx_dense: jnp.ndarray) -> GramStats:
+    """Accumulate one calibration batch.
+
+    ``x_dense``  : (..., n) activations of this operator in the DENSE net.
+    ``x_pruned`` : (..., n) activations in the partially-PRUNED net (X*).
+    ``wx_dense`` : (..., m) dense outputs W X (target) for the same batch.
+
+    Any leading batch/seq dims are flattened to the token axis p.
+    """
+    xd = x_dense.reshape(-1, x_dense.shape[-1]).astype(jnp.float32)
+    xp = x_pruned.reshape(-1, x_pruned.shape[-1]).astype(jnp.float32)
+    wx = wx_dense.reshape(-1, wx_dense.shape[-1]).astype(jnp.float32)
+    return GramStats(
+        G=stats.G + xp.T @ xp,
+        C=stats.C + xd.T @ xp,
+        H=stats.H + xd.T @ xd,
+        h=stats.h + jnp.sum(wx * wx),
+        count=stats.count + jnp.float32(xd.shape[0]),
+    )
+
+
+def merge(a: GramStats, b: GramStats) -> GramStats:
+    """Merge statistics accumulated on different shards (after psum this is
+    what the all-reduce computes; kept for host-side tree-reduction)."""
+    return GramStats(G=a.G + b.G, C=a.C + b.C, H=a.H + b.H, h=a.h + b.h,
+                     count=a.count + b.count)
+
+
+@jax.jit
+def target_correlation(stats: GramStats, w_dense: jnp.ndarray) -> jnp.ndarray:
+    """B = W C  (m, n): correlation of the dense target with the pruned path."""
+    return w_dense.astype(jnp.float32) @ stats.C
+
+
+@jax.jit
+def frob_error_sq(stats: GramStats, y: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """||Y X* - W X||_F^2 = <Y G, Y> - 2 <Y, B> + h  (clamped at 0)."""
+    yf = y.astype(jnp.float32)
+    quad = jnp.sum((yf @ stats.G) * yf)
+    cross = jnp.sum(yf * b)
+    return jnp.maximum(quad - 2.0 * cross + stats.h, 0.0)
+
+
+def frob_error(stats: GramStats, y: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sqrt(frob_error_sq(stats, y, b))
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def max_eigval(G: jnp.ndarray, iters: int = 64, key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Largest eigenvalue of a PSD matrix by power iteration.
+
+    Deterministic start (ones + diag seed) so results are reproducible;
+    64 iterations is plenty for the step-size use here — FISTA only needs
+    an UPPER bound on L to converge, so we inflate by 1.01 at the call
+    site if desired.
+    """
+    n = G.shape[0]
+    if key is None:
+        v = jnp.ones((n,), jnp.float32) + jnp.diag(G) * 1e-3
+    else:
+        v = jax.random.normal(key, (n,), jnp.float32)
+    v = v / (jnp.linalg.norm(v) + 1e-30)
+
+    def body(_, v):
+        w = G @ v
+        return w / (jnp.linalg.norm(w) + 1e-30)
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    return jnp.maximum(v @ (G @ v), 1e-12)
+
+
+def dampen(G: jnp.ndarray, rel: float = 1e-6) -> jnp.ndarray:
+    """Add relative ridge ``rel * mean(diag)`` — used by the SparseGPT
+    baseline's Hessian inverse and as a safeguard for ill-conditioned
+    calibration Grams."""
+    d = jnp.mean(jnp.diag(G))
+    return G + (rel * d + 1e-12) * jnp.eye(G.shape[0], dtype=G.dtype)

@@ -1,0 +1,209 @@
+"""Fault-tolerant work-queue scheduler for layer-unit pruning.
+
+The paper's Sec. 3.4 parallelism: pruning units (decoder layers) are
+independent, so they form an embarrassingly-parallel work queue.  At
+cluster scale each worker is a pod; here workers are threads driving the
+same math.  Production behaviors implemented and tested:
+
+* per-unit atomic checkpointing — a completed unit's pruned weights land
+  in the checkpoint store (crc-verified); a restarted job skips them;
+* retry with backoff — a failed unit is re-queued up to ``max_retries``;
+* straggler mitigation — once the queue drains, units still running
+  longer than ``straggler_factor`` x the median completed duration are
+  speculatively re-dispatched; first completion wins (units are pure
+  functions of (layer, calibration), so duplicates are idempotent);
+* elasticity — workers pull from the queue; adding/removing workers
+  between units never invalidates state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.checkpoint import store
+from repro.utils import get_logger
+
+log = get_logger("scheduler")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    workers: int = 1
+    max_retries: int = 2
+    retry_backoff: float = 0.05        # seconds, doubled per retry
+    straggler_factor: float = 4.0      # x median duration before duplication
+    straggler_min_wait: float = 1.0    # don't duplicate before this many seconds
+    checkpoint_dir: Optional[str] = None
+
+
+@dataclasses.dataclass
+class UnitResult:
+    unit: str
+    payload: Any
+    seconds: float
+    attempts: int
+    worker: int
+
+
+class UnitFailed(RuntimeError):
+    pass
+
+
+class PruneScheduler:
+    """Runs ``run_unit(name) -> payload`` for every unit name."""
+
+    def __init__(self, units: Sequence[str], run_unit: Callable[[str], Any],
+                 cfg: SchedulerConfig = SchedulerConfig(),
+                 save_payload: Optional[Callable[[str, Any], Any]] = None,
+                 load_payload: Optional[Callable[[str], Any]] = None):
+        self.units = list(units)
+        self.run_unit = run_unit
+        self.cfg = cfg
+        self.save_payload = save_payload
+        self.load_payload = load_payload
+        self._results: Dict[str, UnitResult] = {}
+        self._attempts: Dict[str, int] = {u: 0 for u in self.units}
+        self._lock = threading.Lock()
+        self._queue: "queue.Queue[Optional[str]]" = queue.Queue()
+        self._inflight: Dict[str, float] = {}    # unit -> start time
+        self._failed: Dict[str, str] = {}
+        self._duplicated: set = set()
+
+    # -- persistence ---------------------------------------------------------
+    def _ckpt_name(self, unit: str) -> str:
+        return f"unit_{unit}"
+
+    def _try_resume(self, unit: str) -> bool:
+        cfg = self.cfg
+        if not cfg.checkpoint_dir or self.load_payload is None:
+            return False
+        if not store.exists(cfg.checkpoint_dir, self._ckpt_name(unit)):
+            return False
+        try:
+            payload = self.load_payload(unit)
+        except store.CheckpointCorrupt:
+            log.warning("unit %s checkpoint corrupt; re-running", unit)
+            return False
+        self._results[unit] = UnitResult(unit, payload, 0.0, 0, -1)
+        return True
+
+    def _persist(self, unit: str, payload: Any) -> None:
+        if self.cfg.checkpoint_dir and self.save_payload is not None:
+            self.save_payload(unit, payload)
+
+    # -- worker loop -----------------------------------------------------------
+    def _worker(self, wid: int) -> None:
+        while True:
+            try:
+                unit = self._queue.get(timeout=0.05)
+            except queue.Empty:
+                with self._lock:
+                    if self._all_done() or self._aborted():
+                        return
+                continue
+            if unit is None:
+                return
+            with self._lock:
+                if unit in self._results:          # duplicate lost the race
+                    self._queue.task_done()
+                    continue
+                self._inflight[unit] = time.perf_counter()
+                self._attempts[unit] += 1
+                attempt = self._attempts[unit]
+            t0 = time.perf_counter()
+            try:
+                payload = self.run_unit(unit)
+            except Exception as exc:  # noqa: BLE001 — worker boundary
+                with self._lock:
+                    self._inflight.pop(unit, None)
+                    if unit in self._results:
+                        self._queue.task_done()
+                        continue
+                    if attempt <= self.cfg.max_retries:
+                        log.warning("unit %s failed (attempt %d): %s — retrying",
+                                    unit, attempt, exc)
+                        delay = self.cfg.retry_backoff * (2 ** (attempt - 1))
+                        threading.Timer(delay, self._queue.put, args=(unit,)).start()
+                    else:
+                        log.error("unit %s failed permanently: %s", unit, exc)
+                        self._failed[unit] = repr(exc)
+                self._queue.task_done()
+                continue
+            dt = time.perf_counter() - t0
+            first = False
+            with self._lock:
+                self._inflight.pop(unit, None)
+                if unit not in self._results:      # first completion wins
+                    self._results[unit] = UnitResult(unit, payload, dt, attempt, wid)
+                    first = True
+            if first:
+                self._persist(unit, payload)
+            self._queue.task_done()
+
+    def _all_done(self) -> bool:
+        return len(self._results) + len(self._failed) >= len(self.units)
+
+    def _aborted(self) -> bool:
+        return bool(self._failed)
+
+    def _watch_stragglers(self) -> None:
+        """Speculatively re-dispatch slow units (duplicate once)."""
+        cfg = self.cfg
+        while True:
+            time.sleep(0.05)
+            with self._lock:
+                if self._all_done() or self._aborted():
+                    return
+                done = [r.seconds for r in self._results.values() if r.seconds > 0]
+                if not done or not self._inflight:
+                    continue
+                med = sorted(done)[len(done) // 2]
+                now = time.perf_counter()
+                for unit, started in list(self._inflight.items()):
+                    run = now - started
+                    if (unit not in self._duplicated and unit not in self._results
+                            and run > max(cfg.straggler_factor * med,
+                                          cfg.straggler_min_wait)):
+                        log.warning("unit %s running %.2fs (median %.2fs) — "
+                                    "speculative duplicate", unit, run, med)
+                        self._duplicated.add(unit)
+                        self._queue.put(unit)
+
+    # -- entry -----------------------------------------------------------------
+    def run(self) -> Dict[str, UnitResult]:
+        todo = []
+        for u in self.units:
+            if self._try_resume(u):
+                log.info("unit %s resumed from checkpoint", u)
+            else:
+                todo.append(u)
+        for u in todo:
+            self._queue.put(u)
+
+        threads = [threading.Thread(target=self._worker, args=(i,), daemon=True)
+                   for i in range(max(self.cfg.workers, 1))]
+        watcher = threading.Thread(target=self._watch_stragglers, daemon=True)
+        for t in threads:
+            t.start()
+        watcher.start()
+        # poll for completion instead of joining: a worker stuck inside an
+        # abandoned straggler must not block the job once its duplicate won
+        while True:
+            with self._lock:
+                if self._all_done():
+                    break
+            time.sleep(0.01)
+        if self._failed:
+            raise UnitFailed(f"units failed after retries: {self._failed}")
+        return dict(self._results)
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "completed": len(self._results),
+            "duplicated": sorted(self._duplicated),
+            "attempts": dict(self._attempts),
+        }

@@ -1,0 +1,237 @@
+"""Layer-wise pruning with intra-layer cumulative error correction.
+
+This module turns the per-operator pruner (core/pruner.py) into the
+paper's full pipeline (Sec. 3.1, Fig. 2):
+
+* each decoder layer is an independent **pruning unit** — its pruned
+  stream starts from the DENSE activation at the unit input, which is
+  exactly what makes units independent and layer-parallel (Sec. 3.4);
+* inside a unit, operators are pruned **sequentially in groups**
+  (peers like wq/wk/wv share an input); each group's Gram statistics
+  use X (dense-path input) and X* (input produced by the already-pruned
+  prefix of the unit), implementing Eq. (2);
+* ``error_correction``:
+    - "intra" (paper)   : X* relayed within the unit, dense across units
+    - "none"  (ablation): X* = X everywhere (Fig. 4a baseline)
+    - "full"  (beyond-paper): X* relayed ACROSS units too — potentially
+      more accurate, but serializes layers (noted in DESIGN.md)
+
+Memory: the relay keeps one unit's activations for the current
+calibration micro-batch only; Gram statistics are O(n^2) per operator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gram as gram_lib
+from repro.core import pruner as pruner_lib
+from repro.core.gram import GramStats
+from repro.core.pruner import PrunerConfig
+from repro.core.sparsity import SparsitySpec
+from repro.models.registry import ModelDef
+from repro.models.transformer import UnitSpec
+from repro.utils import get_logger
+from repro.utils.tree import get_path, set_path, tree_index
+
+log = get_logger("sequential")
+
+
+@dataclasses.dataclass(frozen=True)
+class SequentialConfig:
+    spec: SparsitySpec = SparsitySpec(ratio=0.5)
+    pruner: PrunerConfig = PrunerConfig()
+    method: str = "fista"            # fista | wanda | sparsegpt | magnitude
+    error_correction: str = "intra"  # intra | none | full
+
+
+@dataclasses.dataclass
+class OperatorReport:
+    unit: str
+    key: str
+    shape: Tuple[int, int]
+    error: float
+    rel_error: float
+    lam: float = 0.0
+    outer_iters: int = 0
+    fista_iters: int = 0
+    seconds: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# capture-key -> param-leaf resolution (handles stacked MoE experts)
+# ---------------------------------------------------------------------------
+def resolve_param(unit_params: Any, key: str) -> Tuple[str, Optional[int]]:
+    """Map a capture key to (param path within the unit, expert index)."""
+    if "/expert" in key:
+        prefix, rest = key.split("/expert", 1)
+        e, op = rest.split("/")
+        return f"{prefix}/w_{op}", int(e)
+    return key, None
+
+
+def get_weight(unit_params: Any, key: str) -> jnp.ndarray:
+    path, e = resolve_param(unit_params, key)
+    w = get_path(unit_params, path)
+    return w[e] if e is not None else w
+
+
+def set_weight(unit_params: Any, key: str, value: jnp.ndarray) -> Any:
+    path, e = resolve_param(unit_params, key)
+    if e is not None:
+        stacked = get_path(unit_params, path)
+        return set_path(unit_params, path, stacked.at[e].set(value.astype(stacked.dtype)))
+    old = get_path(unit_params, path)
+    return set_path(unit_params, path, value.astype(old.dtype))
+
+
+# ---------------------------------------------------------------------------
+# unit pruning
+# ---------------------------------------------------------------------------
+def _unit_params_of(params: Any, spec: UnitSpec) -> Any:
+    node = get_path(params, spec.param_path)
+    return tree_index(node, spec.layer_index) if spec.stacked else node
+
+
+def _write_unit_params(params: Any, spec: UnitSpec, new_unit: Any) -> Any:
+    if not spec.stacked:
+        return set_path(params, spec.param_path, new_unit)
+    stacked = get_path(params, spec.param_path)
+    updated = jax.tree_util.tree_map(
+        lambda s, n: s.at[spec.layer_index].set(n.astype(s.dtype)), stacked, new_unit)
+    return set_path(params, spec.param_path, updated)
+
+
+def _capture_forward(model: ModelDef, spec: UnitSpec):
+    """jitted (unit_params, state) -> (next_state, captures)."""
+
+    def fn(unit_params, state):
+        cap: Dict[str, jnp.ndarray] = {}
+        nxt = model.unit_apply(unit_params, spec.layer_index, state, cap)
+        return nxt, cap
+
+    return jax.jit(fn)
+
+
+def prune_unit(model: ModelDef, spec: UnitSpec, dense_unit: Any,
+               dense_states: Sequence[Dict], pruned_states: Sequence[Dict],
+               cfg: SequentialConfig
+               ) -> Tuple[Any, List[OperatorReport], List[Dict]]:
+    """Prune one unit.  Returns (pruned unit params, reports, pruned next
+    states) — dense next states are computed by the caller's relay.
+
+    ``dense_states[b]`` / ``pruned_states[b]`` are the unit-input states of
+    calibration micro-batch b on the dense / pruned paths.
+    """
+    fwd = _capture_forward(model, spec)
+    current = dense_unit  # progressively replaced with pruned weights
+    reports: List[OperatorReport] = []
+    # dense-path captures don't change while the unit is pruned: one pass
+    dense_caps = [fwd(dense_unit, s)[1] for s in dense_states]
+
+    for group in spec.groups:
+        # accumulate Gram statistics for every operator in the group
+        stats: Dict[str, GramStats] = {}
+        for b in range(len(dense_states)):
+            cap_d = dense_caps[b]
+            if cfg.error_correction == "none":
+                cap_p = cap_d
+            else:
+                _, cap_p = fwd(current, pruned_states[b])
+            for key in group:
+                xd, xp = cap_d[key], cap_p[key]
+                w = get_weight(dense_unit, key)          # (in, out) model layout
+                n = w.shape[0]
+                if key not in stats:
+                    stats[key] = gram_lib.init_stats(n)
+                wx = xd @ w                                # dense target W X
+                stats[key] = gram_lib.accumulate(stats[key], xd, xp, wx)
+
+        # prune each operator in the group against its statistics
+        for key in group:
+            w_model = get_weight(dense_unit, key)
+            w_paper = jnp.asarray(w_model, jnp.float32).T   # (out, in)
+            t0 = time.perf_counter()
+            if cfg.method == "fista":
+                res = pruner_lib.prune_operator(w_paper, stats[key], cfg.spec,
+                                                cfg.pruner)
+                new_w, err = res.weight, res.error
+                rep = OperatorReport(spec.name, key, tuple(w_paper.shape), err,
+                                     res.rel_error, res.lam, res.outer_iters,
+                                     res.fista_iters)
+            else:
+                new_w, err = pruner_lib.prune_with_method(
+                    cfg.method, w_paper, stats[key], cfg.spec, cfg.pruner)
+                wx_norm = float(np.sqrt(max(float(stats[key].h), 1e-30)))
+                rep = OperatorReport(spec.name, key, tuple(w_paper.shape), err,
+                                     err / max(wx_norm, 1e-30))
+            rep.seconds = time.perf_counter() - t0
+            reports.append(rep)
+            current = set_weight(current, key, new_w.T)
+
+    # relay: pruned next states through the fully-pruned unit
+    pruned_next = []
+    for b in range(len(pruned_states)):
+        nxt, _ = fwd(current, pruned_states[b])
+        pruned_next.append(nxt)
+    return current, reports, pruned_next
+
+
+# ---------------------------------------------------------------------------
+# whole-model pruning (the serial reference path; the scheduler distributes)
+# ---------------------------------------------------------------------------
+def prune_model(model: ModelDef, params: Any, calib_batches: Sequence[Dict],
+                cfg: SequentialConfig,
+                units: Optional[Sequence[UnitSpec]] = None,
+                progress: Optional[Callable[[str], None]] = None
+                ) -> Tuple[Any, List[OperatorReport]]:
+    """Prune every unit of ``params`` using the calibration batches."""
+    units = list(units if units is not None else model.units())
+    dense_states = [model.embed(params, b) for b in calib_batches]
+    pruned_states = [dict(s) for s in dense_states]
+    new_params = params
+    reports: List[OperatorReport] = []
+
+    for spec in units:
+        dense_unit = _unit_params_of(params, spec)
+        if cfg.error_correction == "full":
+            unit_in_pruned = pruned_states
+        else:  # paper: units are independent — pruned stream restarts at
+            unit_in_pruned = [dict(s) for s in dense_states]  # the dense input
+        pruned_unit, reps, pruned_next = prune_unit(
+            model, spec, dense_unit, dense_states, unit_in_pruned, cfg)
+        reports.extend(reps)
+        new_params = _write_unit_params(new_params, spec, pruned_unit)
+        # advance the dense relay (and post-unit hooks, e.g. whisper enc_norm)
+        fwd = _capture_forward(model, spec)
+        dense_states = [fwd(dense_unit, s)[0] for s in dense_states]
+        dense_states = [model.post_unit(params, spec.layer_index, s)
+                        for s in dense_states]
+        if cfg.error_correction == "full":
+            pruned_states = [model.post_unit(new_params, spec.layer_index, s)
+                             for s in pruned_next]
+        if progress is not None:
+            err = float(np.mean([r.rel_error for r in reps])) if reps else 0.0
+            progress(f"{spec.name}: mean rel err {err:.4f}")
+        log.info("unit %s pruned (%d ops)", spec.name, len(reps))
+
+    return new_params, reports
+
+
+def unit_output_error(model: ModelDef, spec: UnitSpec, dense_unit: Any,
+                      pruned_unit: Any, states: Sequence[Dict]) -> float:
+    """||unit_pruned(x) - unit_dense(x)||_F / ||unit_dense(x)||_F over batches
+    (used by the error-correction ablation, Fig. 4a analog)."""
+    fwd = _capture_forward(model, spec)
+    num, den = 0.0, 0.0
+    for s in states:
+        yd = fwd(dense_unit, s)[0]["x"]
+        yp = fwd(pruned_unit, s)[0]["x"]
+        num += float(jnp.sum((yp.astype(jnp.float32) - yd.astype(jnp.float32)) ** 2))
+        den += float(jnp.sum(yd.astype(jnp.float32) ** 2))
+    return float(np.sqrt(num / max(den, 1e-30)))

@@ -1,0 +1,167 @@
+"""Sparsity specs, the rounding step (paper Eq. 8), and measurement utils.
+
+``round(W, s% or n:m)`` corrects floating-point near-zeros from FISTA and
+enforces the EXACT target pattern:
+
+* unstructured s% : zero the s% entries with smallest |value| over the
+  whole matrix (exact count, deterministic tie-break by flat index);
+* n:m             : within every group of m consecutive entries of a row,
+  keep the n largest |value| (per the paper, zero the m-n smallest).
+
+All functions are jit-compatible and layout-agnostic (operate on the
+paper's (out, in) matrices).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsitySpec:
+    """Either unstructured (``ratio`` in [0,1)) or semi-structured n:m."""
+
+    kind: str = "unstructured"      # "unstructured" | "nm"
+    ratio: float = 0.5              # fraction ZEROED (unstructured)
+    n: int = 2                      # kept per group (nm)
+    m: int = 4                      # group size (nm)
+
+    @staticmethod
+    def parse(text: str) -> "SparsitySpec":
+        """"50%" / "0.5" -> unstructured; "2:4" -> semi-structured."""
+        text = text.strip()
+        mt = re.fullmatch(r"(\d+)\s*:\s*(\d+)", text)
+        if mt:
+            return SparsitySpec(kind="nm", n=int(mt.group(1)), m=int(mt.group(2)))
+        if text.endswith("%"):
+            return SparsitySpec(kind="unstructured", ratio=float(text[:-1]) / 100.0)
+        return SparsitySpec(kind="unstructured", ratio=float(text))
+
+    @property
+    def target_density(self) -> float:
+        return (1.0 - self.ratio) if self.kind == "unstructured" else self.n / self.m
+
+    def __str__(self) -> str:
+        if self.kind == "nm":
+            return f"{self.n}:{self.m}"
+        return f"{self.ratio:.0%}"
+
+
+# ---------------------------------------------------------------------------
+# rounding (Eq. 8)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("ratio",))
+def round_unstructured(w: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    """Zero the ``ratio`` fraction of entries with smallest |w| (exact count)."""
+    size = w.size
+    k = int(round(ratio * size))
+    if k <= 0:
+        return w
+    if k >= size:
+        return jnp.zeros_like(w)
+    flat = jnp.abs(w).reshape(-1)
+    order = jnp.argsort(flat, stable=True)      # ties: lower flat index zeroed first
+    keep = jnp.ones((size,), bool).at[order[:k]].set(False)
+    return jnp.where(keep.reshape(w.shape), w, 0).astype(w.dtype)
+
+
+def nm_rank(absw: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Within-group descending rank (0 = largest) with index tie-break.
+
+    absw: (..., groups, m) -> int32 ranks, same shape.  rank_i counts the
+    group members strictly larger, plus equal members with smaller index —
+    a total order, so exactly n entries have rank < n.
+    """
+    a_i = absw[..., :, None]       # (..., g, m, 1)
+    a_j = absw[..., None, :]       # (..., g, 1, m)
+    idx = jnp.arange(m)
+    tie = (a_j == a_i) & (idx[None, :] < idx[:, None])
+    bigger = (a_j > a_i) | tie
+    return jnp.sum(bigger, axis=-1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("n", "m"))
+def round_nm(w: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    """Keep the n largest-|value| entries of every length-m row group."""
+    rows, cols = w.shape
+    assert cols % m == 0, f"cols {cols} not divisible by group size {m}"
+    g = w.reshape(rows, cols // m, m)
+    rank = nm_rank(jnp.abs(g), m)
+    return jnp.where(rank < n, g, 0).reshape(rows, cols).astype(w.dtype)
+
+
+def round_to(w: jnp.ndarray, spec: SparsitySpec) -> jnp.ndarray:
+    """Dispatch of paper Eq. (8)."""
+    if spec.kind == "nm":
+        return round_nm(w, spec.n, spec.m)
+    return round_unstructured(w, spec.ratio)
+
+
+# ---------------------------------------------------------------------------
+# mask-constrained rounding (used by baselines that pick masks differently)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("ratio",))
+def mask_unstructured_by_score(score: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    """Boolean keep-mask zeroing the ``ratio`` fraction with smallest score."""
+    size = score.size
+    k = int(round(ratio * size))
+    if k <= 0:
+        return jnp.ones(score.shape, bool)
+    order = jnp.argsort(score.reshape(-1), stable=True)
+    return jnp.ones((size,), bool).at[order[:k]].set(False).reshape(score.shape)
+
+
+@partial(jax.jit, static_argnames=("ratio",))
+def mask_rowwise_by_score(score: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    """Per-ROW keep-mask (Wanda compares within each output row)."""
+    rows, cols = score.shape
+    k = int(round(ratio * cols))
+    if k <= 0:
+        return jnp.ones(score.shape, bool)
+    order = jnp.argsort(score, axis=1, stable=True)
+    mask = jnp.ones((rows, cols), bool)
+    return mask.at[jnp.arange(rows)[:, None], order[:, :k]].set(False)
+
+
+@partial(jax.jit, static_argnames=("n", "m"))
+def mask_nm_by_score(score: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    rows, cols = score.shape
+    g = score.reshape(rows, cols // m, m)
+    return (nm_rank(g, m) < n).reshape(rows, cols)
+
+
+def mask_by_score(score: jnp.ndarray, spec: SparsitySpec, rowwise: bool = False) -> jnp.ndarray:
+    if spec.kind == "nm":
+        return mask_nm_by_score(score, spec.n, spec.m)
+    if rowwise:
+        return mask_rowwise_by_score(score, spec.ratio)
+    return mask_unstructured_by_score(score, spec.ratio)
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+def density(w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((w != 0).astype(jnp.float32))
+
+
+def sparsity(w: jnp.ndarray) -> jnp.ndarray:
+    return 1.0 - density(w)
+
+
+def satisfies(w: jnp.ndarray, spec: SparsitySpec, tol: float = 1e-6) -> bool:
+    """Check a matrix satisfies the sparsity pattern (host-side, for tests)."""
+    import numpy as np
+
+    wn = np.asarray(w)
+    if spec.kind == "nm":
+        g = wn.reshape(wn.shape[0], -1, spec.m)
+        return bool(((g != 0).sum(axis=-1) <= spec.n).all())
+    want = spec.ratio
+    got = float((wn == 0).mean())
+    return got >= want - tol

@@ -1,0 +1,6 @@
+"""Data pipeline: synthetic corpus, byte tokenizer, calibration sampling."""
+from repro.data.corpus import CorpusConfig, MarkovCorpus, batch_to_model_inputs
+from repro.data.calibration import CalibConfig, calibration_batches
+
+__all__ = ["CorpusConfig", "MarkovCorpus", "batch_to_model_inputs",
+           "CalibConfig", "calibration_batches"]

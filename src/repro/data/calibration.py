@@ -1,0 +1,47 @@
+"""Calibration sampling for post-training pruning (paper Sec. 4.1).
+
+The paper draws 128 sequences of max-embedding-length tokens from the
+first shard of C4.  Here the C4 stand-in is the synthetic Markov corpus;
+the sampler yields a fixed, seeded list of calibration batches shaped
+for the pruning relay.  Batches are kept small (few long sequences) so
+the activation relay holds ONE layer's activations at a time, matching
+the paper's 40GB single-GPU footprint claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.corpus import MarkovCorpus, batch_to_model_inputs
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibConfig:
+    num_sequences: int = 128     # paper default
+    seq_len: int = 2048          # "max embedding length of the LLM"
+    batch_size: int = 8          # relay micro-batch (memory knob)
+    seed: int = 1234
+
+
+def calibration_batches(corpus: MarkovCorpus, cfg: CalibConfig,
+                        extras: Dict[str, np.ndarray] | None = None
+                        ) -> List[Dict[str, jnp.ndarray]]:
+    """List of model-input batches totalling ``num_sequences`` sequences."""
+    out: List[Dict[str, jnp.ndarray]] = []
+    it = corpus.batches(cfg.batch_size, cfg.seq_len, split="calib",
+                        start_step=cfg.seed)
+    done = 0
+    while done < cfg.num_sequences:
+        _, toks = next(it)
+        take = min(cfg.batch_size, cfg.num_sequences - done)
+        b = batch_to_model_inputs(toks[:take])
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        if extras:
+            for k, v in extras.items():
+                batch[k] = jnp.asarray(v[:take])
+        out.append(batch)
+        done += take
+    return out

@@ -1,0 +1,87 @@
+"""Synthetic corpus with learnable structure (C4 stand-in).
+
+The container has no datasets, so calibration/training/eval text is
+generated from a seeded sparse 2-gram Markov chain over the model's
+token vocabulary with Zipfian marginals.  The chain has real structure
+(per-state branching factor ``branch``), so a language model trained on
+it converges toward the chain entropy — giving the e2e pruning
+benchmarks a meaningful perplexity axis, and held-out splits a
+train/test distinction (disjoint seed streams).
+
+Tokens are drawn directly (no byte detour) so every architecture's
+vocab size is served; ``repro.data.tokenizer`` provides the byte-level
+path for real-text use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusConfig:
+    vocab: int
+    branch: int = 8            # out-degree of each chain state
+    zipf_a: float = 1.2        # Zipf exponent of target marginals
+    temperature: float = 0.7   # <1 sharpens transitions (lower entropy)
+    seed: int = 0
+
+
+class MarkovCorpus:
+    """Deterministic synthetic token stream."""
+
+    def __init__(self, cfg: CorpusConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        V, B = cfg.vocab, min(cfg.branch, cfg.vocab)
+        # Zipfian candidate pool: successors biased toward frequent tokens
+        ranks = np.arange(1, V + 1, dtype=np.float64)
+        zipf = 1.0 / ranks ** cfg.zipf_a
+        zipf /= zipf.sum()
+        self.succ = np.empty((V, B), np.int64)
+        self.prob = np.empty((V, B), np.float64)
+        for s in range(V):
+            # per-state successor set: mix of global-frequent + random tokens
+            cand = rng.choice(V, size=B, replace=False, p=zipf)
+            self.succ[s] = cand
+            logits = rng.normal(size=B) / cfg.temperature
+            p = np.exp(logits - logits.max())
+            self.prob[s] = p / p.sum()
+        # stationary-ish start distribution
+        self.start = zipf
+
+    @property
+    def entropy_per_token(self) -> float:
+        """Mean transition entropy in nats (ppl floor = exp of this)."""
+        h = -(self.prob * np.log(self.prob)).sum(axis=1)
+        return float(h.mean())
+
+    def sample(self, length: int, rng: np.random.Generator) -> np.ndarray:
+        out = np.empty((length,), np.int64)
+        s = rng.choice(self.cfg.vocab, p=self.start)
+        for t in range(length):
+            j = rng.choice(self.succ.shape[1], p=self.prob[s])
+            s = self.succ[s, j]
+            out[t] = s
+        return out
+
+    def batches(self, batch: int, seq: int, split: str = "train",
+                start_step: int = 0) -> Iterator[Tuple[int, np.ndarray]]:
+        """Infinite deterministic batch stream.  Each (step, tokens) is a
+        pure function of (seed, split, step) => checkpoint/resume replays
+        the exact stream from any cursor."""
+        split_off = {"train": 0, "valid": 1_000_003, "calib": 2_000_003}[split]
+        step = start_step
+        while True:
+            rng = np.random.default_rng(
+                (self.cfg.seed * 2654435761 + split_off + step) % (2 ** 63))
+            toks = np.stack([self.sample(seq + 1, rng) for _ in range(batch)])
+            yield step, toks.astype(np.int32)
+            step += 1
+
+
+def batch_to_model_inputs(tokens: np.ndarray) -> dict:
+    """(B, S+1) sampled tokens -> {"tokens": (B,S), "labels": (B,S)}."""
+    return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:].copy()}

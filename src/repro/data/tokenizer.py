@@ -1,0 +1,26 @@
+"""Byte-level tokenizer (vocab = 256 bytes + specials).
+
+Lossless on arbitrary UTF-8; used by the text-facing examples.  IDs:
+0 = PAD, 1 = BOS, 2 = EOS, byte b -> b + 3.
+"""
+from __future__ import annotations
+
+from typing import List
+
+PAD, BOS, EOS = 0, 1, 2
+OFFSET = 3
+VOCAB = 256 + OFFSET
+
+
+def encode(text: str, bos: bool = True, eos: bool = True) -> List[int]:
+    ids = [b + OFFSET for b in text.encode("utf-8")]
+    return ([BOS] if bos else []) + ids + ([EOS] if eos else [])
+
+
+def decode(ids) -> str:
+    data = bytes(i - OFFSET for i in ids if i >= OFFSET)
+    return data.decode("utf-8", errors="replace")
+
+
+def pad_to(ids: List[int], length: int) -> List[int]:
+    return (ids + [PAD] * length)[:length]

@@ -1,0 +1,6 @@
+"""Distribution layer: GSPMD sharding rules, row-parallel FISTA,
+pipeline parallelism over pods, int8 gradient compression."""
+from repro.distributed.sharding import (batch_specs, make_shardings,
+                                        param_specs, state_specs)
+
+__all__ = ["batch_specs", "make_shardings", "param_specs", "state_specs"]

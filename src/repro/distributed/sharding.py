@@ -1,0 +1,163 @@
+"""GSPMD sharding rules: DP x TP (x EP for MoE) across all families.
+
+Weights are model-layout (in, out).  Tensor-parallel convention (Megatron
+column->row pairing, collective-minimal):
+
+* first matmul of a block (wq/wk/wv, gate/up/fc1, wx/wy, in_proj) shards
+  its OUTPUT dim over "model"  -> activations become model-sharded;
+* second matmul (wo, down/fc2, out_proj) shards its INPUT dim over
+  "model" -> the products reduce over the model axis (one all-reduce per
+  block, inserted by GSPMD);
+* embeddings shard the vocab dim; logits reduce at the loss;
+* MoE experts shard the EXPERT dim over "model" (expert parallelism) —
+  the per-token top-k dispatch becomes an all-to-all;
+* vectors (norms, biases, A_log, conv kernels) replicate.
+
+The batch dim of every input shards over ("pod", "data") — the pod axis
+is an outer DP axis by default; pipeline parallelism over pods is the
+optional alternative in distributed/pipeline.py.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.utils.tree import tree_map_with_path
+
+# (regex on "/"-joined path, spec builder(ndim, dp_axes) -> PartitionSpec)
+# NOTE: order matters — first match wins.
+#
+# MoE layout note (§Perf iteration 1): sharding the EXPERT dim over
+# "model" (classic EP) forces GSPMD to all-gather the GLOBAL token set
+# onto every device before the ragged grouped-GEMM — measured ~650x flop
+# overcount and tens of GB of all-gather per layer on mixtral train_4k.
+# TP-WITHIN-EXPERT (shard each expert's hidden dim, experts replicated)
+# keeps tokens local: w_gate/w_up shard d_ff (col), w_down shards d_ff
+# (row), one all-reduce per FFN — same collective shape as the dense
+# blocks.  Tokens stay data-sharded end to end.
+_RULES: Sequence[Tuple[str, str]] = (
+    (r".*/w_(gate|up)$", "expert_col"),
+    (r".*/w_down$", "expert_row"),
+    (r".*/router$", "replicate"),
+    # block-entry matmuls: column parallel (shard out)
+    (r".*/(wq|wk|wv|gate|up|fc1|wx|wy|wa|wi|in_proj)$", "col"),
+    # block-exit matmuls: row parallel (shard in)
+    (r".*/(wo|down|fc2|out_proj)$", "row"),
+    # embeddings: shard vocab rows
+    (r".*(^|/)embed$", "vocab"),
+    (r".*head$", "col"),
+    (r".*pos_embed$", "replicate"),
+)
+
+
+def _spec_for(kind: str, ndim: int, stacked: bool) -> P:
+    """Translate a rule kind to a PartitionSpec, accounting for a leading
+    layer-stack dim."""
+    lead: Tuple = (None,) if stacked else ()
+    if kind == "col":      # (in, out) -> shard out
+        return P(*lead, None, "model")
+    if kind == "row":      # (in, out) -> shard in
+        return P(*lead, "model", None)
+    if kind == "vocab":
+        return P(*lead, "model", None)
+    if kind == "expert_col":   # (E, d, ff): shard ff (TP within expert)
+        if ndim == 4:          # stacked layers: (L, E, d, ff)
+            return P(None, None, None, "model")
+        return P(None, None, "model")
+    if kind == "expert_row":   # (E, ff, d): shard ff
+        if ndim == 4:
+            return P(None, None, "model", None)
+        return P(None, "model", None)
+    return P()             # replicate
+
+
+def param_specs(params: Any) -> Any:
+    """Pytree of PartitionSpec matching ``params`` via the path rules.
+
+    Detects layer-stacked leaves by path prefix ("layers"/"enc_layers"/
+    "dec_layers" subtrees carry a leading L dim unless the path has an
+    explicit integer segment, e.g. rglru's "layers/3/...")."""
+
+    def visit(path: str, leaf: Any) -> P:
+        stacked = bool(re.match(r".*(^|/)(layers|enc_layers|dec_layers)/", path + "/")) \
+            and not re.search(r"/(\d+)/", path)
+        ndim = getattr(leaf, "ndim", 0)
+        for pattern, kind in _RULES:
+            if re.fullmatch(pattern, path):
+                spec = _spec_for(kind, ndim, stacked)
+                if len([s for s in spec]) > ndim:
+                    return P()
+                return spec
+        return P()
+
+    return tree_map_with_path(visit, params)
+
+
+def batch_specs(batch: Any, dp_axes: Tuple[str, ...] = ("data",)) -> Any:
+    """Shard the leading batch dim of every input over the DP axes."""
+    return jax.tree_util.tree_map(lambda x: P(dp_axes), batch)
+
+
+def state_specs(serve_state: Any, dp_axes: Tuple[str, ...] = ("data",),
+                batch_axis_index: int = 1, shard_cache_seq: bool = True) -> Any:
+    """Serving state: layer-stacked caches (L, B, ...) shard B over DP.
+
+    ``shard_cache_seq`` (§Perf iteration 4, flash-decode style context
+    parallelism): 5-D KV caches (L, B, S_cache, H, hd) additionally shard
+    the SEQUENCE dim over "model".  Decode attention contracts over the
+    cache length, so each model shard scores its local KV chunk and the
+    softmax/PV combine reduces over the axis — the per-step collectives
+    become O(B*heads) instead of O(cache), and per-device cache memory
+    drops by the TP degree.  (With head counts that don't divide the
+    model axis — MQA/GQA small-kv archs — head-sharding is impossible,
+    making this THE way to TP a decode cache.)
+    """
+
+    def visit(path: str, leaf: Any) -> P:
+        nd = getattr(leaf, "ndim", 0)
+        if nd >= 2:
+            spec: list = [None] * nd
+            spec[batch_axis_index] = dp_axes
+            if shard_cache_seq and nd == 5:
+                spec[2] = "model"      # (L, B, S_cache, H, hd)
+            return P(*spec)
+        return P()
+
+    return tree_map_with_path(visit, serve_state)
+
+
+def _fit_spec(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Drop axis assignments whose mesh size doesn't divide the dim
+    (e.g. odd vocab sizes like whisper's 51865 -> replicated embed; at
+    real scale one would pad the vocab to a multiple of the TP degree)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(entry if size and shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def make_shardings(mesh: Mesh, specs: Any, shapes: Any = None) -> Any:
+    """PartitionSpec tree -> NamedSharding tree; with ``shapes`` (matching
+    tree of arrays/ShapeDtypeStructs) non-divisible dims are replicated."""
+    if shapes is None:
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P))
+    return jax.tree_util.tree_map(
+        lambda s, x: NamedSharding(mesh, _fit_spec(mesh, s, x.shape)),
+        specs, shapes, is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(pspecs: Any) -> Any:
+    """Adam moments shard exactly like their parameters."""
+    return pspecs

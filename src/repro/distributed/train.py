@@ -1,0 +1,82 @@
+"""Sharded training/serving step builders (jit + NamedSharding).
+
+GSPMD does the heavy lifting: given the param/batch PartitionSpecs from
+distributed/sharding.py, ``jax.jit(..., in_shardings, out_shardings)``
+lowers one SPMD program per mesh with all collectives inserted (DP grad
+all-reduce as reduce-scatter+all-gather where profitable, TP block
+all-reduces, MoE all-to-alls).  These builders are shared by the real
+trainer and the multi-pod dry-run — the dry-run just stops after
+``.lower().compile()``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shard_rules
+from repro.models.registry import ModelDef
+from repro.train import optim
+
+
+def dp_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_train_step(model: ModelDef, mesh: Mesh,
+                    ocfg: optim.AdamWConfig = optim.AdamWConfig(),
+                    donate: bool = True):
+    """Returns (train_step, shardings) where train_step(params, opt, batch)
+    -> (params, opt, metrics) is a fully sharded jit."""
+    dp = dp_axes_of(mesh)
+
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            l, m = model.loss(p, batch)
+            return l, m
+
+        (l, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params2, opt2, om = optim.update(ocfg, grads, opt_state, params)
+        return params2, opt2, {**metrics, **om, "loss": l}
+
+    def shardings_for(params, opt_state, batch):
+        pspec = shard_rules.param_specs(params)
+        psh = shard_rules.make_shardings(mesh, pspec, params)
+        osh = optim.AdamWState(step=NamedSharding(mesh, P()),
+                               mu=psh, nu=jax.tree_util.tree_map(lambda s: s, psh))
+        bsh = shard_rules.make_shardings(mesh, shard_rules.batch_specs(batch, dp), batch)
+        return psh, osh, bsh
+
+    def build(params, opt_state, batch):
+        psh, osh, bsh = shardings_for(params, opt_state, batch)
+        msh = NamedSharding(mesh, P())
+        fn = jax.jit(step,
+                     in_shardings=(psh, osh, bsh),
+                     out_shardings=(psh, osh, None),
+                     donate_argnums=(0, 1) if donate else ())
+        return fn, (psh, osh, bsh)
+
+    return build
+
+
+def make_serve_step(model: ModelDef, mesh: Mesh):
+    """Sharded one-token decode: batch over DP axes, caches batch-sharded."""
+    dp = dp_axes_of(mesh)
+
+    def step(params, state, token, pos):
+        return model.serve_step(params, state, token, pos)
+
+    def build(params, state, token):
+        psh = shard_rules.make_shardings(mesh, shard_rules.param_specs(params), params)
+        # layer-stacked caches are (L, B, ...); rglru keeps per-layer (B, ...)
+        bidx = 0 if model.cfg.family == "hybrid" else 1
+        ssh = shard_rules.make_shardings(
+            mesh, shard_rules.state_specs(state, dp, batch_axis_index=bidx), state)
+        tsh = NamedSharding(mesh, P(dp))
+        fn = jax.jit(step, in_shardings=(psh, ssh, tsh, None),
+                     out_shardings=(None, ssh))
+        return fn, (psh, ssh, tsh)
+
+    return build

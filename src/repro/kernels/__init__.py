@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for FISTAPruner's compute hot-spots.
+
+* fista_step : fused FISTA iteration (matmul + gradient + shrinkage)
+* round24    : 2:4 semi-structured rounding (Eq. 8)
+* spmm24     : packed-2:4 sparse matmul for memory-bound decode
+
+Each kernel ships with a jnp oracle in ``ref.py``; ``ops.py`` holds the
+public jit'd wrappers (interpret=True off-TPU).
+"""

@@ -1,0 +1,81 @@
+"""Fused FISTA iteration kernel: shrink(Y - (1/L)(Y G - B), lam/L).
+
+One VMEM pass per output tile: the (m,n)x(n,n) matmul runs on the MXU
+with a k-innermost accumulation grid, and the gradient step + soft
+shrinkage epilogue happens in registers before the tile is written back.
+This removes the extra HBM round-trips of the unfused form (write YG,
+read YG & B, write P, read P for shrink): per iteration the unfused
+chain moves ~5 m*n fp32 tensors of traffic, the fused kernel moves 2.
+
+Tiling: grid (m/bm, n/bn, n/bk), k innermost.  VMEM per step =
+    bm*bk (Y k-slab) + bk*bn (G) + 3 * bm*bn (B, Y elementwise, acc)
+fp32; the default 256x256x512 tiles use ~1.4 MB, comfortably inside the
+~16 MB/core v5e VMEM with double buffering.  All dims 128-aligned for
+the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ymat_ref, g_ref, b_ref, ytile_ref, scal_ref, out_ref, acc_ref):
+    """Grid (i, j, k): acc[i,j] += Y[i,k] @ G[k,j]; epilogue at k = nk-1."""
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(ymat_ref[...], g_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        inv_l = scal_ref[0, 0]
+        thresh = scal_ref[0, 1]
+        grad = acc_ref[...] - b_ref[...]
+        p = ytile_ref[...] - inv_l * grad
+        out_ref[...] = jnp.sign(p) * jnp.maximum(jnp.abs(p) - thresh, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def fista_prox_step(y: jnp.ndarray, G: jnp.ndarray, B: jnp.ndarray,
+                    inv_l, thresh, *, bm: int = 256, bn: int = 256,
+                    bk: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """Pallas FISTA step for fp32 (m, n) x (n, n).  Pads to tile multiples.
+
+    Zero padding is exact: padded Y/G rows contribute 0 to the matmul and
+    shrink(0 - inv_l*(0 - 0)) = 0 in the padded output region.
+    """
+    m, n = y.shape
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, n)
+    pm, pn, pk = -m % bm_, -n % bn_, -n % bk_
+    yp = jnp.pad(y.astype(jnp.float32), ((0, pm), (0, max(pn, pk))))
+    gp = jnp.pad(G.astype(jnp.float32), ((0, pk), (0, pn)))
+    bp = jnp.pad(B.astype(jnp.float32), ((0, pm), (0, pn)))
+    M, N, K = m + pm, n + pn, n + pk
+    scal = jnp.stack([jnp.asarray(inv_l, jnp.float32),
+                      jnp.asarray(thresh, jnp.float32)]).reshape(1, 2)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(M // bm_, N // bn_, K // bk_),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),   # Y (matmul slab)
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),   # G
+            pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),   # B
+            pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),   # Y (elementwise)
+            pl.BlockSpec((1, 2), lambda i, j, k: (0, 0)),       # scalars
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(yp[:, :K], gp, bp, yp[:, :N], scal)
+    return out[:m, :n]

@@ -1,0 +1,115 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) every kernel runs in ``interpret=True`` mode —
+the kernel body executes as Python/jnp for correctness validation.  On a
+TPU backend the same call sites compile to Mosaic.  Small problems fall
+back to the jnp oracle, where kernel launch overhead would dominate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fista_step as _fista_step
+from repro.kernels import ref
+from repro.kernels import round24 as _round24
+from repro.kernels import spmm24 as _spmm24
+
+
+@functools.cache
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+_MIN_PALLAS_DIM = 128  # below this, use the jnp oracle
+
+
+def fista_prox_step(y: jnp.ndarray, G: jnp.ndarray, B: jnp.ndarray,
+                    inv_l, thresh) -> jnp.ndarray:
+    m, n = y.shape
+    if min(m, n) < _MIN_PALLAS_DIM:
+        return ref.fista_prox_step(y, G, B, inv_l, thresh)
+    return _fista_step.fista_prox_step(y, G, B, inv_l, thresh,
+                                       interpret=_interpret())
+
+
+def round24(w: jnp.ndarray) -> jnp.ndarray:
+    m, n = w.shape
+    if m < 8 or n < 32:
+        return ref.round24(w)
+    return _round24.round24(w, interpret=_interpret())
+
+
+def spmm24(x: jnp.ndarray, vals: jnp.ndarray, meta: jnp.ndarray, n: int) -> jnp.ndarray:
+    if vals.shape[0] < _MIN_PALLAS_DIM or n < 2 * _MIN_PALLAS_DIM:
+        return ref.spmm24(x, vals, meta, n)
+    return _spmm24.spmm24(x, vals, meta, n, interpret=_interpret())
+
+
+pack24 = ref.pack24
+unpack24 = ref.unpack24
+
+
+# ---------------------------------------------------------------------------
+# flash attention: Pallas forward + analytic XLA backward (custom_vjp)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_mha(q, k, v, causal: bool = True, window: int = 0):
+    """Flash attention, (B, Hq, S, D) x (B, Hkv, S, D) -> (B, Hq, S, D).
+
+    Forward streams K/V through VMEM (HBM traffic = Q+K+V+O, no S^2
+    tensors).  Backward uses the standard analytic attention gradient in
+    plain XLA — scores materialize ONCE in bwd instead of 3x
+    (fwd + bwd + remat-recompute) with the unfused reference.
+    """
+    return _flash_fwd_impl(q, k, v, causal, window)
+
+
+def _flash_fwd_impl(q, k, v, causal, window):
+    from repro.kernels import flash_attention as fa
+    S = q.shape[2]
+    if S < 128:
+        return ref.flash_attention(q, k, v, causal, window)
+    bq = bk = min(512, S)
+    return fa.flash_attention(q, k, v, causal=causal, window=int(window or 0),
+                              bq=bq, bk=bk, interpret=_interpret())
+
+
+def _flash_fwd(q, k, v, causal, window):
+    return _flash_fwd_impl(q, k, v, causal, window), (q, k, v)
+
+
+def _flash_bwd(causal, window, res, do):
+    import numpy as np
+    q, k, v = res
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) / np.sqrt(D)
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= cols <= rows
+    if window:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", dof, vf)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True)) / np.sqrt(D)
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, kf)
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, qf)
+    # fold repeated-KV-head grads back onto the Hkv heads
+    dk = dk.reshape(B, Hkv, g, S, D).sum(axis=2)
+    dv = dv.reshape(B, Hkv, g, S, D).sum(axis=2)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_mha.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+These are the *definitions*; kernels must match them bit-for-bit up to
+accumulation order.  They are also the CPU fallback for small problems.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import nm_rank
+
+
+def fista_prox_step(y: jnp.ndarray, G: jnp.ndarray, B: jnp.ndarray,
+                    inv_l, thresh) -> jnp.ndarray:
+    """shrink(Y - inv_l * (Y @ G - B), thresh)  — paper (5a)+(5b) fused."""
+    p = y - inv_l * (y @ G - B)
+    return jnp.sign(p) * jnp.maximum(jnp.abs(p) - thresh, 0.0)
+
+
+def round24(w: jnp.ndarray) -> jnp.ndarray:
+    """Keep the 2 largest-|value| entries of every 4-group (row-wise)."""
+    rows, cols = w.shape
+    g = w.reshape(rows, cols // 4, 4)
+    rank = nm_rank(jnp.abs(g), 4)
+    return jnp.where(rank < 2, g, 0).reshape(rows, cols)
+
+
+def pack24(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pack an (exactly-)2:4 matrix into (vals (m, n/2), meta (m, n/4) uint8).
+
+    Per 4-group the two surviving entries are stored in position order in
+    ``vals``; ``meta`` packs both within-group positions into one byte
+    (``pos0 | pos1 << 2``).  Storage per group: 2 bf16 + 1 uint8 = 5 bytes
+    vs 8 bytes dense bf16 => 0.625x.  Groups with fewer than 2 nonzeros
+    are padded with zero values (meta picks unused slots), so
+    ``pack24(round24(w))`` is always well-formed.
+    """
+    m, n = w.shape
+    g = w.reshape(m, n // 4, 4)
+    nz = g != 0
+    # order positions: nonzeros first (by position), then zeros (by position)
+    pos = jnp.arange(4)[None, None, :]
+    key = jnp.where(nz, pos, pos + 4)            # nonzeros sort before zeros
+    order = jnp.argsort(key, axis=-1)            # (m, n/4, 4)
+    first2 = order[..., :2]                      # positions of the 2 kept
+    vals = jnp.take_along_axis(g, first2, axis=-1)           # (m, n/4, 2)
+    meta = (first2[..., 0] | (first2[..., 1] << 2)).astype(jnp.uint8)
+    return vals.reshape(m, n // 2), meta
+
+
+def unpack24(vals: jnp.ndarray, meta: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of pack24 -> dense (m, n)."""
+    m = vals.shape[0]
+    v = vals.reshape(m, n // 4, 2)
+    mi = meta.astype(jnp.int32)
+    i = jnp.stack([mi & 3, (mi >> 2) & 3], axis=-1)          # (m, n/4, 2)
+    out = jnp.zeros((m, n // 4, 4), vals.dtype)
+    out = out.at[jnp.arange(m)[:, None, None], jnp.arange(n // 4)[None, :, None], i].add(v)
+    return out.reshape(m, n)
+
+
+def spmm24(x: jnp.ndarray, vals: jnp.ndarray, meta: jnp.ndarray, n: int) -> jnp.ndarray:
+    """x (B, n) @ W^T where W (m, n) is 2:4-packed -> (B, m)."""
+    w = unpack24(vals, meta, n)
+    return x @ w.T
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0):
+    """Reference attention in (B, H, S, D) layout with GQA head mapping."""
+    import numpy as np
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / np.sqrt(D)
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= cols <= rows
+    if window:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,61 @@
+"""Pallas 2:4 rounding kernel (paper Eq. 8 for n:m = 2:4).
+
+Keeps the 2 largest-|value| entries of every 4 consecutive entries of a
+row.  The group members are accessed as four strided lane slices
+``x[:, g::4]`` (Mosaic-supported strided vector loads, no gathers), the
+within-group total-order rank is computed with six pairwise compares,
+and survivors are written back with strided stores.  Pure VPU work —
+one read + one write of the tile, so the kernel is exactly
+bandwidth-bound at 2 * bytes(W).
+
+Tie-break matches ``core.sparsity.nm_rank``: equal magnitudes keep the
+lower position, so kernel == oracle bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, out_ref):
+    a = [x_ref[:, g::4] for g in range(4)]          # 4 x (bm, bn/4)
+    mag = [jnp.abs(v) for v in a]
+    for g in range(4):
+        # rank = #{g': |a_g'| > |a_g|  or  (== and g' < g)}
+        rank = jnp.zeros_like(mag[g], jnp.int32)
+        for gp in range(4):
+            if gp == g:
+                continue
+            bigger = mag[gp] > mag[g]
+            if gp < g:
+                bigger = bigger | (mag[gp] == mag[g])
+            rank += bigger.astype(jnp.int32)
+        out_ref[:, g::4] = jnp.where(rank < 2, a[g], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def round24(w: jnp.ndarray, *, bm: int = 256, bn: int = 2048,
+            interpret: bool = False) -> jnp.ndarray:
+    """2:4 rounding of (m, n) with n % 4 == 0.  Pads rows/cols to tiles;
+    column padding is in whole groups of 4 zeros (rank of a zero group is
+    positional, output stays 0), so padding is exact."""
+    m, n = w.shape
+    assert n % 4 == 0, f"n={n} must be a multiple of 4"
+    bm_, bn_ = min(bm, m), min(bn, n)
+    bn_ -= bn_ % 4
+    pm, pn = -m % bm_, -n % bn_
+    wp = jnp.pad(w, ((0, pm), (0, pn)))
+    M, N = m + pm, n + pn
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(M // bm_, N // bn_),
+        in_specs=[pl.BlockSpec((bm_, bn_), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), w.dtype),
+        interpret=interpret,
+    )(wp)
+    return out[:m, :n]

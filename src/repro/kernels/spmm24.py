@@ -1,0 +1,91 @@
+"""Pallas packed-2:4 sparse matmul: y = x @ W^T with W stored compressed.
+
+TPU adaptation of the paper's 2:4 motivation (DESIGN.md §2): TPUs have no
+sparse MXU, so the win is **HBM bandwidth** in the memory-bound decode
+GEMV.  Storage per 4-group: 2 bf16 values + 2 uint8 position ids =
+5 bytes vs 8 bytes dense bf16 => 0.625x weight traffic, the roofline
+bound for batch-1 decode.
+
+The kernel never gathers: the dense (bm, bk) weight tile is rebuilt in
+VMEM from the packed slabs with iota-compares —
+
+    w[:, 4q+g] = v0[:, q] * (i0[:, q]==g) + v1[:, q] * (i1[:, q]==g)
+
+(strided vector selects), then hits the MXU against the activation tile.
+Grid (m/bm, n/bk) with k innermost for accumulation; x is small (decode
+batch) and stays resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, vals_ref, meta_ref, out_ref, acc_ref):
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    vals = vals_ref[...]                      # (bm, bk/2)
+    meta = meta_ref[...].astype(jnp.int32)    # (bm, bk/4): pos0 | pos1<<2
+    v0, v1 = vals[:, 0::2], vals[:, 1::2]     # (bm, bk/4) slot values
+    i0, i1 = meta & 3, (meta >> 2) & 3
+    bm = vals.shape[0]
+    bk = vals.shape[1] * 2
+    w = jnp.zeros((bm, bk), vals.dtype)
+    for g in range(4):
+        wg = v0 * (i0 == g).astype(vals.dtype) + v1 * (i1 == g).astype(vals.dtype)
+        w = w.at[:, g::4].set(wg)             # strided store (lane select)
+    # (B, bk) @ (bk, bm): contract x lanes against the rebuilt tile
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "bm", "bk", "interpret"))
+def spmm24(x: jnp.ndarray, vals: jnp.ndarray, meta: jnp.ndarray, n: int, *,
+           bm: int = 256, bk: int = 1024, interpret: bool = False) -> jnp.ndarray:
+    """x (B, n) times packed-2:4 W^T -> (B, m).
+
+    ``vals`` (m, n/2), ``meta`` (m, n/4) uint8 from ``ref.pack24``.  B is
+    the decode batch (kept whole in VMEM — decode batches are small).
+    Pads m and n to tile multiples; padded vals are 0 => contribute
+    nothing.
+    """
+    Bsz, n_in = x.shape
+    assert n_in == n
+    m = vals.shape[0]
+    bm_ = min(bm, m)
+    bk_ = min(bk, n)
+    bk_ -= bk_ % 8  # keep /2 and /4 slabs lane-aligned
+    pm, pk = -m % bm_, -n % bk_
+    vp = jnp.pad(vals, ((0, pm), (0, pk // 2)))
+    mp = jnp.pad(meta, ((0, pm), (0, pk // 4)))
+    xp = jnp.pad(x, ((0, 0), (0, pk)))
+    M, K = m + pm, n + pk
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(M // bm_, K // bk_),
+        in_specs=[
+            pl.BlockSpec((Bsz, bk_), lambda i, k: (0, k)),        # x
+            pl.BlockSpec((bm_, bk_ // 2), lambda i, k: (i, k)),   # vals
+            pl.BlockSpec((bm_, bk_ // 4), lambda i, k: (i, k)),   # meta
+        ],
+        out_specs=pl.BlockSpec((Bsz, bm_), lambda i, k: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, M), x.dtype),
+        scratch_shapes=[pltpu.VMEM((Bsz, bm_), jnp.float32)],
+        interpret=interpret,
+    )(xp, vp, mp)
+    return out[:, :m]

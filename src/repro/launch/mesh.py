@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before calling.
+
+Axis roles (DESIGN.md §5):
+    pod   — outer data-parallel axis (or pipeline stages with --pipeline)
+    data  — within-pod data parallelism (+ layer-unit queue for pruning)
+    model — tensor/expert parallelism (+ row-parallel FISTA)
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices: int, multi_pod: bool = False):
+    """Scaled-down mesh with the same axis names (tests / CI)."""
+    if multi_pod:
+        assert devices % 2 == 0
+        rest = devices // 2
+        model = 2
+        while rest % (model * 2) == 0 and model < rest // model:
+            model *= 2
+        return jax.make_mesh((2, rest // model, model), ("pod", "data", "model"))
+    model = 2
+    while devices % (model * 2) == 0 and model < devices // model:
+        model *= 2
+    return jax.make_mesh((devices // model, model), ("data", "model"))

@@ -1,0 +1,136 @@
+"""Roofline analysis over the dry-run artifacts.
+
+Three terms per (arch x shape), TPU v5e constants:
+
+    compute    = flops_per_device / 197e12           [s]
+    memory     = bytes_per_device / 819e9            [s]
+    collective = collective_bytes_per_device / 50e9  [s]
+
+Record sources (see launch/dryrun.py):
+
+* ``--dir``   : scan-mode records — authoritative for per-device MEMORY
+  (memory_analysis of the production lowering), but XLA cost analysis
+  counts scan bodies once, so flops/bytes/collectives are ~L too small;
+* ``--extra`` : depth-extrapolation records — authoritative for FLOPs,
+  bytes-accessed and collective bytes.
+
+The table merges them (costs from extra, memory from dir).  For MoE
+archs the recorded ``moe_flops_deflator`` divides the flops term — XLA
+charges ragged_dot as dense over ALL experts while each row only visits
+top-k.  "bytes accessed" counts every HLO op's operands (upper bound on
+HBM traffic, ignores fusion reuse); it is the standard first-order proxy
+and is consistent across cells.  The dominant term is the bottleneck the
+§Perf loop iterates on; MODEL_FLOPS / HLO_FLOPS flags remat/redundancy
+waste; roofline fraction = useful model flops per chip / (bound * peak).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip (v5e)
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_records(dir_: str, mesh: str = "single") -> Dict[str, Dict]:
+    recs = {}
+    for path in sorted(glob.glob(os.path.join(dir_, f"{mesh}__*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        recs[f"{r['arch']}__{r['shape']}"] = r
+    return recs
+
+
+def merge(scan_recs: Dict[str, Dict], extrap_recs: Optional[Dict[str, Dict]]
+          ) -> List[Dict]:
+    out = []
+    for key, r in scan_recs.items():
+        if extrap_recs and key in extrap_recs and not extrap_recs[key].get("skipped"):
+            e = extrap_recs[key]
+            r = {**r,
+                 "flops_per_device": e["flops_per_device"],
+                 "bytes_per_device": e["bytes_per_device"],
+                 "collectives": e["collectives"],
+                 "moe_flops_deflator": e.get("moe_flops_deflator", 1.0),
+                 "cost_method": e.get("method", "extrapolated")}
+        out.append(r)
+    return out
+
+
+def analyze(rec: Dict[str, Any]) -> Dict[str, Any]:
+    if rec.get("skipped"):
+        return {**rec, "dominant": "—"}
+    defl = rec.get("moe_flops_deflator", 1.0) or 1.0
+    flops = rec["flops_per_device"] / defl
+    compute = flops / PEAK_FLOPS
+    memory = rec["bytes_per_device"] / HBM_BW
+    coll = rec["collectives"]["total_bytes"] / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = rec["model_flops_global"] / rec["chips"]
+    useful = mf / max(flops, 1.0)
+    frac = mf / max(bound * PEAK_FLOPS, 1e-30)
+    return {**rec, "compute_s": compute, "memory_s": memory,
+            "collective_s": coll, "dominant": dominant,
+            "useful_flops_ratio": useful, "roofline_fraction": frac}
+
+
+def _fmt(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x*1e6:.1f}µs"
+    if x < 0.1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.3f}s"
+
+
+def markdown_table(recs: List[Dict[str, Any]]) -> str:
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "mem/dev GB | useful-FLOPs | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    key = lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]))
+    for r in sorted(recs, key=key):
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — |")
+            continue
+        a = analyze(r)
+        mem_gb = a.get("peak_bytes", 0) / 1e9
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {_fmt(a['compute_s'])} | "
+            f"{_fmt(a['memory_s'])} | {_fmt(a['collective_s'])} | "
+            f"**{a['dominant']}** | {mem_gb:.2f} | "
+            f"{a['useful_flops_ratio']:.2f} | {a['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--extra", default="experiments/dryrun_extrap",
+                    help="depth-extrapolation records (accurate costs)")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default=None, help="write markdown here")
+    args = ap.parse_args()
+    scan = load_records(args.dir, args.mesh)
+    extra = load_records(args.extra, args.mesh) if args.extra and \
+        os.path.isdir(args.extra) else None
+    recs = merge(scan, extra)
+    if not recs:
+        raise SystemExit(f"no dry-run records in {args.dir} for mesh={args.mesh}")
+    table = markdown_table(recs)
+    print(table)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(table + "\n")
+
+
+if __name__ == "__main__":
+    main()

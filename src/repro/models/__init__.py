@@ -1,0 +1,1 @@
+"""Model zoo: shared layers + one module per architecture family."""

@@ -1,0 +1,249 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+Per the assignment the conv/mel frontend is a STUB: the model consumes
+precomputed frame embeddings (B, enc_seq, D) — ``batch["frames"]`` —
+with sinusoidal positions already added.  Encoder layers are
+bidirectional (LayerNorm + GELU MLP); decoder layers add causal
+self-attention with learned positions and cross-attention to the encoder
+output.  Head is tied to the decoder token embedding (Whisper).
+
+Pruning units: enc_layers encoder units followed by dec_layers decoder
+units.  Cross-attention W_k/W_v consume the (pruned) encoder output —
+the intra-layer error-correction relay handles this naturally because
+the encoder units run before any decoder unit and the relay state keeps
+the evolving ``enc`` tensor (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import (Captures, Params, cross_entropy, dense,
+                                 dense_init, dtype_of, embed_init, mha,
+                                 mha_decode, mlp, mlp_init, norm_apply,
+                                 norm_init)
+from repro.models.transformer import UnitSpec
+from repro.utils import tree as tree_lib
+
+
+def enc_layer_init(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": norm_init(cfg, cfg.d_model), "attn": common.attn_init(cfg, k1),
+            "ln2": norm_init(cfg, cfg.d_model), "mlp": mlp_init(cfg, k2)}
+
+
+def dec_layer_init(cfg: ModelConfig, key) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": norm_init(cfg, cfg.d_model), "self": common.attn_init(cfg, k1),
+            "lnx": norm_init(cfg, cfg.d_model), "cross": common.attn_init(cfg, k2),
+            "ln2": norm_init(cfg, cfg.d_model), "mlp": mlp_init(cfg, k3)}
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    e = cfg.encdec
+    ks = jax.random.split(key, e.enc_layers + e.dec_layers + 3)
+    return {
+        "embed": embed_init(ks[-1], cfg.vocab, cfg.d_model, dtype_of(cfg.param_dtype)),
+        "pos_embed": embed_init(ks[-2], cfg.max_seq, cfg.d_model, dtype_of(cfg.param_dtype)),
+        "enc_layers": tree_lib.tree_stack(
+            [enc_layer_init(cfg, ks[i]) for i in range(e.enc_layers)]),
+        "dec_layers": tree_lib.tree_stack(
+            [dec_layer_init(cfg, ks[e.enc_layers + i]) for i in range(e.dec_layers)]),
+        "enc_norm": norm_init(cfg, cfg.d_model),
+        "dec_norm": norm_init(cfg, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-layer forwards
+# ---------------------------------------------------------------------------
+def enc_layer_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                    positions: jnp.ndarray, cap: Captures = None) -> jnp.ndarray:
+    h = norm_apply(cfg, p["ln1"], x)
+    a = mha(cfg, p["attn"], h, positions, cap, "attn/", causal=False)
+    x = x + a.astype(x.dtype)
+    h = norm_apply(cfg, p["ln2"], x)
+    return x + mlp(cfg, p["mlp"], h, cap, "mlp/").astype(x.dtype)
+
+
+def dec_layer_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray, enc: jnp.ndarray,
+                    positions: jnp.ndarray, cap: Captures = None) -> jnp.ndarray:
+    h = norm_apply(cfg, p["ln1"], x)
+    a = mha(cfg, p["self"], h, positions, cap, "self/")
+    x = x + a.astype(x.dtype)
+    h = norm_apply(cfg, p["lnx"], x)
+    a = mha(cfg, p["cross"], h, positions, cap, "cross/", kv_x=enc)
+    x = x + a.astype(x.dtype)
+    h = norm_apply(cfg, p["ln2"], x)
+    return x + mlp(cfg, p["mlp"], h, cap, "mlp/").astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fast paths
+# ---------------------------------------------------------------------------
+def encode(cfg: ModelConfig, params: Params, frames: jnp.ndarray) -> jnp.ndarray:
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    x = frames.astype(dtype_of(cfg.compute_dtype))
+
+    def body(h, lp):
+        return enc_layer_apply(cfg, lp, h, positions), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    else:
+        for i in range(cfg.encdec.enc_layers):
+            x, _ = body_fn(x, tree_lib.tree_index(params["enc_layers"], i))
+    return norm_apply(cfg, params["enc_norm"], x)
+
+
+def decode_hidden(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                  enc: jnp.ndarray) -> jnp.ndarray:
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    x = params["embed"][tokens] + params["pos_embed"][:S][None]
+
+    def body(h, lp):
+        return dec_layer_apply(cfg, lp, h, enc, positions), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    else:
+        for i in range(cfg.encdec.dec_layers):
+            x, _ = body_fn(x, tree_lib.tree_index(params["dec_layers"], i))
+    return norm_apply(cfg, params["dec_norm"], x)
+
+
+def forward_logits(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                   frames: jnp.ndarray) -> jnp.ndarray:
+    enc = encode(cfg, params, frames)
+    h = decode_hidden(cfg, params, tokens, enc)
+    return jnp.einsum("...d,vd->...v", h, params["embed"])
+
+
+def loss(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]):
+    logits = forward_logits(cfg, params, batch["tokens"], batch["frames"])
+    ce = cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce}
+
+
+# ---------------------------------------------------------------------------
+# serving: decoder decode with self-KV cache + fixed cross-KV
+# ---------------------------------------------------------------------------
+def init_serve_state(cfg: ModelConfig, params: Params, frames: jnp.ndarray,
+                     cache_len: int) -> Dict[str, jnp.ndarray]:
+    """Runs the encoder once; precomputes per-layer cross K/V."""
+    enc = encode(cfg, params, frames)
+    B = frames.shape[0]
+    hd = cfg.resolved_head_dim()
+    dt = dtype_of(cfg.compute_dtype)
+
+    def kv(lp):
+        k = common._split_heads(dense(enc, lp["cross"]["wk"], bias=lp["cross"].get("bk")),
+                                cfg.num_kv_heads, hd)
+        v = common._split_heads(dense(enc, lp["cross"]["wv"], bias=lp["cross"].get("bv")),
+                                cfg.num_kv_heads, hd)
+        return k.astype(dt), v.astype(dt)
+
+    _, (cross_k, cross_v) = jax.lax.scan(
+        lambda c, lp: (c, kv(lp)), 0, params["dec_layers"])
+    shape = (cfg.encdec.dec_layers, B, cache_len, cfg.num_kv_heads, hd)
+    return {"self_k": jnp.zeros(shape, dt), "self_v": jnp.zeros(shape, dt),
+            "cross_k": cross_k, "cross_v": cross_v}
+
+
+def serve_step(cfg: ModelConfig, params: Params, state: Dict[str, jnp.ndarray],
+               token: jnp.ndarray, pos: jnp.ndarray):
+    x = params["embed"][token] + params["pos_embed"][pos][None, None, :]
+
+    def body(h, xs):
+        lp, sk, sv, ck, cv = xs
+        hn = norm_apply(cfg, lp["ln1"], h)
+        a, cache = mha_decode(cfg, lp["self"], hn, pos, {"k": sk, "v": sv})
+        h = h + a.astype(h.dtype)
+        hn = norm_apply(cfg, lp["lnx"], h)
+        a, _ = mha_decode(cfg, lp["cross"], hn, pos, {}, cross_kv=(ck, cv))
+        h = h + a.astype(h.dtype)
+        hn = norm_apply(cfg, lp["ln2"], h)
+        h = h + mlp(cfg, lp["mlp"], hn).astype(h.dtype)
+        return h, cache
+
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(
+            body, x, (params["dec_layers"], state["self_k"], state["self_v"],
+                      state["cross_k"], state["cross_v"]))
+    else:
+        outs = []
+        for i in range(cfg.encdec.dec_layers):
+            lp = tree_lib.tree_index(params["dec_layers"], i)
+            x, co = body(x, (lp, state["self_k"][i], state["self_v"][i],
+                             state["cross_k"][i], state["cross_v"][i]))
+            outs.append(co)
+        caches = tree_lib.tree_stack(outs)
+    h = norm_apply(cfg, params["dec_norm"], x)
+    logits = jnp.einsum("...d,vd->...v", h, params["embed"])
+    return logits, dict(state, self_k=caches["k"], self_v=caches["v"])
+
+
+# ---------------------------------------------------------------------------
+# unit path
+# ---------------------------------------------------------------------------
+def units(cfg: ModelConfig) -> List[UnitSpec]:
+    e = cfg.encdec
+    enc_groups = (("attn/wq", "attn/wk", "attn/wv"), ("attn/wo",),
+                  ("mlp/fc1",), ("mlp/fc2",))
+    dec_groups = (("self/wq", "self/wk", "self/wv"), ("self/wo",),
+                  ("cross/wq", "cross/wk", "cross/wv"), ("cross/wo",),
+                  ("mlp/fc1",), ("mlp/fc2",))
+    out = [UnitSpec(f"enc{i:03d}", "enc_layers", i, enc_groups)
+           for i in range(e.enc_layers)]
+    out += [UnitSpec(f"dec{i:03d}", "dec_layers", i, dec_groups)
+            for i in range(e.dec_layers)]
+    return out
+
+
+def embed(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]):
+    frames = batch["frames"]
+    tokens = batch["tokens"]
+    B, Se, _ = frames.shape
+    S = tokens.shape[1]
+    return {
+        "x": frames.astype(dtype_of(cfg.compute_dtype)),   # encoder stream first
+        "dec_x": params["embed"][tokens] + params["pos_embed"][:S][None],
+        "enc_positions": jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None, :], (B, Se)),
+        "positions": jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S)),
+    }
+
+
+def unit_apply(cfg: ModelConfig, unit_params: Params, i: int,
+               state: Dict[str, jnp.ndarray], cap: Captures = None):
+    """``i`` is the layer index WITHIN its stack (enc or dec); the stacks
+    are told apart by their param structure ("cross" => decoder)."""
+    e = cfg.encdec
+    if "cross" not in unit_params:
+        x = enc_layer_apply(cfg, unit_params, state["x"], state["enc_positions"], cap)
+        state = dict(state, x=x)
+        if i == e.enc_layers - 1:
+            state = dict(state, enc=x)  # post_unit hook applies enc_norm
+        return state
+    x = dec_layer_apply(cfg, unit_params, state["dec_x"], state["enc_normed"],
+                        state["positions"], cap)
+    return dict(state, dec_x=x)
+
+
+def finalize_encoder(cfg: ModelConfig, params: Params, state: Dict) -> Dict:
+    """Apply the encoder final norm once all encoder units ran (relay hook)."""
+    if "enc" in state and "enc_normed" not in state:
+        state = dict(state, enc_normed=norm_apply(cfg, params["enc_norm"], state["enc"]))
+    return state
+
+
+def head(cfg: ModelConfig, params: Params, state: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    h = norm_apply(cfg, params["dec_norm"], state["dec_x"])
+    return jnp.einsum("...d,vd->...v", h, params["embed"])

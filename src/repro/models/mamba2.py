@@ -1,0 +1,316 @@
+"""Mamba2 (SSD — state-space duality) blocks, arXiv:2405.21060.
+
+TPU-adapted chunked SSD: the sequence is split into chunks of length Q;
+within a chunk the recurrence is computed as a masked (Q,Q) "attention"
+matmul (MXU work), across chunks a short scan carries the (H, N, P)
+state.  All decay math in fp32 via cumulative log-decays (exponents are
+<= 0 by construction, so exp() is stable).
+
+Per block the prunable operators are ``in_proj`` and ``out_proj`` —
+conv (depthwise, tiny), A/D/dt_bias (vectors) and norms are excluded,
+mirroring the paper's exclusion of non-matrix params (DESIGN.md §4).
+
+Unit protocol identical to models/transformer.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import (Captures, Params, chunked_cross_entropy, dense,
+                                 dense_init, dtype_of, embed_init, norm_apply,
+                                 norm_init, rmsnorm)
+from repro.models.transformer import UnitSpec
+from repro.utils import tree as tree_lib
+
+
+def dims(cfg: ModelConfig) -> Dict[str, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.headdim
+    conv_ch = d_inner + 2 * s.ngroups * s.state
+    zxbcdt = 2 * d_inner + 2 * s.ngroups * s.state + nheads
+    return dict(d_inner=d_inner, nheads=nheads, conv_ch=conv_ch, zxbcdt=zxbcdt,
+                state=s.state, headdim=s.headdim, ngroups=s.ngroups,
+                conv_w=s.conv_width)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def layer_init(cfg: ModelConfig, key) -> Params:
+    d = dims(cfg)
+    dt = dtype_of(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # dt_bias init: softplus^-1 of dt in [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(k3, (d["nheads"],), jnp.float32)
+    dt0 = jnp.exp(u * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    return {
+        "norm": norm_init(cfg, cfg.d_model),
+        "in_proj": dense_init(k1, cfg.d_model, d["zxbcdt"], dt),
+        "conv_w": (jax.random.normal(k2, (d["conv_w"], d["conv_ch"]), jnp.float32)
+                   / np.sqrt(d["conv_w"])).astype(dt),
+        "conv_b": jnp.zeros((d["conv_ch"],), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, d["nheads"], dtype=jnp.float32)),
+        "D": jnp.ones((d["nheads"],), jnp.float32),
+        "dt_bias": dt_bias,
+        "out_norm": jnp.ones((d["d_inner"],), dt),
+        "out_proj": dense_init(k4, d["d_inner"], cfg.d_model, dt),
+    }
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, cfg.num_layers + 2)
+    layers = tree_lib.tree_stack([layer_init(cfg, ks[i]) for i in range(cfg.num_layers)])
+    return {
+        "embed": embed_init(ks[-1], cfg.vocab, cfg.d_model, dtype_of(cfg.param_dtype)),
+        "layers": layers,
+        "final_norm": norm_init(cfg, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# pieces
+# ---------------------------------------------------------------------------
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv.  x (B,S,C), w (W,C) -> (B,S,C)."""
+    W = w.shape[0]
+    xf = x.astype(jnp.float32)
+    out = jnp.zeros_like(xf)
+    for j in range(W):  # W=4: unrolled shifts, no conv primitive needed
+        shift = W - 1 - j
+        xs = jnp.pad(xf, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xs * w[j].astype(jnp.float32)[None, None, :]
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _split_zxbcdt(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    d = dims(cfg)
+    gn = d["ngroups"] * d["state"]
+    z, xc, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d["d_inner"], 2 * d["d_inner"], 2 * d["d_inner"] + gn,
+                 2 * d["d_inner"] + 2 * gn], axis=-1)
+    return z, xc, Bm, Cm, dt
+
+
+def ssd_chunked(cfg: ModelConfig, x: jnp.ndarray, Bm: jnp.ndarray, Cm: jnp.ndarray,
+                log_a: jnp.ndarray, dt: jnp.ndarray,
+                h0: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD.
+
+    x (B,S,H,P); Bm/Cm (B,S,H,N) (already head-expanded); log_a, dt (B,S,H)
+    fp32.  Returns (y (B,S,H,P), final state (B,H,N,P)).
+    """
+    d = dims(cfg)
+    Bsz, S, H, P = x.shape
+    N = d["state"]
+    Q = min(cfg.ssm.chunk, S)
+    pad = -S % Q
+    if pad:  # pad to a chunk multiple: padded positions are causally after
+        # every real position, so y[:, :S] is unaffected (hT would change,
+        # but callers of the padded path discard it)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    S_p = S + pad
+    nc = S_p // Q
+
+    xr = x.reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    Br = Bm.reshape(Bsz, nc, Q, H, N).astype(jnp.float32)
+    Cr = Cm.reshape(Bsz, nc, Q, H, N).astype(jnp.float32)
+    la = log_a.reshape(Bsz, nc, Q, H)
+    dtr = dt.reshape(Bsz, nc, Q, H)
+
+    cum = jnp.cumsum(la, axis=2)                       # inclusive (B,nc,Q,H)
+    # intra-chunk: M[t,s] = exp(cum_t - cum_s) * (C_t . B_s) * dt_s, s<=t
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+    cb = jnp.einsum("bcqhn,bcshn->bcqsh", Cr, Br)
+    M = cb * decay * dtr[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", M, xr)
+
+    # chunk states: S_c = sum_s exp(cum_last - cum_s) dt_s B_s (x) x_s
+    decay_last = jnp.exp(cum[:, :, -1:, :] - cum)               # (B,nc,Q,H)
+    states = jnp.einsum("bcsh,bcshn,bcshp->bchnp", decay_last * dtr, Br, xr)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # (B,nc,H)
+
+    # inter-chunk scan over nc
+    def scan_fn(h, inp):
+        s_c, cd = inp                                  # (B,H,N,P), (B,H)
+        h_new = h * cd[:, :, None, None] + s_c
+        return h_new, h                                # emit PREVIOUS state
+
+    init_h = jnp.zeros((Bsz, H, N, P), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    hT, h_prevs = jax.lax.scan(
+        scan_fn, init_h,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)          # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", Cr * jnp.exp(cum)[..., None], h_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, S_p, H, P)[:, :S]
+    return y, hT
+
+
+def mixer(cfg: ModelConfig, p: Params, x: jnp.ndarray, cap: Captures = None,
+          prefix: str = "") -> jnp.ndarray:
+    """Full-sequence Mamba2 mixer (norm -> in_proj -> conv -> SSD -> out_proj)."""
+    d = dims(cfg)
+    h = norm_apply(cfg, p["norm"], x)
+    zxbcdt = dense(h, p["in_proj"], prefix + "in_proj", cap)
+    z, xc, Bm, Cm, dtv = _split_zxbcdt(cfg, zxbcdt)
+    xbc = causal_conv(jnp.concatenate([xc, Bm, Cm], axis=-1), p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    gn = d["ngroups"] * d["state"]
+    xc, Bm, Cm = jnp.split(xbc, [d["d_inner"], d["d_inner"] + gn], axis=-1)
+
+    Bsz, S, _ = x.shape
+    H, P, N, G = d["nheads"], d["headdim"], d["state"], d["ngroups"]
+    xh = xc.reshape(Bsz, S, H, P)
+    rep = H // G
+    Bh = jnp.repeat(Bm.reshape(Bsz, S, G, N), rep, axis=2)
+    Ch = jnp.repeat(Cm.reshape(Bsz, S, G, N), rep, axis=2)
+    dt = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])                               # (H,) negative
+    log_a = dt * A[None, None, :]
+
+    y, _ = ssd_chunked(cfg, xh, Bh, Ch, log_a, dt)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d["d_inner"]).astype(x.dtype)
+    # gated RMSNorm then out_proj
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["out_norm"])
+    return dense(y, p["out_proj"], prefix + "out_proj", cap)
+
+
+def layer_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray, cap: Captures = None
+                ) -> jnp.ndarray:
+    return x + mixer(cfg, p, x, cap).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fast paths
+# ---------------------------------------------------------------------------
+def hidden_states(cfg: ModelConfig, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = params["embed"][tokens] * cfg.emb_scale
+
+    def body(h, lp):
+        return layer_apply(cfg, lp, h), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    else:
+        for i in range(cfg.num_layers):
+            x, _ = body_fn(x, tree_lib.tree_index(params["layers"], i))
+    return norm_apply(cfg, params["final_norm"], x)
+
+
+def forward_logits(cfg: ModelConfig, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    h = hidden_states(cfg, params, tokens)
+    return jnp.einsum("...d,vd->...v", h, params["embed"])
+
+
+def loss(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]):
+    h = hidden_states(cfg, params, batch["tokens"])
+    ce = chunked_cross_entropy(h, params["embed"], batch["labels"], cfg.ce_chunk)
+    return ce, {"ce": ce}
+
+
+# ---------------------------------------------------------------------------
+# serving: O(1)-state decode
+# ---------------------------------------------------------------------------
+def init_serve_state(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    d = dims(cfg)
+    return {
+        "ssm": jnp.zeros((cfg.num_layers, batch, d["nheads"], d["state"], d["headdim"]),
+                         jnp.float32),
+        "conv": jnp.zeros((cfg.num_layers, batch, d["conv_w"] - 1, d["conv_ch"]),
+                          dtype_of(cfg.compute_dtype)),
+    }
+
+
+def _mixer_step(cfg: ModelConfig, p: Params, x: jnp.ndarray, ssm: jnp.ndarray,
+                conv: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token mixer.  x (B,1,D); ssm (B,H,N,P); conv (B,W-1,C)."""
+    d = dims(cfg)
+    h = norm_apply(cfg, p["norm"], x)
+    zxbcdt = dense(h, p["in_proj"])
+    z, xc, Bm, Cm, dtv = _split_zxbcdt(cfg, zxbcdt)
+    xbc_new = jnp.concatenate([xc, Bm, Cm], axis=-1)[:, 0]      # (B,C)
+    window = jnp.concatenate([conv, xbc_new[:, None, :]], axis=1)  # (B,W,C)
+    wsum = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(wsum).astype(x.dtype)
+    gn = d["ngroups"] * d["state"]
+    xc1, B1, C1 = jnp.split(xbc, [d["d_inner"], d["d_inner"] + gn], axis=-1)
+
+    Bsz = x.shape[0]
+    H, P, N, G = d["nheads"], d["headdim"], d["state"], d["ngroups"]
+    xh = xc1.reshape(Bsz, H, P).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(B1.reshape(Bsz, G, N), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C1.reshape(Bsz, G, N), rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dtv[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"]))[None, :])           # (B,H)
+
+    ssm_new = ssm * a[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt, Bh, xh)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, ssm_new) + p["D"][None, :, None] * xh
+    y = y.reshape(Bsz, 1, d["d_inner"]).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["out_norm"])
+    out = dense(y, p["out_proj"])
+    return out, ssm_new, window[:, 1:].astype(conv.dtype)
+
+
+def serve_step(cfg: ModelConfig, params: Params, state: Dict[str, jnp.ndarray],
+               token: jnp.ndarray, pos: jnp.ndarray):
+    x = params["embed"][token] * cfg.emb_scale
+
+    def body(h, xs):
+        lp, ssm, conv = xs
+        out, ssm2, conv2 = _mixer_step(cfg, lp, h, ssm, conv)
+        return h + out.astype(h.dtype), {"ssm": ssm2, "conv": conv2}
+
+    if cfg.scan_layers:
+        x, new_state = jax.lax.scan(
+            body, x, (params["layers"], state["ssm"], state["conv"]))
+    else:
+        outs = []
+        for i in range(cfg.num_layers):
+            lp = tree_lib.tree_index(params["layers"], i)
+            x, st = body(x, (lp, state["ssm"][i], state["conv"][i]))
+            outs.append(st)
+        new_state = tree_lib.tree_stack(outs)
+    h = norm_apply(cfg, params["final_norm"], x)
+    return jnp.einsum("...d,vd->...v", h, params["embed"]), new_state
+
+
+# ---------------------------------------------------------------------------
+# unit path
+# ---------------------------------------------------------------------------
+def units(cfg: ModelConfig) -> List[UnitSpec]:
+    groups = (("in_proj",), ("out_proj",))
+    return [UnitSpec(f"layer{i:03d}", "layers", i, groups)
+            for i in range(cfg.num_layers)]
+
+
+def embed(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]):
+    return {"x": params["embed"][batch["tokens"]] * cfg.emb_scale}
+
+
+def unit_apply(cfg: ModelConfig, unit_params: Params, i: int,
+               state: Dict[str, jnp.ndarray], cap: Captures = None):
+    return dict(state, x=layer_apply(cfg, unit_params, state["x"], cap))
+
+
+def head(cfg: ModelConfig, params: Params, state: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    h = norm_apply(cfg, params["final_norm"], state["x"])
+    return jnp.einsum("...d,vd->...v", h, params["embed"])

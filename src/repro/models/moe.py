@@ -1,0 +1,136 @@
+"""Mixture-of-Experts FFN: dropless ragged dispatch (MegaBlocks-style).
+
+Tokens are sorted by their assigned expert and the three SwiGLU matmuls run
+as grouped (ragged) matmuls over the expert dimension — no capacity factor,
+no dropped tokens, no (T, E, C) one-hot dispatch tensors.  This is the
+TPU-idiomatic dropless formulation (cf. MaxText): ``jax.lax.ragged_dot``
+lowers to a tiled grouped GEMM.
+
+Supports the two assigned MoE flavors:
+* mixtral-8x7b  — 8 routed experts, top-2, no shared expert
+* qwen2-moe     — 60 routed top-4 + one fused shared expert with sigmoid gate
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import Captures, Params, dense, dense_init, dtype_of
+
+
+def moe_init(cfg: ModelConfig, key) -> Params:
+    m = cfg.moe
+    dt = dtype_of(cfg.param_dtype)
+    d, fe = cfg.d_model, m.expert_ff
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / jnp.sqrt(d)
+    p: Params = {
+        "router": dense_init(ks[0], d, m.num_experts, jnp.float32),
+        # experts stored stacked: (E, in, out)
+        "w_gate": (jax.random.normal(ks[1], (m.num_experts, d, fe), jnp.float32) * scale).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (m.num_experts, d, fe), jnp.float32) * scale).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (m.num_experts, fe, d), jnp.float32) / jnp.sqrt(fe)).astype(dt),
+    }
+    if m.num_shared and m.shared_ff:
+        p["shared"] = common.mlp_init(cfg, ks[4], d_ff=m.shared_ff)
+        p["shared_gate"] = dense_init(ks[5], d, 1, dt)
+    return p
+
+
+def _ragged_expert_ffn(xs: jnp.ndarray, group_sizes: jnp.ndarray, p: Params) -> jnp.ndarray:
+    """xs: (T*k, D) sorted by expert; grouped SwiGLU."""
+    g = jax.lax.ragged_dot(xs, p["w_gate"], group_sizes)
+    u = jax.lax.ragged_dot(xs, p["w_up"], group_sizes)
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(xs.dtype)
+    return jax.lax.ragged_dot(h, p["w_down"], group_sizes)
+
+
+def route(cfg: ModelConfig, p: Params, x_flat: jnp.ndarray
+          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Router probabilities -> (weights (T,k), expert_ids (T,k), aux_loss)."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, ids = jax.lax.top_k(probs, m.top_k)
+    if m.norm_topk:
+        vals = vals / jnp.maximum(jnp.sum(vals, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss
+    T = x_flat.shape[0]
+    frac_tokens = jnp.zeros((m.num_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (T * m.top_k)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = m.num_experts * jnp.sum(frac_tokens * frac_probs)
+    return vals, ids, aux
+
+
+def moe_apply(cfg: ModelConfig, p: Params, x: jnp.ndarray, cap: Captures = None,
+              prefix: str = "") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MoE FFN over (B, S, D) (or (T, D)).  Returns (out, aux_loss).
+
+    In capture mode (cap != None) additionally records, per expert, the
+    routing-masked input activation under ``{prefix}expert{e}/{gate,up}`` and
+    the masked hidden under ``{prefix}expert{e}/down`` — zero columns for
+    tokens not routed to that expert, which contribute nothing to the Gram
+    statistics (see DESIGN.md §4).
+    """
+    m = cfg.moe
+    orig_shape = x.shape
+    x_flat = x.reshape(-1, x.shape[-1])
+    T, D = x_flat.shape
+    if cap is not None:
+        cap[prefix + "router"] = x_flat
+    w, ids, aux = route(cfg, p, x_flat)
+
+    k = m.top_k
+    flat_exp = ids.reshape(-1)                       # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(T), k)          # (T*k,)
+    flat_w = w.reshape(-1)
+    order = jnp.argsort(flat_exp)                    # stable sort by expert
+    sort_exp = flat_exp[order]
+    sort_tok = flat_tok[order]
+    sort_w = flat_w[order]
+    xs = x_flat[sort_tok]                            # (T*k, D) sorted by expert
+    group_sizes = jnp.zeros((m.num_experts,), jnp.int32).at[sort_exp].add(1)
+
+    ys = _ragged_expert_ffn(xs, group_sizes, p)
+    out = jnp.zeros((T, D), jnp.float32).at[sort_tok].add(
+        ys.astype(jnp.float32) * sort_w[:, None])
+
+    if cap is not None:
+        # per-expert capture for the pruner (dense masked form; outside jit)
+        onehot = jax.nn.one_hot(ids, m.num_experts, dtype=x_flat.dtype)   # (T,k,E)
+        tok_w = jnp.einsum("tk,tke->te", w.astype(x_flat.dtype), onehot)  # (T,E)
+        for e in range(m.num_experts):
+            mask = (tok_w[:, e] > 0).astype(x_flat.dtype)[:, None]
+            xe = x_flat * mask
+            cap[f"{prefix}expert{e}/gate"] = xe
+            cap[f"{prefix}expert{e}/up"] = xe
+            g = dense(xe, p["w_gate"][e])
+            u = dense(xe, p["w_up"][e])
+            he = (jax.nn.silu(g.astype(jnp.float32)).astype(x_flat.dtype) * u) * mask
+            cap[f"{prefix}expert{e}/down"] = he
+
+    if "shared" in p:
+        sh = common.mlp(cfg, p["shared"], x_flat, cap, prefix + "shared/")
+        gate = jax.nn.sigmoid(dense(x_flat, p["shared_gate"]).astype(jnp.float32))
+        out = out + sh.astype(jnp.float32) * gate
+    return out.astype(x.dtype).reshape(orig_shape), aux
+
+
+def moe_operator_groups(cfg: ModelConfig, prefix: str = "mlp/") -> list:
+    """Sequential pruning groups for a MoE FFN (peers pruned together)."""
+    m = cfg.moe
+    groups = []
+    first = [f"{prefix}expert{e}/gate" for e in range(m.num_experts)]
+    first += [f"{prefix}expert{e}/up" for e in range(m.num_experts)]
+    if m.num_shared and m.shared_ff:
+        first += [f"{prefix}shared/gate", f"{prefix}shared/up"]
+    groups.append(first)
+    second = [f"{prefix}expert{e}/down" for e in range(m.num_experts)]
+    if m.num_shared and m.shared_ff:
+        second.append(f"{prefix}shared/down")
+    groups.append(second)
+    return groups

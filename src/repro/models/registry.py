@@ -1,0 +1,220 @@
+"""Model registry: one ModelDef per architecture family.
+
+A ModelDef bundles every function the rest of the framework needs —
+training loss, eval logits, serving (prefill/decode), the pruning-unit
+protocol, and synthetic batch construction for smoke tests and the
+dry-run's ShapeDtypeStruct inputs.
+
+Families: dense (GQA/MQA/SWA transformer), moe, vlm (transformer +
+patch-embedding stub), ssm (Mamba2), hybrid (RG-LRU), encdec (Whisper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec, mamba2, rglru, transformer
+from repro.models.common import dtype_of
+from repro.models.transformer import UnitSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    cfg: ModelConfig
+    init: Callable                 # (key) -> params
+    loss: Callable                 # (params, batch) -> (loss, metrics)
+    forward_logits: Callable       # (params, batch) -> logits
+    units: Callable                # () -> [UnitSpec]
+    embed: Callable                # (params, batch) -> state
+    unit_apply: Callable           # (unit_params, i, state, cap) -> state
+    head: Callable                 # (params, state) -> logits
+    post_unit: Callable            # (params, i, state) -> state (relay hook)
+    serve_step: Callable           # (params, state, token, pos) -> (logits, state)
+    init_serve_state: Callable     # (params, batch, cache_len, batch_extras) -> state
+    prefill: Optional[Callable]    # (params, tokens, cache_len, extras) -> (logits, state)
+    make_batch: Callable           # (key, batch, seq) -> host batch dict
+    batch_specs: Callable          # (shape: ShapeSpec) -> dict of ShapeDtypeStruct
+
+
+def _identity_post_unit(params, i, state):
+    return state
+
+
+def _token_batch(cfg: ModelConfig, key, batch: int, seq: int) -> Dict[str, jnp.ndarray]:
+    tokens = jax.random.randint(key, (batch, seq), 0, cfg.vocab, jnp.int32)
+    labels = jnp.concatenate([tokens[:, 1:], jnp.full((batch, 1), -1, jnp.int32)], axis=1)
+    return {"tokens": tokens, "labels": labels}
+
+
+def _token_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# dense / moe transformer
+# ---------------------------------------------------------------------------
+def _transformer_def(cfg: ModelConfig) -> ModelDef:
+    return ModelDef(
+        cfg=cfg,
+        init=lambda key: transformer.init(cfg, key),
+        loss=lambda p, b: transformer.loss(cfg, p, b),
+        forward_logits=lambda p, b: transformer.forward_logits(cfg, p, b["tokens"],
+                                                               b.get("patches")),
+        units=lambda: transformer.units(cfg),
+        embed=lambda p, b: transformer.embed(cfg, p, b),
+        unit_apply=lambda up, i, s, cap=None: transformer.unit_apply(cfg, up, i, s, cap),
+        head=lambda p, s: transformer.head(cfg, p, s),
+        post_unit=_identity_post_unit,
+        serve_step=lambda p, s, t, pos: transformer.serve_step(cfg, p, s, t, pos),
+        init_serve_state=lambda p, b, cache_len, extras=None:
+            transformer.init_kv_caches(cfg, b, cache_len),
+        prefill=lambda p, tokens, cache_len, extras=None, last_only=False:
+            transformer.prefill(cfg, p, tokens, cache_len,
+                                None if extras is None else extras.get("patches"),
+                                last_only=last_only),
+        make_batch=lambda key, b, s: _token_batch(cfg, key, b, s),
+        batch_specs=lambda shape: _token_specs(cfg, shape),
+    )
+
+
+# ---------------------------------------------------------------------------
+# vlm: transformer backbone + precomputed patch embeddings (stub frontend)
+# ---------------------------------------------------------------------------
+def _vlm_def(cfg: ModelConfig) -> ModelDef:
+    base = _transformer_def(cfg)
+    npatch = cfg.vlm.num_patches
+
+    def make_batch(key, b, s):
+        k1, k2 = jax.random.split(key)
+        out = _token_batch(cfg, k1, b, max(s - npatch, 8))
+        out["patches"] = jax.random.normal(
+            k2, (b, npatch, cfg.d_model), jnp.float32) * 0.02
+        return out
+
+    def batch_specs(shape: ShapeSpec):
+        B = shape.global_batch
+        S = max(shape.seq_len - npatch, 8)
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "patches": jax.ShapeDtypeStruct((B, npatch, cfg.d_model), jnp.float32)}
+
+    return dataclasses.replace(base, make_batch=make_batch, batch_specs=batch_specs)
+
+
+# ---------------------------------------------------------------------------
+# ssm (Mamba2)
+# ---------------------------------------------------------------------------
+def _ssm_def(cfg: ModelConfig) -> ModelDef:
+    return ModelDef(
+        cfg=cfg,
+        init=lambda key: mamba2.init(cfg, key),
+        loss=lambda p, b: mamba2.loss(cfg, p, b),
+        forward_logits=lambda p, b: mamba2.forward_logits(cfg, p, b["tokens"]),
+        units=lambda: mamba2.units(cfg),
+        embed=lambda p, b: mamba2.embed(cfg, p, b),
+        unit_apply=lambda up, i, s, cap=None: mamba2.unit_apply(cfg, up, i, s, cap),
+        head=lambda p, s: mamba2.head(cfg, p, s),
+        post_unit=_identity_post_unit,
+        serve_step=lambda p, s, t, pos: mamba2.serve_step(cfg, p, s, t, pos),
+        init_serve_state=lambda p, b, cache_len, extras=None:
+            mamba2.init_serve_state(cfg, b),
+        prefill=None,
+        make_batch=lambda key, b, s: _token_batch(cfg, key, b, s),
+        batch_specs=lambda shape: _token_specs(cfg, shape),
+    )
+
+
+# ---------------------------------------------------------------------------
+# hybrid (RG-LRU)
+# ---------------------------------------------------------------------------
+def _hybrid_def(cfg: ModelConfig) -> ModelDef:
+    return ModelDef(
+        cfg=cfg,
+        init=lambda key: rglru.init(cfg, key),
+        loss=lambda p, b: rglru.loss(cfg, p, b),
+        forward_logits=lambda p, b: rglru.forward_logits(cfg, p, b["tokens"]),
+        units=lambda: rglru.units(cfg),
+        embed=lambda p, b: rglru.embed(cfg, p, b),
+        unit_apply=lambda up, i, s, cap=None: rglru.unit_apply(cfg, up, i, s, cap),
+        head=lambda p, s: rglru.head(cfg, p, s),
+        post_unit=_identity_post_unit,
+        serve_step=lambda p, s, t, pos: rglru.serve_step(cfg, p, s, t, pos),
+        init_serve_state=lambda p, b, cache_len, extras=None:
+            rglru.init_serve_state(cfg, b, cache_len),
+        prefill=None,
+        make_batch=lambda key, b, s: _token_batch(cfg, key, b, s),
+        batch_specs=lambda shape: _token_specs(cfg, shape),
+    )
+
+
+# ---------------------------------------------------------------------------
+# encdec (Whisper)
+# ---------------------------------------------------------------------------
+def _encdec_def(cfg: ModelConfig) -> ModelDef:
+    enc_seq = cfg.encdec.enc_seq
+
+    def make_batch(key, b, s):
+        k1, k2 = jax.random.split(key)
+        out = _token_batch(cfg, k1, b, s)
+        out["frames"] = jax.random.normal(k2, (b, enc_seq, cfg.d_model), jnp.float32) * 0.02
+        return out
+
+    def batch_specs(shape: ShapeSpec):
+        B = shape.global_batch
+        S = min(shape.seq_len, cfg.max_seq)  # whisper decoder is 448-capped
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "frames": jax.ShapeDtypeStruct((B, enc_seq, cfg.d_model), jnp.float32)}
+
+    return ModelDef(
+        cfg=cfg,
+        init=lambda key: encdec.init(cfg, key),
+        loss=lambda p, b: encdec.loss(cfg, p, b),
+        forward_logits=lambda p, b: encdec.forward_logits(cfg, p, b["tokens"], b["frames"]),
+        units=lambda: encdec.units(cfg),
+        embed=lambda p, b: encdec.embed(cfg, p, b),
+        unit_apply=lambda up, i, s, cap=None: encdec.unit_apply(cfg, up, i, s, cap),
+        head=lambda p, s: encdec.head(cfg, p, s),
+        post_unit=lambda p, i, s: encdec.finalize_encoder(cfg, p, s),
+        serve_step=lambda p, s, t, pos: encdec.serve_step(cfg, p, s, t, pos),
+        init_serve_state=lambda p, b, cache_len, extras:
+            encdec.init_serve_state(cfg, p, extras["frames"], cache_len),
+        prefill=None,
+        make_batch=make_batch,
+        batch_specs=batch_specs,
+    )
+
+
+_FAMILY_BUILDERS = {
+    "dense": _transformer_def,
+    "moe": _transformer_def,
+    "vlm": _vlm_def,
+    "ssm": _ssm_def,
+    "hybrid": _hybrid_def,
+    "encdec": _encdec_def,
+}
+
+
+def model_def(cfg: ModelConfig) -> ModelDef:
+    try:
+        builder = _FAMILY_BUILDERS[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} for arch {cfg.arch!r}")
+    return builder(cfg)
+
+
+def load_arch(name: str, smoke: bool = False) -> ModelDef:
+    """Build a ModelDef from a config module in repro/configs."""
+    import importlib
+
+    mod = importlib.import_module(
+        f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+    cfg = mod.smoke_config() if smoke else mod.config()
+    return model_def(cfg)

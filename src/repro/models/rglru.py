@@ -1,0 +1,266 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Residual layer i = temporal block (RG-LRU recurrence or sliding-window
+attention per ``cfg.rglru.block_pattern``, default 2:1) followed by a
+GeGLU MLP block.  The RG-LRU gated linear recurrence
+
+    r_t = sigmoid(W_a xi_t + b_a)          recurrence gate
+    i_t = sigmoid(W_i xi_t + b_i)          input gate
+    a_t = exp(-c * softplus(Lambda) * r_t) per-channel decay, c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * xi_t)
+
+runs as a jax.lax.associative_scan over the sequence (log-depth) for
+train/prefill and as an O(1) state update for decode — the reason this
+arch runs the long_500k shape.
+
+Hardware note (DESIGN.md §2): the published RecurrentGemma uses
+block-diagonal gate matrices; we use full (lru_width, lru_width) dense
+gates, which makes W_a/W_i first-class prunable operators for the paper's
+technique.  Prunable ops per recurrent block: wx, wy, wa, wi, wo (+ MLP).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import (Captures, Params, chunked_cross_entropy, dense,
+                                 dense_init, dtype_of, embed_init, mha,
+                                 mha_decode, mlp, mlp_init, norm_apply,
+                                 norm_init)
+from repro.models.transformer import UnitSpec, unembed
+from repro.utils import tree as tree_lib
+
+RG_C = 8.0  # Griffin's fixed decay sharpness
+
+
+def lru_width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def block_kind(cfg: ModelConfig, i: int) -> str:
+    pat = cfg.rglru.block_pattern
+    return pat[i % len(pat)]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def layer_init(cfg: ModelConfig, key, kind: str) -> Params:
+    dt = dtype_of(cfg.param_dtype)
+    w = lru_width(cfg)
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": norm_init(cfg, cfg.d_model), "ln2": norm_init(cfg, cfg.d_model),
+                 "mlp": mlp_init(cfg, ks[0])}
+    if kind == "attention":
+        p["attn"] = common.attn_init(cfg, ks[1])
+    else:
+        p["rg"] = {
+            "wx": dense_init(ks[2], cfg.d_model, w, dt),
+            "wy": dense_init(ks[3], cfg.d_model, w, dt),
+            "wa": dense_init(ks[4], w, w, dt),
+            "ba": jnp.zeros((w,), jnp.float32),
+            "wi": dense_init(ks[5], w, w, dt),
+            "bi": jnp.zeros((w,), jnp.float32),
+            "conv_w": (jax.random.normal(ks[6], (cfg.rglru.conv_width, w), jnp.float32)
+                       * 0.5).astype(dt),
+            "conv_b": jnp.zeros((w,), dt),
+            # Lambda init so a^c in [0.9, 0.999] at r=1 (Griffin App. A)
+            "lam": jnp.log(jnp.expm1(-jnp.log(
+                jnp.linspace(0.9, 0.999, w, dtype=jnp.float32)) / RG_C)),
+            "wo": dense_init(ks[7], w, cfg.d_model, dt),
+        }
+    return p
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, cfg.num_layers + 2)
+    # NOTE: mixed block kinds => params are NOT scan-stackable across all
+    # layers; we stack per-kind groups and scan within runs (see below).
+    layers = [layer_init(cfg, ks[i], block_kind(cfg, i)) for i in range(cfg.num_layers)]
+    return {
+        "embed": embed_init(ks[-1], cfg.vocab, cfg.d_model, dtype_of(cfg.param_dtype)),
+        "layers": layers,
+        "final_norm": norm_init(cfg, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrence
+# ---------------------------------------------------------------------------
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    W = w.shape[0]
+    xf = x.astype(jnp.float32)
+    out = jnp.zeros_like(xf)
+    for j in range(W):
+        shift = W - 1 - j
+        xs = jnp.pad(xf, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xs * w[j].astype(jnp.float32)[None, None, :]
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _gates(p: Params, xi: jnp.ndarray, cap: Captures, prefix: str
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(log_a, gated input) for the recurrence, fp32."""
+    r = jax.nn.sigmoid(dense(xi, p["wa"], prefix + "wa", cap).astype(jnp.float32)
+                       + p["ba"][None, None, :])
+    i = jax.nn.sigmoid(dense(xi, p["wi"], prefix + "wi", cap).astype(jnp.float32)
+                       + p["bi"][None, None, :])
+    log_a = -RG_C * jax.nn.softplus(p["lam"])[None, None, :] * r
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * i * xi.astype(jnp.float32)
+    return log_a, gated
+
+
+def lru_scan(log_a: jnp.ndarray, x: jnp.ndarray,
+             h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """h_t = exp(log_a_t) h_{t-1} + x_t along axis 1, associative scan."""
+    if h0 is not None:
+        x = x.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, x), axis=1)
+    return h
+
+
+def rg_block(cfg: ModelConfig, p: Params, x: jnp.ndarray, cap: Captures = None,
+             prefix: str = "rg/") -> jnp.ndarray:
+    """Full-sequence recurrent temporal block (input already normed)."""
+    y = jax.nn.gelu(dense(x, p["wy"], prefix + "wy", cap).astype(jnp.float32))
+    xi = causal_conv(dense(x, p["wx"], prefix + "wx", cap), p["conv_w"], p["conv_b"])
+    log_a, gated = _gates(p, xi, cap, prefix)
+    h = lru_scan(log_a, gated)
+    out = (y * h).astype(x.dtype)
+    return dense(out, p["wo"], prefix + "wo", cap)
+
+
+def layer_apply(cfg: ModelConfig, p: Params, i: int, x: jnp.ndarray,
+                positions: jnp.ndarray, cap: Captures = None) -> jnp.ndarray:
+    h = norm_apply(cfg, p["ln1"], x)
+    if block_kind(cfg, i) == "attention":
+        t = mha(cfg, p["attn"], h, positions, cap, "attn/", window=cfg.window)
+    else:
+        t = rg_block(cfg, p["rg"], h, cap)
+    x = x + t.astype(x.dtype)
+    h = norm_apply(cfg, p["ln2"], x)
+    return x + mlp(cfg, p["mlp"], h, cap, "mlp/").astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fast paths
+# ---------------------------------------------------------------------------
+def hidden_states(cfg: ModelConfig, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = params["embed"][tokens] * cfg.emb_scale
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    for i, lp in enumerate(params["layers"]):
+        fn = jax.checkpoint(lambda h, lp=lp, i=i: layer_apply(cfg, lp, i, h, positions)) \
+            if cfg.remat else (lambda h, lp=lp, i=i: layer_apply(cfg, lp, i, h, positions))
+        x = fn(x)
+    return norm_apply(cfg, params["final_norm"], x)
+
+
+def forward_logits(cfg: ModelConfig, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return unembed(cfg, params, hidden_states(cfg, params, tokens))
+
+
+def loss(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]):
+    h = hidden_states(cfg, params, batch["tokens"])
+    emb = params["embed"] if cfg.tie_embeddings else params["head"].T
+    ce = chunked_cross_entropy(h * cfg.logit_scale, emb, batch["labels"],
+                               cfg.ce_chunk, cfg.logit_softcap)
+    return ce, {"ce": ce}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def init_serve_state(cfg: ModelConfig, batch: int, cache_len: int) -> Dict:
+    hd = cfg.resolved_head_dim()
+    w = lru_width(cfg)
+    dt = dtype_of(cfg.compute_dtype)
+    state: Dict = {"layers": []}
+    for i in range(cfg.num_layers):
+        if block_kind(cfg, i) == "attention":
+            clen = min(cache_len, cfg.window or cache_len)
+            state["layers"].append({
+                "k": jnp.zeros((batch, clen, cfg.num_kv_heads, hd), dt),
+                "v": jnp.zeros((batch, clen, cfg.num_kv_heads, hd), dt)})
+        else:
+            state["layers"].append({
+                "h": jnp.zeros((batch, w), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, w), dt)})
+    return state
+
+
+def _rg_step(cfg: ModelConfig, p: Params, x: jnp.ndarray, st: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """x (B,1,D) -> (out (B,1,D), new state)."""
+    y = jax.nn.gelu(dense(x, p["wy"]).astype(jnp.float32))
+    xi_raw = dense(x, p["wx"])[:, 0]                         # (B,w)
+    window = jnp.concatenate([st["conv"], xi_raw[:, None, :].astype(st["conv"].dtype)], axis=1)
+    xi = (jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32))
+    xi = xi[:, None, :].astype(x.dtype)                      # (B,1,w)
+    log_a, gated = _gates(p, xi, None, "")
+    h = jnp.exp(log_a[:, 0]) * st["h"] + gated[:, 0]
+    out = (y * h[:, None, :]).astype(x.dtype)
+    return dense(out, p["wo"]), {"h": h, "conv": window[:, 1:]}
+
+
+def serve_step(cfg: ModelConfig, params: Params, state: Dict,
+               token: jnp.ndarray, pos: jnp.ndarray):
+    x = params["embed"][token] * cfg.emb_scale
+    new_layers = []
+    for i, lp in enumerate(params["layers"]):
+        h = norm_apply(cfg, lp["ln1"], x)
+        if block_kind(cfg, i) == "attention":
+            t, st = mha_decode(cfg, lp["attn"], h, pos, state["layers"][i],
+                               window=cfg.window)
+        else:
+            t, st = _rg_step(cfg, lp["rg"], h, state["layers"][i])
+        new_layers.append(st)
+        x = x + t.astype(x.dtype)
+        h = norm_apply(cfg, lp["ln2"], x)
+        x = x + mlp(cfg, lp["mlp"], h).astype(x.dtype)
+    h = norm_apply(cfg, params["final_norm"], x)
+    return unembed(cfg, params, h), {"layers": new_layers}
+
+
+# ---------------------------------------------------------------------------
+# unit path
+# ---------------------------------------------------------------------------
+def units(cfg: ModelConfig) -> List[UnitSpec]:
+    out = []
+    mlp_g = [("mlp/gate", "mlp/up"), ("mlp/down",)]
+    for i in range(cfg.num_layers):
+        if block_kind(cfg, i) == "attention":
+            groups = [("attn/wq", "attn/wk", "attn/wv"), ("attn/wo",)] + mlp_g
+        else:
+            groups = [("rg/wx", "rg/wy"), ("rg/wa", "rg/wi"), ("rg/wo",)] + mlp_g
+        out.append(UnitSpec(f"layer{i:03d}", f"layers/{i}", i, tuple(groups),
+                            stacked=False))
+    return out
+
+
+def embed(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    return {"x": params["embed"][tokens] * cfg.emb_scale, "positions": positions}
+
+
+def unit_apply(cfg: ModelConfig, unit_params: Params, i: int,
+               state: Dict[str, jnp.ndarray], cap: Captures = None):
+    x = layer_apply(cfg, unit_params, i, state["x"], state["positions"], cap)
+    return dict(state, x=x)
+
+
+def head(cfg: ModelConfig, params: Params, state: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return unembed(cfg, params, norm_apply(cfg, params["final_norm"], state["x"]))

@@ -1,0 +1,5 @@
+"""Serving: batched decode engine + packed-2:4 weight store."""
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.packed import pack_tree, unpack_tree
+
+__all__ = ["Engine", "ServeConfig", "pack_tree", "unpack_tree"]

@@ -1,0 +1,76 @@
+"""Batched serving engine: prefill + autoregressive decode.
+
+Drives any ModelDef through its ``prefill``/``init_serve_state``/
+``serve_step`` protocol; greedy or temperature sampling; works with
+dense or packed-2:4 params (models.common.dense dispatches).  The
+decode loop is jitted once per (batch, cache) shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelDef
+from repro.utils import get_logger
+
+log = get_logger("serve")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 => greedy
+    cache_len: int = 256
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, model: ModelDef, params: Any, cfg: ServeConfig = ServeConfig()):
+        self.model, self.params, self.cfg = model, params, cfg
+        self._decode_fn = jax.jit(self._decode_step)
+
+    def _decode_step(self, params, state, token, pos, key):
+        logits, state = self.model.serve_step(params, state, token, pos)
+        logits = logits[:, -1, :].astype(jnp.float32)
+        if self.cfg.temperature > 0:
+            nxt = jax.random.categorical(key, logits / self.cfg.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], state
+
+    def generate(self, prompt: jnp.ndarray,
+                 extras: Optional[Dict[str, jnp.ndarray]] = None,
+                 max_new_tokens: Optional[int] = None) -> np.ndarray:
+        """prompt (B, P) int32 -> generated tokens (B, new)."""
+        cfg = self.cfg
+        B, P = prompt.shape
+        n_new = max_new_tokens or cfg.max_new_tokens
+        cache_len = max(cfg.cache_len, P + n_new)
+
+        if self.model.prefill is not None:
+            logits, state = self.model.prefill(self.params, prompt, cache_len, extras)
+            last = jnp.argmax(logits[:, -1, :].astype(jnp.float32), axis=-1)
+            token = last.astype(jnp.int32)[:, None]
+            pos0 = P
+        else:
+            # recurrent families: feed the prompt token-by-token
+            state = self.model.init_serve_state(self.params, B, cache_len, extras)
+            token = prompt[:, :1]
+            for t in range(P):
+                key = jax.random.PRNGKey(cfg.seed + t)
+                nxt, state = self._decode_fn(self.params, state,
+                                             prompt[:, t:t + 1], jnp.int32(t), key)
+            token = nxt
+            pos0 = P
+
+        out = [np.asarray(token)]
+        for t in range(n_new - 1):
+            key = jax.random.PRNGKey(cfg.seed + 10_000 + t)
+            token, state = self._decode_fn(self.params, state, token,
+                                           jnp.int32(pos0 + t), key)
+            out.append(np.asarray(token))
+        return np.concatenate(out, axis=1)

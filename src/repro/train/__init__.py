@@ -1,0 +1,5 @@
+"""Training substrate: AdamW + schedules, trainer with checkpoint/restart."""
+from repro.train.optim import AdamWConfig, AdamWState
+from repro.train.trainer import TrainConfig, Trainer, evaluate_ppl
+
+__all__ = ["AdamWConfig", "AdamWState", "TrainConfig", "Trainer", "evaluate_ppl"]

@@ -1,0 +1,96 @@
+"""Optimizers and LR schedules (no external deps): AdamW, cosine & WSD.
+
+WSD (warmup-stable-decay) is the MiniCPM schedule — included because
+minicpm-2b is an assigned arch.  All state is a pytree; the update is a
+pure function usable inside jit/pjit (the DP mesh shards it like params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"        # cosine | wsd | const
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    decay_frac: float = 0.1         # WSD: final fraction spent decaying
+    min_lr_frac: float = 0.1
+
+
+def schedule_fn(cfg: AdamWConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        if cfg.schedule == "const":
+            return cfg.lr * warm
+        total = jnp.float32(cfg.total_steps)
+        if cfg.schedule == "cosine":
+            t = jnp.clip((step - cfg.warmup_steps) /
+                         jnp.maximum(total - cfg.warmup_steps, 1), 0.0, 1.0)
+            cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+            return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+        # WSD: stable at lr, then linear decay over the last decay_frac
+        decay_start = total * (1.0 - cfg.decay_frac)
+        t = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1), 0.0, 1.0)
+        return cfg.lr * warm * (1.0 - (1.0 - cfg.min_lr_frac) * t)
+
+    return fn
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def init(params: Any) -> AdamWState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+
+
+def update(cfg: AdamWConfig, grads: Any, state: AdamWState, params: Any
+           ) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    """One AdamW step.  Params may be bf16; moments and math are fp32."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip > 0 else 1.0
+    step = state.step + 1
+    lr = schedule_fn(cfg)(step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        upd_ = (mu / b1c) / (jnp.sqrt(nu / b2c) + cfg.eps)
+        wd = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (upd_ + wd)
+        return new_p.astype(p.dtype), mu, nu
+
+    flat = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), {
+        "lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,178 @@
+"""Training loop: jitted step, grad accumulation, checkpoint/restart.
+
+Fault tolerance: every ``ckpt_every`` steps the full training state
+(params, optimizer moments, data cursor, step) is written atomically via
+``repro.checkpoint.store``; ``Trainer.restore`` resumes bit-exact from
+the latest complete checkpoint (the data stream is a pure function of
+the cursor, so the replayed batch sequence is identical — covered by
+tests/test_train.py::test_resume_bit_exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+from repro.data.corpus import MarkovCorpus, batch_to_model_inputs
+from repro.models.registry import ModelDef
+from repro.train import optim
+from repro.utils import get_logger
+
+log = get_logger("trainer")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 200
+    batch: int = 8
+    seq: int = 64
+    grad_accum: int = 1
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 2
+    eval_every: int = 50
+    eval_batches: int = 4
+    log_every: int = 10
+    seed: int = 0
+    optim: optim.AdamWConfig = optim.AdamWConfig()
+
+
+def make_train_step(model: ModelDef, ocfg: optim.AdamWConfig):
+    """Returns jitted (params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With grad accumulation the caller streams micro-batches through
+    ``accum_step`` and applies ``apply_step`` once per global batch.
+    """
+
+    def loss_fn(params, batch):
+        l, metrics = model.loss(params, batch)
+        return l, metrics
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        (l, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = optim.update(ocfg, grads, opt_state, params)
+        return params, opt_state, {**metrics, **om, "loss": l}
+
+    @jax.jit
+    def grad_step(params, batch):
+        (l, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return grads, l
+
+    @jax.jit
+    def apply_grads(params, opt_state, grads):
+        params, opt_state, om = optim.update(ocfg, grads, opt_state, params)
+        return params, opt_state, om
+
+    return train_step, grad_step, apply_grads
+
+
+def evaluate_ppl(model: ModelDef, params, corpus: MarkovCorpus, batch: int,
+                 seq: int, n_batches: int, extras: Optional[Dict] = None) -> float:
+    """Held-out perplexity (teacher-forced CE on the valid split)."""
+    tot, cnt = 0.0, 0
+    it = corpus.batches(batch, seq, split="valid")
+
+    @jax.jit
+    def ce(params, b):
+        l, m = model.loss(params, b)
+        return m["ce"]
+
+    for _ in range(n_batches):
+        _, toks = next(it)
+        b = {k: jnp.asarray(v) for k, v in batch_to_model_inputs(toks).items()}
+        if extras:
+            b.update({k: jnp.asarray(v[:toks.shape[0]]) for k, v in extras.items()})
+        tot += float(ce(params, b))
+        cnt += 1
+    return float(np.exp(tot / max(cnt, 1)))
+
+
+class Trainer:
+    def __init__(self, model: ModelDef, corpus: MarkovCorpus, cfg: TrainConfig,
+                 extras_fn: Optional[Callable[[int], Dict]] = None):
+        self.model, self.corpus, self.cfg = model, corpus, cfg
+        self.extras_fn = extras_fn
+        self.train_step, self.grad_step, self.apply_grads = make_train_step(
+            model, cfg.optim)
+        self.params = model.init(jax.random.PRNGKey(cfg.seed))
+        self.opt_state = optim.init(self.params)
+        self.step = 0
+        self.history: list = []
+
+    # -- checkpointing -----------------------------------------------------
+    def save(self) -> Optional[str]:
+        if not self.cfg.ckpt_dir:
+            return None
+        state = {"params": self.params, "mu": self.opt_state.mu,
+                 "nu": self.opt_state.nu,
+                 "opt_step": self.opt_state.step}
+        path = store.save(self.cfg.ckpt_dir, store.step_name(self.step), state,
+                          extra={"step": self.step, "time": time.time()})
+        store.prune_old(self.cfg.ckpt_dir, keep=self.cfg.keep_ckpts)
+        return path
+
+    def restore(self) -> bool:
+        if not self.cfg.ckpt_dir:
+            return False
+        latest = store.latest_step(self.cfg.ckpt_dir)
+        if latest is None:
+            return False
+        like = {"params": self.params, "mu": self.opt_state.mu,
+                "nu": self.opt_state.nu, "opt_step": self.opt_state.step}
+        state, extra = store.load(self.cfg.ckpt_dir, store.step_name(latest), like)
+        self.params = state["params"]
+        self.opt_state = optim.AdamWState(step=state["opt_step"], mu=state["mu"],
+                                          nu=state["nu"])
+        self.step = int(extra["step"])
+        log.info("restored checkpoint at step %d", self.step)
+        return True
+
+    # -- loop ----------------------------------------------------------------
+    def _batch_at(self, it) -> Dict[str, jnp.ndarray]:
+        _, toks = next(it)
+        b = {k: jnp.asarray(v) for k, v in batch_to_model_inputs(toks).items()}
+        if self.extras_fn is not None:
+            b.update(self.extras_fn(toks.shape[0]))
+        return b
+
+    def run(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        it = self.corpus.batches(cfg.batch, cfg.seq, split="train",
+                                 start_step=self.step * max(cfg.grad_accum, 1))
+        t0 = time.perf_counter()
+        while self.step < cfg.steps:
+            if cfg.grad_accum <= 1:
+                batch = self._batch_at(it)
+                self.params, self.opt_state, m = self.train_step(
+                    self.params, self.opt_state, batch)
+            else:
+                grads = None
+                loss_sum = 0.0
+                for _ in range(cfg.grad_accum):
+                    g, l = self.grad_step(self.params, self._batch_at(it))
+                    loss_sum += float(l)
+                    grads = g if grads is None else jax.tree_util.tree_map(
+                        jnp.add, grads, g)
+                grads = jax.tree_util.tree_map(lambda x: x / cfg.grad_accum, grads)
+                self.params, self.opt_state, m = self.apply_grads(
+                    self.params, self.opt_state, grads)
+                m = {**m, "loss": jnp.float32(loss_sum / cfg.grad_accum)}
+            self.step += 1
+            if self.step % cfg.log_every == 0 or self.step == cfg.steps:
+                rec = {k: float(v) for k, v in m.items()}
+                rec["step"] = self.step
+                self.history.append(rec)
+                log.info("step %d loss %.4f lr %.2e", self.step, rec["loss"],
+                         rec.get("lr", 0.0))
+            if cfg.ckpt_dir and (self.step % cfg.ckpt_every == 0
+                                 or self.step == cfg.steps):
+                self.save()
+        wall = time.perf_counter() - t0
+        return {"steps": self.step, "wall_seconds": wall, "history": self.history,
+                "final_loss": self.history[-1]["loss"] if self.history else None}

@@ -1,0 +1,24 @@
+"""Small shared utilities: pytree helpers, logging, timing, rng streams."""
+from repro.utils.tree import (
+    tree_bytes,
+    tree_count,
+    tree_index,
+    tree_stack,
+    tree_unstack,
+    flatten_with_paths,
+    get_path,
+    set_path,
+)
+from repro.utils.log import get_logger
+
+__all__ = [
+    "tree_bytes",
+    "tree_count",
+    "tree_index",
+    "tree_stack",
+    "tree_unstack",
+    "flatten_with_paths",
+    "get_path",
+    "set_path",
+    "get_logger",
+]

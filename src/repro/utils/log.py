@@ -1,0 +1,41 @@
+"""Minimal structured logger (stdlib logging, single format, env-tunable)."""
+from __future__ import annotations
+
+import logging
+import os
+import sys
+import time
+
+
+_CONFIGURED = False
+
+
+def _configure() -> None:
+    global _CONFIGURED
+    if _CONFIGURED:
+        return
+    level = os.environ.get("REPRO_LOG", "INFO").upper()
+    handler = logging.StreamHandler(sys.stderr)
+    handler.setFormatter(logging.Formatter("%(asctime)s %(name)s %(levelname)s %(message)s", "%H:%M:%S"))
+    root = logging.getLogger("repro")
+    root.setLevel(level)
+    root.addHandler(handler)
+    root.propagate = False
+    _CONFIGURED = True
+
+
+def get_logger(name: str) -> logging.Logger:
+    _configure()
+    return logging.getLogger(f"repro.{name}")
+
+
+class Timer:
+    """Context-manager wall timer: ``with Timer() as t: ...; t.seconds``."""
+
+    def __enter__(self) -> "Timer":
+        self._t0 = time.perf_counter()
+        self.seconds = 0.0
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.seconds = time.perf_counter() - self._t0

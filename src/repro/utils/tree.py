@@ -1,0 +1,122 @@
+"""Pytree utilities used across the framework.
+
+Params everywhere in repro are nested dicts of jnp arrays.  Paths are
+"/"-joined key strings, e.g. ``layers/attn/wq``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+
+def tree_count(tree: Tree) -> int:
+    """Total number of scalar elements in a pytree of arrays."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Tree) -> int:
+    """Total bytes of a pytree of arrays (respects per-leaf dtype)."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_index(tree: Tree, i: int) -> Tree:
+    """Index the leading axis of every leaf (layer-stacked params -> one layer)."""
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+def tree_stack(trees: List[Tree]) -> Tree:
+    """Stack a list of identically-structured trees along a new leading axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: Tree, n: int) -> List[Tree]:
+    return [tree_index(tree, i) for i in range(n)]
+
+
+def _flatten(prefix: str, node: Tree, out: List[Tuple[str, Any]]) -> None:
+    if isinstance(node, dict):
+        for k in sorted(node.keys()):
+            _flatten(f"{prefix}/{k}" if prefix else str(k), node[k], out)
+    elif isinstance(node, (list, tuple)):
+        for i, v in enumerate(node):
+            _flatten(f"{prefix}/{i}" if prefix else str(i), v, out)
+    elif node is None:
+        return
+    else:
+        out.append((prefix, node))
+
+
+def flatten_with_paths(tree: Tree) -> List[Tuple[str, Any]]:
+    """Deterministic (path, leaf) list; dict keys sorted."""
+    out: List[Tuple[str, Any]] = []
+    _flatten("", tree, out)
+    return out
+
+
+def get_path(tree: Tree, path: str) -> Any:
+    node = tree
+    for k in path.split("/"):
+        if isinstance(node, (list, tuple)):
+            node = node[int(k)]
+        else:
+            node = node[k]
+    return node
+
+
+def set_path(tree: Tree, path: str, value: Any) -> Tree:
+    """Functionally replace the leaf at ``path`` (returns a new tree; shares
+    untouched subtrees)."""
+    keys = path.split("/")
+
+    def rec(node: Tree, i: int) -> Tree:
+        if i == len(keys):
+            return value
+        k = keys[i]
+        if isinstance(node, dict):
+            new = dict(node)
+            new[k] = rec(node[k], i + 1)
+            return new
+        if isinstance(node, (list, tuple)):
+            idx = int(k)
+            new_list = list(node)
+            new_list[idx] = rec(node[idx], i + 1)
+            return type(node)(new_list) if isinstance(node, tuple) else new_list
+        raise KeyError(f"cannot descend into leaf at {'/'.join(keys[:i])}")
+
+    return rec(tree, 0)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Tree) -> Tree:
+    """Map ``fn(path, leaf) -> leaf`` over a nested-dict tree."""
+
+    def rec(prefix: str, node: Tree) -> Tree:
+        if isinstance(node, dict):
+            return {k: rec(f"{prefix}/{k}" if prefix else str(k), v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            seq = [rec(f"{prefix}/{i}" if prefix else str(i), v) for i, v in enumerate(node)]
+            return type(node)(seq) if isinstance(node, tuple) else seq
+        if node is None:
+            return None
+        return fn(prefix, node)
+
+    return rec("", tree)
+
+
+def iter_leaves_with_paths(tree: Tree) -> Iterator[Tuple[str, Any]]:
+    yield from flatten_with_paths(tree)
+
+
+def tree_allclose(a: Tree, b: Tree, rtol: float = 1e-5, atol: float = 1e-6) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol) for x, y in zip(la, lb))

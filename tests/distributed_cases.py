@@ -1,0 +1,195 @@
+"""Multi-device test cases, run in a subprocess with 8 host devices.
+
+Invoked by tests/test_distributed.py as
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 python distributed_cases.py <case>
+Prints "CASE_OK <case>" on success.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+
+
+def case_rowfista():
+    from repro.core import fista as fista_lib
+    from repro.core import gram as gram_lib
+    from repro.distributed.rowfista import sharded_solve
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rng = np.random.default_rng(0)
+    m, n = 32, 48
+    a = rng.normal(size=(n, n)).astype(np.float32) * 0.3
+    G = jnp.asarray(a @ a.T)
+    B = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    y0 = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    L = gram_lib.max_eigval(G) * 1.01
+    want, _ = fista_lib.solve(G, B, y0, 0.5, L=L, max_iters=50)
+    got = sharded_solve(mesh, G, B, y0, 0.5, L, max_iters=50)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-5)
+
+
+def case_gram_psum():
+    from repro.core import gram as gram_lib
+    from repro.distributed.rowfista import sharded_accumulate
+
+    mesh = jax.make_mesh((8,), ("data",))
+    rng = np.random.default_rng(1)
+    p, n, m = 64, 16, 8
+    xd = rng.normal(size=(p, n)).astype(np.float32)
+    xp = xd + 0.1 * rng.normal(size=(p, n)).astype(np.float32)
+    w = rng.normal(size=(m, n)).astype(np.float32)
+    wx = xd @ w.T
+    serial = gram_lib.accumulate(gram_lib.init_stats(n), xd, xp, wx)
+    sharded = sharded_accumulate(mesh, gram_lib.init_stats(n),
+                                 jnp.asarray(xd), jnp.asarray(xp), jnp.asarray(wx))
+    np.testing.assert_allclose(np.asarray(sharded.G), np.asarray(serial.G),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(sharded.h), float(serial.h), rtol=1e-5)
+
+
+def case_sharded_train():
+    from repro.configs.opt125m_proxy import tiny_config
+    from repro.distributed.train import make_train_step
+    from repro.models.registry import model_def
+    from repro.train import optim
+
+    cfg = tiny_config().replace(num_layers=2, d_model=64, d_ff=128,
+                                num_heads=4, num_kv_heads=4, vocab=128)
+    model = model_def(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = optim.init(params)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, 128, jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+
+    ocfg = optim.AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=4)
+    # unsharded reference
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch)
+        (l, m), g = jax.value_and_grad(lambda p: loss_fn(p)[0], has_aux=False) \
+            (params), None
+        return l
+    def ref_step(params, opt_state, batch):
+        (l, m), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True)(params)
+        p2, o2, om = optim.update(ocfg, grads, opt_state, params)
+        return p2, o2, l
+
+    p_ref, o_ref, l_ref = jax.jit(ref_step)(params, opt, batch)
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    build = make_train_step(model, mesh, ocfg, donate=False)
+    fn, _ = build(params, opt, batch)
+    p_sh, o_sh, metrics = fn(params, opt, batch)
+    assert np.isclose(float(metrics["loss"]), float(l_ref), rtol=1e-4), \
+        (float(metrics["loss"]), float(l_ref))
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_leaves_with_path(p_ref),
+            jax.tree_util.tree_leaves_with_path(p_sh)):
+        np.testing.assert_allclose(np.asarray(b, np.float32),
+                                   np.asarray(a, np.float32),
+                                   rtol=5e-3, atol=5e-4)
+
+
+def case_pipeline():
+    from repro.distributed.pipeline import (pipeline_apply, split_microbatches,
+                                            merge_microbatches, stack_to_stages)
+
+    mesh = jax.make_mesh((4, 2), ("pod", "data"))
+    rng = np.random.default_rng(2)
+    L, D = 8, 16
+    ws = jnp.asarray(rng.normal(size=(L, D, D)).astype(np.float32) * 0.2)
+
+    def layer(w, x):
+        return jnp.tanh(x @ w)
+
+    def plain(x):
+        for i in range(L):
+            x = layer(ws[i], x)
+        return x
+
+    def stage_fn(stage_params, x):
+        def body(h, w):
+            return layer(w, h), None
+        out, _ = jax.lax.scan(body, x, stage_params)
+        return out
+
+    x = jnp.asarray(rng.normal(size=(12, D)).astype(np.float32))
+    xs = split_microbatches(x, 6)
+    stages = stack_to_stages(ws, 4)
+    got = merge_microbatches(pipeline_apply(mesh, stage_fn, stages, xs))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(plain(x)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def case_compression():
+    from repro.distributed.compression import (compressed_allreduce,
+                                               ef_compress, init_residuals)
+
+    mesh = jax.make_mesh((8,), ("data",))
+    rng = np.random.default_rng(3)
+    D = 8
+    grads = {"w": jnp.asarray(rng.normal(size=(D, 16, 8)).astype(np.float32))}
+    residuals = init_residuals(grads)
+    mean, new_r = compressed_allreduce(mesh, grads, residuals)
+    want = np.asarray(grads["w"]).mean(axis=0)
+    got = np.asarray(mean["w"][0])
+    # int8 quantization error bounded by sum of per-shard scales / 127
+    scale_bound = np.abs(np.asarray(grads["w"])).max(axis=(1, 2)).sum() / 127 / D
+    assert np.abs(got - want).max() <= scale_bound * 1.5 + 1e-6
+    # error feedback: residual equals what quantization dropped
+    q, s, r = ef_compress(grads["w"][0], residuals["w"][0])
+    np.testing.assert_allclose(
+        np.asarray(r), np.asarray(grads["w"][0]) - np.asarray(q, np.float32) * s,
+        rtol=1e-5, atol=1e-6)
+
+
+def case_ef_convergence():
+    """Error feedback makes quantized SGD track exact SGD on a quadratic."""
+    from repro.distributed.compression import ef_compress
+
+    rng = np.random.default_rng(4)
+    A = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+    Q = A @ A.T / 16 + jnp.eye(16)
+    x_exact = jnp.ones((16,))
+    x_q = jnp.ones((16,))
+    r = jnp.zeros((16,))
+    lr = 0.05
+    for _ in range(200):
+        g_exact = Q @ x_exact
+        x_exact = x_exact - lr * g_exact
+        g = Q @ x_q
+        q, s, r = ef_compress(g, r)
+        x_q = x_q - lr * (q.astype(jnp.float32) * s)
+    assert float(jnp.linalg.norm(x_q)) < 1e-2, float(jnp.linalg.norm(x_q))
+
+
+def case_moe_sharded():
+    from repro.distributed.train import make_train_step
+    from repro.models.registry import load_arch
+    from repro.train import optim
+
+    model = load_arch("mixtral-8x7b", smoke=True)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = optim.init(params)
+    batch = model.make_batch(jax.random.PRNGKey(1), 4, 16)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    build = make_train_step(model, mesh, optim.AdamWConfig(), donate=False)
+    fn, _ = build(params, opt, batch)
+    _, _, metrics = fn(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+CASES = {k[5:]: v for k, v in list(globals().items()) if k.startswith("case_")}
+
+if __name__ == "__main__":
+    name = sys.argv[1]
+    CASES[name]()
+    print(f"CASE_OK {name}")

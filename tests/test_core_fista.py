@@ -1,0 +1,256 @@
+"""Core math tests: Gram identities, FISTA convergence/KKT, rounding,
+Algorithm-1 behaviour, baseline correctness."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gram as gram_lib
+from repro.core import fista as fista_lib
+from repro.core import baselines
+from repro.core.pruner import PrunerConfig, prune_operator, prune_with_method
+from repro.core.sparsity import (SparsitySpec, round_nm, round_unstructured,
+                                 round_to, satisfies, sparsity)
+
+
+def make_problem(m=24, n=32, p=256, seed=0, pruned_shift=0.05):
+    """Random operator + calibration activations (dense and pruned paths)."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(m, n)).astype(np.float32)
+    x = rng.normal(size=(n, p)).astype(np.float32)
+    xs = x + pruned_shift * rng.normal(size=(n, p)).astype(np.float32)
+    stats = gram_lib.init_stats(n)
+    # accumulate in two batches to exercise streaming
+    for sl in (slice(0, p // 2), slice(p // 2, p)):
+        stats = gram_lib.accumulate(
+            stats, x[:, sl].T, xs[:, sl].T, (w @ x[:, sl]).T)
+    return w, x, xs, stats
+
+
+class TestGram:
+    def test_error_identity(self):
+        """Gram-form error == direct Frobenius error (the key restructuring)."""
+        w, x, xs, stats = make_problem()
+        y = np.random.default_rng(1).normal(size=w.shape).astype(np.float32)
+        b = gram_lib.target_correlation(stats, jnp.asarray(w))
+        direct = np.linalg.norm(y @ xs - w @ x)
+        via_gram = float(gram_lib.frob_error(stats, jnp.asarray(y), b))
+        assert np.isclose(direct, via_gram, rtol=1e-4)
+
+    def test_streaming_matches_batch(self):
+        w, x, xs, stats = make_problem()
+        one = gram_lib.init_stats(x.shape[0])
+        one = gram_lib.accumulate(one, x.T, xs.T, (w @ x).T)
+        np.testing.assert_allclose(np.asarray(stats.G), np.asarray(one.G), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(stats.C), np.asarray(one.C), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(float(stats.h), float(one.h), rtol=1e-5)
+
+    def test_max_eigval_power_iteration(self):
+        rng = np.random.default_rng(0)
+        a = rng.normal(size=(40, 40)).astype(np.float32)
+        G = a @ a.T
+        got = float(gram_lib.max_eigval(jnp.asarray(G)))
+        want = float(np.linalg.eigvalsh(G).max())
+        assert np.isclose(got, want, rtol=1e-3)
+
+    def test_hdiag(self):
+        w, x, xs, stats = make_problem()
+        np.testing.assert_allclose(
+            np.asarray(stats.hdiag), (x ** 2).sum(axis=1), rtol=1e-4)
+
+
+class TestFista:
+    def test_kkt_optimality(self):
+        """FISTA solution satisfies LASSO KKT conditions (paper's guarantee)."""
+        w, x, xs, stats = make_problem(m=16, n=24, p=128)
+        b = gram_lib.target_correlation(stats, jnp.asarray(w))
+        lam = 5.0
+        y, k = fista_lib.solve(stats.G, b, jnp.asarray(w), lam,
+                               max_iters=4000, tol=1e-9)
+        res = float(fista_lib.kkt_residual(stats.G, b, y, lam))
+        scale = float(jnp.max(jnp.abs(b)))
+        assert res < 1e-2 * scale, f"KKT residual {res} too large (scale {scale})"
+
+    def test_objective_monotone_descent_envelope(self):
+        """Objective at the prox points decreases vs the warm start."""
+        w, x, xs, stats = make_problem()
+        b = gram_lib.target_correlation(stats, jnp.asarray(w))
+        lam = 10.0
+        y0 = jnp.zeros_like(jnp.asarray(w))
+        f0 = float(fista_lib.objective(stats.G, b, stats.h, y0, lam))
+        y, _ = fista_lib.solve(stats.G, b, y0, lam, max_iters=200)
+        f1 = float(fista_lib.objective(stats.G, b, stats.h, y, lam))
+        assert f1 < f0
+
+    def test_lam_zero_recovers_least_squares(self):
+        """lam=0 => unregularized LS; with X* = X the optimum is W itself."""
+        w, x, xs, stats = make_problem(pruned_shift=0.0)
+        b = gram_lib.target_correlation(stats, jnp.asarray(w))
+        y, _ = fista_lib.solve(stats.G, b, jnp.zeros_like(jnp.asarray(w)),
+                               0.0, max_iters=3000, tol=1e-10)
+        err = float(gram_lib.frob_error(stats, y, b))
+        wx = np.linalg.norm(w @ x)
+        assert err / wx < 1e-2
+
+    def test_soft_shrinkage(self):
+        x = jnp.asarray([-2.0, -0.5, 0.0, 0.5, 2.0])
+        out = np.asarray(fista_lib.soft_shrinkage(x, 1.0))
+        np.testing.assert_allclose(out, [-1.0, 0.0, 0.0, 0.0, 1.0])
+
+    def test_large_lam_kills_everything(self):
+        w, x, xs, stats = make_problem()
+        b = gram_lib.target_correlation(stats, jnp.asarray(w))
+        lam = float(jnp.max(jnp.abs(b))) * 10
+        y, _ = fista_lib.solve(stats.G, b, jnp.asarray(w), lam, max_iters=500)
+        assert float(sparsity(y)) > 0.99
+
+    def test_paper_momentum_variant_converges(self):
+        w, x, xs, stats = make_problem()
+        b = gram_lib.target_correlation(stats, jnp.asarray(w))
+        y, _ = fista_lib.solve(stats.G, b, jnp.asarray(w), 1.0,
+                               max_iters=500, momentum="paper")
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_stopping_criterion(self):
+        """Solver stops early when the iterate change drops below tol."""
+        w, x, xs, stats = make_problem(m=8, n=12, p=64)
+        b = gram_lib.target_correlation(stats, jnp.asarray(w))
+        _, k = fista_lib.solve(stats.G, b, jnp.asarray(w), 1e-3,
+                               max_iters=5000, tol=1e-4)
+        assert int(k) < 5000
+
+
+class TestRounding:
+    def test_unstructured_exact_count(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+        for ratio in (0.2, 0.5, 0.9):
+            out = round_unstructured(w, ratio)
+            k = round(ratio * w.size)  # exact count semantics
+            assert int((np.asarray(out) == 0).sum()) == k
+
+    def test_unstructured_keeps_largest(self):
+        w = jnp.asarray(np.arange(1, 101, dtype=np.float32).reshape(10, 10))
+        out = np.asarray(round_unstructured(w, 0.5))
+        assert (out[w >= 51] != 0).all() and (out[np.asarray(w) <= 50] == 0).all()
+
+    def test_nm_pattern(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+        out = round_nm(w, 2, 4)
+        assert satisfies(out, SparsitySpec(kind="nm", n=2, m=4))
+        g = np.asarray(out).reshape(8, 8, 4)
+        assert ((g != 0).sum(axis=-1) == 2).all()
+
+    def test_nm_keeps_group_largest(self):
+        w = jnp.asarray([[1.0, 3.0, 2.0, 4.0, -5.0, 0.1, 0.2, -6.0]])
+        out = np.asarray(round_nm(w, 2, 4))
+        np.testing.assert_allclose(out, [[0, 3, 0, 4, -5, 0, 0, -6]])
+
+    def test_nm_ties_deterministic(self):
+        w = jnp.asarray([[1.0, 1.0, 1.0, 1.0]])
+        out = np.asarray(round_nm(w, 2, 4))
+        np.testing.assert_allclose(out, [[1, 1, 0, 0]])  # lower index wins
+
+    def test_round_idempotent(self):
+        rng = np.random.default_rng(3)
+        w = jnp.asarray(rng.normal(size=(12, 24)).astype(np.float32))
+        for spec in (SparsitySpec(ratio=0.5), SparsitySpec(kind="nm", n=2, m=4)):
+            once = round_to(w, spec)
+            twice = round_to(once, spec)
+            np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+    def test_spec_parse(self):
+        assert SparsitySpec.parse("2:4").kind == "nm"
+        assert SparsitySpec.parse("50%").ratio == 0.5
+        assert SparsitySpec.parse("0.3").ratio == 0.3
+        assert np.isclose(SparsitySpec.parse("2:4").target_density, 0.5)
+
+
+class TestBaselines:
+    @pytest.mark.parametrize("spec", [SparsitySpec(ratio=0.5),
+                                      SparsitySpec(kind="nm", n=2, m=4)])
+    def test_all_hit_target(self, spec):
+        w, x, xs, stats = make_problem(m=16, n=32)
+        for method in ("magnitude", "wanda", "sparsegpt"):
+            y, err = prune_with_method(method, jnp.asarray(w), stats, spec)
+            assert satisfies(y, spec), method
+            assert err > 0
+
+    def test_wanda_equals_magnitude_when_isotropic(self):
+        """With identical column norms Wanda reduces to per-row magnitude."""
+        rng = np.random.default_rng(0)
+        m, n, p = 8, 16, 512
+        w = rng.normal(size=(m, n)).astype(np.float32)
+        x = rng.normal(size=(n, p)).astype(np.float32)
+        x = x / np.linalg.norm(x, axis=1, keepdims=True)  # unit rows
+        stats = gram_lib.init_stats(n)
+        stats = gram_lib.accumulate(stats, x.T, x.T, (w @ x).T)
+        got = np.asarray(baselines.wanda(jnp.asarray(w), stats, SparsitySpec(ratio=0.5)))
+        # per-row magnitude
+        keep = np.abs(w).argsort(axis=1)[:, n // 2:]
+        want = np.zeros_like(w)
+        for i in range(m):
+            want[i, keep[i]] = w[i, keep[i]]
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_sparsegpt_beats_magnitude(self):
+        """OBS compensation should beat plain magnitude on correlated data."""
+        w, x, xs, stats = make_problem(m=32, n=48, p=512, pruned_shift=0.0)
+        spec = SparsitySpec(ratio=0.5)
+        _, e_mag = prune_with_method("magnitude", jnp.asarray(w), stats, spec)
+        _, e_sgpt = prune_with_method("sparsegpt", jnp.asarray(w), stats, spec)
+        assert e_sgpt < e_mag
+
+    def test_sparsegpt_multiblock(self):
+        """Cross-block compensation path (n > blocksize)."""
+        w, x, xs, stats = make_problem(m=8, n=96, p=256, pruned_shift=0.0)
+        spec = SparsitySpec(ratio=0.5)
+        y = baselines.sparsegpt(jnp.asarray(w), stats, spec, blocksize=32)
+        assert satisfies(y, spec)
+        b = gram_lib.target_correlation(stats, jnp.asarray(w))
+        e = float(gram_lib.frob_error(stats, y, b))
+        _, e_mag = prune_with_method("magnitude", jnp.asarray(w), stats, spec)
+        assert e < e_mag
+
+
+class TestAlgorithm1:
+    @pytest.mark.parametrize("spec", [SparsitySpec(ratio=0.5),
+                                      SparsitySpec(kind="nm", n=2, m=4)])
+    def test_improves_on_warm_start(self, spec):
+        w, x, xs, stats = make_problem(m=24, n=32, p=512)
+        res = prune_operator(jnp.asarray(w), stats, spec,
+                             PrunerConfig(warm_start="wanda"))
+        assert satisfies(res.weight, spec)
+        assert res.error <= res.warm_error + 1e-6
+        assert res.outer_iters >= 1
+
+    def test_beats_baselines(self):
+        """The paper's headline ordering: fista < sparsegpt, wanda (output err)."""
+        w, x, xs, stats = make_problem(m=32, n=48, p=768, pruned_shift=0.0)
+        spec = SparsitySpec(ratio=0.5)
+        errs = {}
+        for method in ("magnitude", "wanda", "sparsegpt", "fista"):
+            _, errs[method] = prune_with_method(
+                method, jnp.asarray(w), stats, spec,
+                PrunerConfig(warm_start="wanda", eps=1e-6, max_outer=24))
+        assert errs["fista"] <= errs["wanda"] + 1e-5
+        assert errs["fista"] <= errs["magnitude"] + 1e-5
+
+    def test_sparsegpt_warm_start(self):
+        w, x, xs, stats = make_problem(m=16, n=24)
+        res = prune_operator(jnp.asarray(w), stats, SparsitySpec(ratio=0.5),
+                             PrunerConfig(warm_start="sparsegpt"))
+        assert satisfies(res.weight, SparsitySpec(ratio=0.5))
+
+    def test_terminates_within_bound(self):
+        w, x, xs, stats = make_problem()
+        cfg = PrunerConfig(max_outer=6, patience=2)
+        res = prune_operator(jnp.asarray(w), stats, SparsitySpec(ratio=0.5), cfg)
+        assert res.outer_iters <= 6
+
+    def test_zero_sparsity_noop(self):
+        w, x, xs, stats = make_problem(pruned_shift=0.0)
+        res = prune_operator(jnp.asarray(w), stats, SparsitySpec(ratio=0.0),
+                             PrunerConfig(warm_start="dense", max_outer=2))
+        assert res.error <= 1e-3 * np.linalg.norm(w @ x)

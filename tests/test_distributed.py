@@ -1,0 +1,27 @@
+"""Multi-device distribution tests.
+
+Each case runs in a subprocess with XLA_FLAGS forcing 8 host devices —
+the main pytest process keeps the single-device view (smoke tests and
+benches must see 1 device, per the dry-run contract).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+CASES = ["rowfista", "gram_psum", "sharded_train", "pipeline",
+         "compression", "ef_convergence", "moe_sharded"]
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "distributed_cases.py")
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_distributed_case(case):
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, SCRIPT, case], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"{case} failed:\n{out.stdout}\n{out.stderr}"
+    assert f"CASE_OK {case}" in out.stdout

@@ -1,0 +1,90 @@
+"""Dry-run machinery tests (reduced device count via subprocess)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(*args, devices="16"):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    env["REPRO_DRYRUN_DEVICES"] = devices
+    return subprocess.run([sys.executable, "-m", "repro.launch.dryrun", *args],
+                          env=env, capture_output=True, text=True, timeout=900,
+                          cwd=ROOT)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("stablelm-1.6b", "train_4k"),
+    ("mamba2-780m", "long_500k"),
+    ("whisper-base", "decode_32k"),
+])
+def test_cell_compiles_both_meshes(arch, shape, tmp_path):
+    out = _run_dryrun("--arch", arch, "--shape", shape, "--mesh", "both",
+                      "--out", str(tmp_path))
+    assert out.returncode == 0, out.stdout + out.stderr
+    for mesh in ("single", "multi"):
+        path = tmp_path / f"{mesh}__{arch}__{shape}.json"
+        rec = json.loads(path.read_text())
+        assert not rec["skipped"]
+        assert rec["flops_per_device"] > 0
+        assert rec["peak_bytes"] > 0
+        assert rec["collectives"]["total_bytes"] >= 0
+
+
+def test_skip_rule_applied(tmp_path):
+    out = _run_dryrun("--arch", "granite-20b", "--shape", "long_500k",
+                      "--mesh", "single", "--out", str(tmp_path))
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.loads((tmp_path / "single__granite-20b__long_500k.json").read_text())
+    assert rec["skipped"] and "full-attention" in rec["reason"]
+
+
+def test_extrapolated_costs_scale_with_depth(tmp_path):
+    """The extrapolated flops must be ~L x the scan-mode record."""
+    out = _run_dryrun("--arch", "stablelm-1.6b", "--shape", "prefill_32k",
+                      "--mesh", "single", "--out", str(tmp_path / "scan"))
+    assert out.returncode == 0, out.stderr
+    out = _run_dryrun("--arch", "stablelm-1.6b", "--shape", "prefill_32k",
+                      "--mesh", "single", "--out", str(tmp_path / "ex"),
+                      "--extrapolate")
+    assert out.returncode == 0, out.stderr
+    scan = json.loads((tmp_path / "scan" / "single__stablelm-1.6b__prefill_32k.json").read_text())
+    ex = json.loads((tmp_path / "ex" / "single__stablelm-1.6b__prefill_32k.json").read_text())
+    ratio = ex["flops_per_device"] / scan["flops_per_device"]
+    assert 8 <= ratio <= 40, ratio     # 24 layers, scan counted ~once
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ar = f32[4,64]{1,0} all-reduce(%x), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add
+  %ag = bf16[8,32]{1,0} all-gather(%y), replica_groups=[4,2]<=[8], dimensions={0}
+  %cp = f32[16]{0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    out = collective_bytes(hlo, 8)
+    assert out["counts"]["all-reduce"] == 1
+    assert out["counts"]["all-gather"] == 1
+    assert out["counts"]["collective-permute"] == 1
+    # all-reduce: 2*(4-1)/4 * 4*64*4B = 1536
+    assert abs(out["bytes_by_op"]["all-reduce"] - 1536.0) < 1e-6
+    # all-gather: (2-1)/2 * 8*32*2B = 256
+    assert abs(out["bytes_by_op"]["all-gather"] - 256.0) < 1e-6
+    assert out["bytes_by_op"]["collective-permute"] == 64.0
+
+
+def test_roofline_analyze():
+    from repro.launch.roofline import analyze
+    rec = {"skipped": False, "chips": 256, "flops_per_device": 197e12,
+           "bytes_per_device": 819e9 * 2, "model_flops_global": 197e12 * 256,
+           "collectives": {"total_bytes": 50e9 * 0.5},
+           "moe_flops_deflator": 1.0, "peak_bytes": 1e9}
+    a = analyze(rec)
+    assert a["dominant"] == "memory"
+    assert abs(a["compute_s"] - 1.0) < 1e-9
+    assert abs(a["memory_s"] - 2.0) < 1e-9
+    assert abs(a["roofline_fraction"] - 0.5) < 1e-9

@@ -1,0 +1,113 @@
+"""End-to-end paper validation at CPU scale (DESIGN.md §6).
+
+Trains a tiny member of the paper's own OPT family on the synthetic
+corpus, prunes with every method, and checks the MECHANISM claims:
+ordering, error-correction benefit, calibration-count flattening.
+Module-scoped fixtures keep total wall time down.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.core.pruner import PrunerConfig
+from repro.core.sequential import SequentialConfig, prune_model
+from repro.core.sparsity import SparsitySpec
+from repro.data import CalibConfig, CorpusConfig, MarkovCorpus, calibration_batches
+from repro.models.registry import model_def
+from repro.train import AdamWConfig, TrainConfig, Trainer, evaluate_ppl
+
+
+@pytest.fixture(scope="module")
+def trained():
+    from repro.configs.opt125m_proxy import tiny_config
+    cfg = tiny_config().replace(num_layers=3, d_model=96, d_ff=384,
+                                num_heads=4, num_kv_heads=4, vocab=256)
+    model = model_def(cfg)
+    corpus = MarkovCorpus(CorpusConfig(vocab=cfg.vocab, seed=13))
+    tr = Trainer(model, corpus, TrainConfig(
+        steps=200, batch=16, seq=48, log_every=100,
+        optim=AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=200)))
+    tr.run()
+    dense_ppl = evaluate_ppl(model, tr.params, corpus, 8, 48, 4)
+    calib = calibration_batches(corpus, CalibConfig(num_sequences=16,
+                                                    seq_len=48, batch_size=8))
+    return model, tr.params, corpus, calib, dense_ppl
+
+
+PRUNER = PrunerConfig(warm_start="sparsegpt", fista_iters=15, eps=1e-6,
+                      patience=2, max_outer=8)
+
+
+def _ppl(model, params, corpus):
+    return evaluate_ppl(model, params, corpus, 8, 48, 4)
+
+
+def test_dense_model_learned(trained):
+    model, params, corpus, calib, dense_ppl = trained
+    assert dense_ppl < 30, f"tiny model failed to learn (ppl {dense_ppl})"
+
+
+def test_paper_ordering_50pct(trained):
+    """Tables 1-2 claim: fista <= sparsegpt, wanda at 50% unstructured."""
+    model, params, corpus, calib, dense_ppl = trained
+    spec = SparsitySpec(ratio=0.5)
+    ppl = {}
+    for method in ("wanda", "sparsegpt", "fista"):
+        cfg = SequentialConfig(spec=spec, method=method, pruner=PRUNER)
+        pruned, _ = prune_model(model, params, calib, cfg)
+        ppl[method] = _ppl(model, pruned, corpus)
+    assert ppl["fista"] <= ppl["wanda"] * 1.02, ppl
+    assert ppl["fista"] <= ppl["sparsegpt"] * 1.02, ppl
+    assert ppl["fista"] < dense_ppl * 2.5, ppl
+
+
+def test_error_correction_helps_end_to_end(trained):
+    """Fig. 4a claim: intra-layer correction gives better (or equal) ppl.
+
+    NOTE the per-operator rel_error is NOT comparable across modes — the
+    'none' ablation measures error against dense inputs (an underestimate
+    of the deployed error), while 'intra' measures the true pruned-path
+    error.  The honest comparison is end-to-end perplexity.
+    """
+    model, params, corpus, calib, _ = trained
+    spec = SparsitySpec(ratio=0.65)
+    ppl = {}
+    for mode in ("intra", "none"):
+        cfg = SequentialConfig(spec=spec, method="fista", pruner=PRUNER,
+                               error_correction=mode)
+        pruned, _ = prune_model(model, params, calib, cfg)
+        ppl[mode] = _ppl(model, pruned, corpus)
+    assert ppl["intra"] <= ppl["none"] * 1.05, ppl
+
+
+def test_more_calibration_helps_then_flattens(trained):
+    """Fig. 4b claim: held-out ppl improves (or flattens) with more
+    calibration data.  (In-sample rel_error is not comparable across
+    calibration sets — ppl is the paper's metric.)"""
+    model, params, corpus, _, _ = trained
+    ppls = []
+    for n in (2, 24):
+        calib = calibration_batches(corpus, CalibConfig(
+            num_sequences=n, seq_len=48, batch_size=min(8, n)))
+        cfg = SequentialConfig(spec=SparsitySpec(ratio=0.6), method="fista",
+                               pruner=PRUNER)
+        pruned, _ = prune_model(model, params, calib, cfg)
+        ppls.append(_ppl(model, pruned, corpus))
+    assert ppls[-1] <= ppls[0] * 1.05, ppls
+
+
+def test_24_sparsity_pipeline_and_packing(trained):
+    """2:4 end-to-end: prune -> verify pattern -> pack -> identical decode."""
+    import jax.numpy as jnp
+    from repro.serve import Engine, ServeConfig, pack_tree
+    model, params, corpus, calib, _ = trained
+    cfg = SequentialConfig(spec=SparsitySpec(kind="nm", n=2, m=4),
+                           method="fista", pruner=PRUNER)
+    pruned, _ = prune_model(model, params, calib, cfg)
+    packed, stats = pack_tree(pruned)
+    assert stats["packed_ops"] >= model.cfg.num_layers * 4
+    assert stats["packed_bytes"] / stats["dense_bytes"] == pytest.approx(0.625)
+    prompt = jnp.asarray(next(corpus.batches(1, 8))[1][:, :8], jnp.int32)
+    a = Engine(model, pruned, ServeConfig(max_new_tokens=6)).generate(prompt)
+    b = Engine(model, packed, ServeConfig(max_new_tokens=6)).generate(prompt)
+    np.testing.assert_array_equal(a, b)

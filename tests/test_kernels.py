@@ -1,0 +1,155 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs ref.py."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.sparsity import round_nm
+from repro.kernels import fista_step, ref, round24, spmm24
+from repro.kernels import ops
+
+
+def rand(shape, dtype=np.float32, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.normal(size=shape) * scale).astype(np.float32)).astype(dtype)
+
+
+class TestFistaStepKernel:
+    @pytest.mark.parametrize("m,n", [(128, 128), (256, 384), (130, 200),
+                                     (512, 256), (64, 512), (1, 128)])
+    def test_matches_ref(self, m, n):
+        y = rand((m, n), seed=1)
+        a = rand((n, n), seed=2, scale=0.3)
+        G = a @ a.T
+        B = rand((m, n), seed=3)
+        inv_l, thresh = 0.01, 0.005
+        want = ref.fista_prox_step(y, G, B, inv_l, thresh)
+        got = fista_step.fista_prox_step(y, G, B, inv_l, thresh,
+                                         bm=128, bn=128, bk=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_blocksize_sweep(self):
+        y, B = rand((256, 256), seed=1), rand((256, 256), seed=3)
+        a = rand((256, 256), seed=2, scale=0.3)
+        G = a @ a.T
+        want = ref.fista_prox_step(y, G, B, 0.02, 0.01)
+        for bm, bn, bk in [(64, 64, 64), (128, 256, 128), (256, 256, 256)]:
+            got = fista_step.fista_prox_step(y, G, B, 0.02, 0.01,
+                                             bm=bm, bn=bn, bk=bk, interpret=True)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_solver_with_pallas_step(self):
+        """End-to-end: fista.solve(step_impl='pallas') == step_impl='jnp'."""
+        from repro.core import fista as fista_lib
+        m, n = 128, 160
+        y0 = rand((m, n), seed=5)
+        a = rand((n, n), seed=6, scale=0.2)
+        G = a @ a.T
+        B = rand((m, n), seed=7)
+        yj, kj = fista_lib.solve(G, B, y0, 0.5, max_iters=30, step_impl="jnp")
+        yp, kp = fista_lib.solve(G, B, y0, 0.5, max_iters=30, step_impl="pallas")
+        assert int(kj) == int(kp)
+        np.testing.assert_allclose(np.asarray(yp), np.asarray(yj), rtol=1e-3, atol=1e-3)
+
+
+class TestRound24Kernel:
+    @pytest.mark.parametrize("m,n", [(8, 32), (128, 512), (100, 260),
+                                     (256, 2048), (1, 64)])
+    def test_matches_ref(self, m, n):
+        w = rand((m, n), seed=m + n)
+        want = ref.round24(w)
+        got = round24.round24(w, bm=64, bn=128, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_matches_sparsity_module(self):
+        w = rand((64, 256), seed=9)
+        np.testing.assert_array_equal(
+            np.asarray(ref.round24(w)), np.asarray(round_nm(w, 2, 4)))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        w = rand((32, 128), seed=4).astype(dtype)
+        got = round24.round24(w, bm=32, bn=128, interpret=True)
+        want = ref.round24(w)
+        np.testing.assert_array_equal(np.asarray(got.astype(jnp.float32)),
+                                      np.asarray(want.astype(jnp.float32)))
+
+    def test_ties(self):
+        w = jnp.ones((4, 16), jnp.float32)
+        got = np.asarray(round24.round24(w, bm=4, bn=16, interpret=True))
+        g = got.reshape(4, 4, 4)
+        assert ((g != 0).sum(-1) == 2).all()
+        assert (g[..., :2] == 1).all() and (g[..., 2:] == 0).all()
+
+
+class TestPack24:
+    def test_pack_unpack_roundtrip(self):
+        w = ref.round24(rand((16, 64), seed=3))
+        vals, meta = ref.pack24(w)
+        assert vals.shape == (16, 32) and meta.shape == (16, 16) and meta.dtype == jnp.uint8
+        back = ref.unpack24(vals, meta, 64)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+    def test_pack_handles_sparser_groups(self):
+        w = jnp.zeros((2, 8), jnp.float32).at[0, 1].set(3.0)  # 1 nz in group
+        vals, meta = ref.pack24(w)
+        back = ref.unpack24(vals, meta, 8)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+    def test_storage_ratio(self):
+        """Packed bytes = 0.625x dense bf16 bytes (the decode roofline win)."""
+        m, n = 64, 256
+        w = ref.round24(rand((m, n), seed=1)).astype(jnp.bfloat16)
+        vals, meta = ref.pack24(w)
+        packed = vals.size * 2 + meta.size * 1
+        dense = m * n * 2
+        assert packed / dense == 0.625
+
+
+class TestSpmm24Kernel:
+    @pytest.mark.parametrize("B,m,n", [(1, 128, 256), (8, 256, 512),
+                                       (4, 130, 264), (128, 256, 256)])
+    def test_matches_ref(self, B, m, n):
+        w = ref.round24(rand((m, n), seed=m))
+        vals, meta = ref.pack24(w)
+        x = rand((B, n), seed=B + 1)
+        want = ref.spmm24(x, vals, meta, n)
+        got = spmm24.spmm24(x, vals, meta, n, bm=128, bk=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_equals_dense_matmul(self):
+        m, n = 256, 512
+        w = ref.round24(rand((m, n), seed=7))
+        vals, meta = ref.pack24(w)
+        x = rand((4, n), seed=8)
+        got = spmm24.spmm24(x, vals, meta, n, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w.T),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        m, n = 128, 256
+        w = ref.round24(rand((m, n), seed=2)).astype(dtype)
+        vals, meta = ref.pack24(w)
+        x = rand((2, n), seed=3).astype(dtype)
+        got = spmm24.spmm24(x, vals, meta, n, interpret=True)
+        want = ref.spmm24(x, vals, meta, n)
+        np.testing.assert_allclose(
+            np.asarray(got.astype(jnp.float32)), np.asarray(want.astype(jnp.float32)),
+            rtol=2e-2, atol=2e-2)
+
+
+class TestOpsDispatch:
+    def test_small_problems_use_ref(self):
+        y = rand((4, 8)); G = rand((8, 8)); B = rand((4, 8))
+        out = ops.fista_prox_step(y, G, B, 0.1, 0.01)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.fista_prox_step(y, G, B, 0.1, 0.01)))
+
+    def test_large_problems_use_pallas(self):
+        w = rand((128, 512), seed=1)
+        np.testing.assert_array_equal(np.asarray(ops.round24(w)),
+                                      np.asarray(ref.round24(w)))

@@ -1,0 +1,123 @@
+"""Hypothesis property tests on the system's core invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import fista as fista_lib
+from repro.core import gram as gram_lib
+from repro.core.sparsity import (SparsitySpec, mask_by_score, round_nm,
+                                 round_unstructured, satisfies)
+from repro.utils import tree as tree_lib
+
+F32 = st.floats(-10, 10, width=32, allow_nan=False, allow_infinity=False)
+
+
+def arr(shape):
+    return hnp.arrays(np.float32, shape, elements=F32)
+
+
+class TestSparsityProps:
+    @given(arr((6, 16)), st.sampled_from([0.0, 0.25, 0.5, 0.75]))
+    @settings(max_examples=30, deadline=None)
+    def test_unstructured_exact_and_subset(self, w, ratio):
+        out = np.asarray(round_unstructured(jnp.asarray(w), ratio))
+        assert int((out == 0).sum()) >= round(ratio * w.size)
+        nz = out != 0
+        assert np.array_equal(out[nz], w[nz])  # surviving values unchanged
+
+    @given(arr((4, 24)), st.sampled_from([(1, 4), (2, 4), (4, 8), (2, 8)]))
+    @settings(max_examples=30, deadline=None)
+    def test_nm_invariants(self, w, nm):
+        n, m = nm
+        out = np.asarray(round_nm(jnp.asarray(w), n, m))
+        spec = SparsitySpec(kind="nm", n=n, m=m)
+        assert satisfies(out, spec)
+        # kept magnitude per group >= any dropped magnitude
+        g = out.reshape(4, -1, m)
+        gw = w.reshape(4, -1, m)
+        kept_min = np.where(g != 0, np.abs(gw), np.inf).min(axis=-1)
+        dropped_max = np.where(g == 0, np.abs(gw), -np.inf).max(axis=-1)
+        assert (kept_min >= dropped_max - 1e-6).all()
+
+    @given(arr((5, 12)), st.sampled_from([0.25, 0.5]))
+    @settings(max_examples=20, deadline=None)
+    def test_mask_scores_keep_largest(self, score, ratio):
+        score = np.abs(score)
+        mask = np.asarray(mask_by_score(jnp.asarray(score), SparsitySpec(ratio=ratio)))
+        if mask.all() or (~mask).all():
+            return
+        assert score[mask].min() >= score[~mask].max() - 1e-6
+
+
+class TestShrinkageProps:
+    @given(arr((8, 8)), st.floats(0, 5, width=32))
+    @settings(max_examples=30, deadline=None)
+    def test_shrinkage_properties(self, x, rho):
+        out = np.asarray(fista_lib.soft_shrinkage(jnp.asarray(x), rho))
+        # nonexpansive, sign-preserving, kills |x|<=rho
+        assert (np.abs(out) <= np.abs(x) + 1e-6).all()
+        assert (out * x >= -1e-6).all()
+        assert (out[np.abs(x) <= rho] == 0).all()
+        # exact prox of rho*|.|: distance property
+        assert np.allclose(out, np.sign(x) * np.maximum(np.abs(x) - rho, 0), atol=1e-6)
+
+
+class TestGramProps:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_error_identity_random(self, seed):
+        rng = np.random.default_rng(seed)
+        m, n, p = 6, 10, 40
+        w = rng.normal(size=(m, n)).astype(np.float32)
+        x = rng.normal(size=(n, p)).astype(np.float32)
+        xs = x + 0.1 * rng.normal(size=(n, p)).astype(np.float32)
+        y = rng.normal(size=(m, n)).astype(np.float32)
+        stats = gram_lib.init_stats(n)
+        stats = gram_lib.accumulate(stats, x.T, xs.T, (w @ x).T)
+        b = gram_lib.target_correlation(stats, jnp.asarray(w))
+        direct = np.linalg.norm(y @ xs - w @ x) ** 2
+        via = float(gram_lib.frob_error_sq(stats, jnp.asarray(y), b))
+        assert np.isclose(direct, via, rtol=2e-3, atol=1e-3)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_merge_equals_joint(self, seed):
+        rng = np.random.default_rng(seed)
+        n, p = 8, 32
+        xa = rng.normal(size=(n, p)).astype(np.float32)
+        xb = rng.normal(size=(n, p)).astype(np.float32)
+        w = rng.normal(size=(4, n)).astype(np.float32)
+        sa = gram_lib.accumulate(gram_lib.init_stats(n), xa.T, xa.T, (w @ xa).T)
+        sb = gram_lib.accumulate(gram_lib.init_stats(n), xb.T, xb.T, (w @ xb).T)
+        joint = gram_lib.accumulate(sa, xb.T, xb.T, (w @ xb).T)
+        merged = gram_lib.merge(sa, sb)
+        np.testing.assert_allclose(np.asarray(merged.G), np.asarray(joint.G), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(float(merged.h), float(joint.h), rtol=1e-4)
+
+
+class TestTreeProps:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_set_get_roundtrip(self, seed):
+        rng = np.random.default_rng(seed)
+        tree = {"a": {"b": jnp.zeros((2,)), "c": jnp.ones((3,))}, "d": jnp.zeros(())}
+        val = jnp.asarray(rng.normal(size=(2,)).astype(np.float32))
+        new = tree_lib.set_path(tree, "a/b", val)
+        np.testing.assert_array_equal(np.asarray(tree_lib.get_path(new, "a/b")), np.asarray(val))
+        # untouched leaves shared
+        assert new["a"]["c"] is tree["a"]["c"]
+        assert new["d"] is tree["d"]
+
+    def test_stack_unstack(self):
+        trees = [{"w": jnp.full((2, 2), i)} for i in range(3)]
+        stacked = tree_lib.tree_stack(trees)
+        assert stacked["w"].shape == (3, 2, 2)
+        back = tree_lib.tree_unstack(stacked, 3)
+        for i in range(3):
+            np.testing.assert_array_equal(np.asarray(back[i]["w"]), np.asarray(trees[i]["w"]))
+
+    def test_flatten_deterministic(self):
+        tree = {"b": jnp.zeros((1,)), "a": {"z": jnp.ones((1,)), "y": jnp.zeros((2,))}}
+        paths = [p for p, _ in tree_lib.flatten_with_paths(tree)]
+        assert paths == sorted(paths)

@@ -1,0 +1,120 @@
+"""Scheduler fault-tolerance tests: retries, permanent failure, stragglers,
+checkpoint resume, worker elasticity."""
+import threading
+import time
+
+import pytest
+
+from repro.checkpoint import store
+from repro.core.scheduler import PruneScheduler, SchedulerConfig, UnitFailed
+
+
+def test_basic_completion():
+    done = []
+    s = PruneScheduler([f"u{i}" for i in range(8)],
+                       lambda u: done.append(u) or u.upper(),
+                       SchedulerConfig(workers=4))
+    res = s.run()
+    assert len(res) == 8 and res["u3"].payload == "U3"
+
+
+def test_retry_then_success():
+    attempts = {}
+    lock = threading.Lock()
+
+    def flaky(u):
+        with lock:
+            attempts[u] = attempts.get(u, 0) + 1
+            if u == "u1" and attempts[u] < 3:
+                raise RuntimeError("transient")
+        return u
+
+    s = PruneScheduler(["u0", "u1", "u2"], flaky,
+                       SchedulerConfig(workers=2, max_retries=3,
+                                       retry_backoff=0.01))
+    res = s.run()
+    assert len(res) == 3 and attempts["u1"] == 3
+    assert res["u1"].attempts == 3
+
+
+def test_permanent_failure_raises():
+    def bad(u):
+        if u == "u1":
+            raise RuntimeError("node died")
+        return u
+
+    s = PruneScheduler(["u0", "u1"], bad,
+                       SchedulerConfig(workers=2, max_retries=1,
+                                       retry_backoff=0.01))
+    with pytest.raises(UnitFailed):
+        s.run()
+
+
+def test_straggler_duplication():
+    """A unit stuck far beyond the median gets speculatively re-dispatched;
+    the duplicate finishes first."""
+    state = {"first_call": True}
+    lock = threading.Lock()
+
+    def work(u):
+        if u == "slow":
+            with lock:
+                first = state["first_call"]
+                state["first_call"] = False
+            if first:
+                time.sleep(30)       # the straggler (daemon thread; abandoned)
+                return "straggler"
+            return "duplicate"
+        time.sleep(0.02)
+        return "fast"
+
+    s = PruneScheduler(["a", "b", "c", "d", "slow"], work,
+                       SchedulerConfig(workers=3, straggler_factor=2.0,
+                                       straggler_min_wait=0.2))
+    t0 = time.perf_counter()
+    res = s.run()
+    assert time.perf_counter() - t0 < 20
+    assert res["slow"].payload == "duplicate"
+    assert "slow" in s.stats["duplicated"]
+
+
+def test_checkpoint_resume(tmp_path):
+    ran = []
+
+    def save(u, payload):
+        store.save(str(tmp_path), f"unit_{u}", {"x": payload})
+
+    def load(u):
+        import jax.numpy as jnp
+        tree, _ = store.load(str(tmp_path), f"unit_{u}",
+                             {"x": jnp.zeros((2,), jnp.float32)})
+        return tree["x"]
+
+    import jax.numpy as jnp
+
+    def work(u):
+        ran.append(u)
+        return jnp.ones((2,), jnp.float32) * int(u[1:])
+
+    # disable speculative duplication: an abandoned duplicate thread could
+    # append to `ran` after clear() under heavy CPU load
+    cfg = SchedulerConfig(workers=2, checkpoint_dir=str(tmp_path),
+                          straggler_min_wait=300.0)
+    PruneScheduler(["u0", "u1", "u2"], work, cfg, save, load).run()
+    assert sorted(ran) == ["u0", "u1", "u2"]
+
+    ran.clear()
+    res = PruneScheduler(["u0", "u1", "u2", "u3"], work, cfg, save, load).run()
+    assert ran == ["u3"], "only the new unit should run"
+    assert float(res["u2"].payload[0]) == 2.0
+
+
+def test_elastic_worker_counts_agree():
+    def work(u):
+        return hash(u) % 97
+
+    for workers in (1, 2, 5):
+        res = PruneScheduler([f"u{i}" for i in range(6)], work,
+                             SchedulerConfig(workers=workers)).run()
+        assert {k: v.payload for k, v in res.items()} == \
+               {f"u{i}": hash(f"u{i}") % 97 for i in range(6)}

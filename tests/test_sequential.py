@@ -1,0 +1,151 @@
+"""Intra-layer error correction + whole-model pruning pipeline tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import sequential as seq_lib
+from repro.core.driver import parallel_prune
+from repro.core.pruner import PrunerConfig
+from repro.core.scheduler import SchedulerConfig
+from repro.core.sequential import SequentialConfig, prune_model, unit_output_error
+from repro.core.sparsity import SparsitySpec, satisfies
+from repro.data import CalibConfig, CorpusConfig, MarkovCorpus, calibration_batches
+from repro.models.registry import load_arch, model_def
+from repro.utils.tree import flatten_with_paths, get_path
+
+
+def tiny_model(seed=0):
+    from repro.configs.opt125m_proxy import tiny_config
+    cfg = tiny_config().replace(num_layers=2, d_model=64, d_ff=128,
+                                num_heads=4, num_kv_heads=4, vocab=128)
+    model = model_def(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    corpus = MarkovCorpus(CorpusConfig(vocab=cfg.vocab, seed=5))
+    calib = calibration_batches(corpus, CalibConfig(num_sequences=8, seq_len=32,
+                                                    batch_size=4))
+    return model, params, corpus, calib
+
+
+FAST = PrunerConfig(fista_iters=8, max_outer=6, patience=2, eps=1e-4)
+
+
+def _check_sparsity(model, params, spec):
+    """Every prunable operator satisfies the spec."""
+    for u in model.units():
+        up = seq_lib._unit_params_of(params, u)
+        for group in u.groups:
+            for key in group:
+                w = seq_lib.get_weight(up, key)
+                assert satisfies(np.asarray(w, np.float32).T, spec), (u.name, key)
+
+
+class TestPruneModel:
+    @pytest.mark.parametrize("spec", [SparsitySpec(ratio=0.5),
+                                      SparsitySpec(kind="nm", n=2, m=4)])
+    def test_fista_pipeline(self, spec):
+        model, params, corpus, calib = tiny_model()
+        cfg = SequentialConfig(spec=spec, pruner=FAST, method="fista")
+        new_params, reports = prune_model(model, params, calib, cfg)
+        _check_sparsity(model, new_params, spec)
+        assert len(reports) == len(model.units()) * sum(
+            len(g) for g in model.units()[0].groups)
+        assert all(np.isfinite(r.error) for r in reports)
+        # embeddings / norms untouched (paper excludes them)
+        np.testing.assert_array_equal(np.asarray(new_params["embed"]),
+                                      np.asarray(params["embed"]))
+
+    def test_baseline_methods(self):
+        model, params, corpus, calib = tiny_model()
+        for method in ("magnitude", "wanda", "sparsegpt"):
+            cfg = SequentialConfig(spec=SparsitySpec(ratio=0.5), method=method)
+            new_params, reports = prune_model(model, params, calib, cfg)
+            _check_sparsity(model, new_params, SparsitySpec(ratio=0.5))
+
+    def test_error_correction_helps(self):
+        """Fig. 4a analog at operator level: mean relative output error of
+        pruned operators is lower WITH intra-layer correction."""
+        model, params, corpus, calib = tiny_model()
+        spec = SparsitySpec(ratio=0.6)
+        errs = {}
+        for mode in ("intra", "none"):
+            cfg = SequentialConfig(spec=spec, pruner=FAST, method="fista",
+                                   error_correction=mode)
+            pruned, _ = prune_model(model, params, calib, cfg)
+            # end metric: unit output error of the LAST unit wrt dense
+            u = model.units()[-1]
+            states = [model.embed(params, b) for b in calib]
+            # relay both to the last unit input on the dense path
+            for spec_u in model.units()[:-1]:
+                fwd = seq_lib._capture_forward(model, spec_u)
+                du = seq_lib._unit_params_of(params, spec_u)
+                states = [fwd(du, s)[0] for s in states]
+            errs[mode] = unit_output_error(
+                model, u, seq_lib._unit_params_of(params, u),
+                seq_lib._unit_params_of(pruned, u), states)
+        assert errs["intra"] <= errs["none"] * 1.05, errs
+
+    def test_full_correction_mode_runs(self):
+        model, params, corpus, calib = tiny_model()
+        cfg = SequentialConfig(spec=SparsitySpec(ratio=0.5), pruner=FAST,
+                               method="fista", error_correction="full")
+        new_params, reports = prune_model(model, params, calib, cfg)
+        _check_sparsity(model, new_params, SparsitySpec(ratio=0.5))
+
+    def test_moe_units(self):
+        d = load_arch("qwen2-moe-a2.7b", smoke=True)
+        params = d.init(jax.random.PRNGKey(0))
+        corpus = MarkovCorpus(CorpusConfig(vocab=d.cfg.vocab, seed=2))
+        calib = calibration_batches(corpus, CalibConfig(num_sequences=4,
+                                                        seq_len=16, batch_size=2))
+        cfg = SequentialConfig(spec=SparsitySpec(ratio=0.5), pruner=FAST,
+                               method="wanda")
+        units = d.units()[:1]
+        new_params, reports = prune_model(d, params, calib, cfg, units=units)
+        keys = {r.key for r in reports}
+        assert any("expert" in k for k in keys)
+        assert any("shared" in k for k in keys)
+        # router stays dense (excluded like embeddings)
+        r0 = get_path(new_params, "layers/moe/router")[0]
+        assert float((np.asarray(r0) == 0).mean()) < 0.4
+
+
+class TestParallelDriver:
+    def test_parallel_equals_serial(self):
+        model, params, corpus, calib = tiny_model()
+        cfg = SequentialConfig(spec=SparsitySpec(ratio=0.5), pruner=FAST,
+                               method="wanda")
+        serial, _ = prune_model(model, params, calib, cfg)
+        par, _, stats = parallel_prune(model, params, calib, cfg,
+                                       SchedulerConfig(workers=3))
+        for (pa, a), (pb, b) in zip(flatten_with_paths(serial),
+                                    flatten_with_paths(par)):
+            assert pa == pb
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32), atol=1e-5,
+                                       err_msg=pa)
+
+    def test_resume_from_unit_checkpoints(self, tmp_path):
+        model, params, corpus, calib = tiny_model()
+        cfg = SequentialConfig(spec=SparsitySpec(ratio=0.5), pruner=FAST,
+                               method="wanda")
+        sched = SchedulerConfig(workers=2, checkpoint_dir=str(tmp_path))
+        a, _, _ = parallel_prune(model, params, calib, cfg, sched)
+        # second run must resume all units (0 fresh computations)
+        calls = []
+        import repro.core.driver as drv
+        orig = seq_lib.prune_unit
+
+        def counting(*args, **kw):
+            calls.append(1)
+            return orig(*args, **kw)
+
+        seq_lib.prune_unit, b = counting, None
+        try:
+            b, _, _ = parallel_prune(model, params, calib, cfg, sched)
+        finally:
+            seq_lib.prune_unit = orig
+        assert not calls, "expected full resume from unit checkpoints"
+        for (pa, x), (pb, y) in zip(flatten_with_paths(a), flatten_with_paths(b)):
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32), atol=1e-6)
