@@ -1,0 +1,125 @@
+"""Solver-throughput benchmark: host-loop vs fused vs group-batched.
+
+Times Algorithm 1 over one transformer pruning unit (all four operator
+groups of a decoder layer) under the three outer-loop implementations:
+
+* ``host``        — the seed's host-Python outer loop (one device sync
+                    per outer iteration per operator);
+* ``fused``       — device-resident ``lax.while_loop`` (one dispatch per
+                    operator);
+* ``fused-group`` — fused + vmap over same-shape group peers (one
+                    dispatch per shape-subgroup).
+
+Unlike the kernel microbenchmarks, wall-clock is meaningful here on any
+backend: the fused path removes host<->device round trips, which cost on
+CPU exactly as they do on TPU.  Each variant is run once to compile and
+then timed, so the numbers compare steady-state solves.
+
+Writes ``BENCH_prune.json`` at the repo root (and a copy under
+``experiments/bench/``) so the perf trajectory is tracked from PR to PR.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+import jax
+
+from repro.core.pruner import PrunerConfig
+from repro.core.sequential import SequentialConfig, prune_model
+from repro.core.sparsity import SparsitySpec
+from repro.data import CalibConfig, CorpusConfig, MarkovCorpus, calibration_batches
+from repro.models.registry import model_def
+
+OUT_PATH = "BENCH_prune.json"
+
+
+def _unit_problem(d_model: int = 64, d_ff: int = 128, seed: int = 0):
+    from repro.configs.opt125m_proxy import tiny_config
+    cfg = tiny_config().replace(num_layers=1, d_model=d_model, d_ff=d_ff,
+                                num_heads=4, num_kv_heads=4, vocab=128)
+    model = model_def(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    corpus = MarkovCorpus(CorpusConfig(vocab=cfg.vocab, seed=7))
+    calib = calibration_batches(corpus, CalibConfig(num_sequences=8, seq_len=32,
+                                                    batch_size=4))
+    return model, params, calib
+
+
+def _variants(base: PrunerConfig) -> Dict[str, PrunerConfig]:
+    import dataclasses
+    return {
+        "host": dataclasses.replace(base, outer_impl="host"),
+        "fused": dataclasses.replace(base, outer_impl="fused",
+                                     group_batch=False),
+        "fused-group": dataclasses.replace(base, outer_impl="fused",
+                                           group_batch=True),
+    }
+
+
+def bench_prune_impls(d_model: int = 64, d_ff: int = 128, repeats: int = 5,
+                      out_path: str = OUT_PATH) -> List[Dict]:
+    model, params, calib = _unit_problem(d_model, d_ff)
+    # paper-default solver depth (K=20), deep enough that the solve — the
+    # phase this PR moves on-device — dominates the unit wall-clock
+    base = PrunerConfig(fista_iters=20, max_outer=12, patience=3, eps=1e-6)
+    rows: List[Dict] = []
+    for spec in (SparsitySpec(ratio=0.5), SparsitySpec(kind="nm", n=2, m=4)):
+        for name, pruner in _variants(base).items():
+            cfg = SequentialConfig(spec=spec, pruner=pruner, method="fista")
+            prune_model(model, params, calib, cfg)          # compile
+            times, solver_times, reports = [], [], []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                _, reports = prune_model(model, params, calib, cfg)
+                times.append(time.perf_counter() - t0)
+                solver_times.append(sum(r.seconds for r in reports))
+            rows.append({
+                "impl": name, "sparsity": str(spec),
+                "d_model": d_model, "d_ff": d_ff,
+                "unit_seconds": min(times),
+                "solver_seconds": min(solver_times),
+                "operators": len(reports),
+                "batched_operators": sum(1 for r in reports
+                                         if r.solver == "fused-group"),
+                "mean_rel_err": (sum(r.rel_error for r in reports)
+                                 / max(len(reports), 1)),
+            })
+            print(f"{name:>12} {spec}: unit {min(times)*1e3:8.1f} ms  "
+                  f"solver {min(solver_times)*1e3:8.1f} ms  "
+                  f"({rows[-1]['batched_operators']}/{len(reports)} batched)")
+
+    summary = _summarize(rows)
+    payload = {"rows": rows, "summary": summary,
+               "backend": jax.default_backend()}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    from benchmarks import common
+    common.write_result("prune_bench", payload)
+    print(f"\nwrote {out_path}; speedup vs host-loop: "
+          + "  ".join(f"{k}={v:.2f}x" for k, v in sorted(summary.items())))
+    return rows
+
+
+def _summarize(rows: List[Dict]) -> Dict[str, float]:
+    """Host-loop time / variant time (>1 means the variant wins), averaged
+    over sparsities, for both unit wall-clock and the solver phase."""
+    out: Dict[str, float] = {}
+    for impl in ("fused", "fused-group"):
+        for metric in ("unit_seconds", "solver_seconds"):
+            ratios = []
+            for row in rows:
+                if row["impl"] != impl:
+                    continue
+                host = next(r for r in rows if r["impl"] == "host"
+                            and r["sparsity"] == row["sparsity"])
+                ratios.append(host[metric] / max(row[metric], 1e-12))
+            key = f"{impl}_{metric.removesuffix('_seconds')}"
+            out[key] = sum(ratios) / max(len(ratios), 1)
+    return out
+
+
+def run_all() -> List[Dict]:
+    print("\n== Prune solver bench (host vs fused vs group-batched) ==")
+    return bench_prune_impls()

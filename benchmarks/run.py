@@ -22,11 +22,11 @@ def main() -> None:
                     help="more training steps + wider sweeps")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,ptbc4,fig3,fig4a,"
-                         "fig4b,seeds,kernels")
+                         "fig4b,seeds,kernels,prune")
     args = ap.parse_args()
 
     steps = 500 if args.full else 300
-    from benchmarks import figures, kernel_bench, tables
+    from benchmarks import figures, kernel_bench, prune_bench, tables
 
     registry = {
         "table1": lambda: tables.table1_opt_family(steps),
@@ -42,6 +42,7 @@ def main() -> None:
         "seeds": lambda: figures.seed_sensitivity(
             steps, seeds=(0, 1, 2, 3, 4) if args.full else (0, 1, 2)),
         "kernels": kernel_bench.run_all,
+        "prune": prune_bench.run_all,
     }
     names = args.only.split(",") if args.only else list(registry)
 

@@ -2,10 +2,12 @@
 baselines, intra-layer error correction and the layer-unit scheduler."""
 from repro.core.gram import GramStats, accumulate, init_stats, frob_error, target_correlation
 from repro.core.sparsity import SparsitySpec, round_to
-from repro.core.pruner import PruneResult, PrunerConfig, prune_operator, prune_with_method
+from repro.core.pruner import (PruneResult, PrunerConfig, prune_group,
+                               prune_operator, prune_with_method)
 
 __all__ = [
     "GramStats", "accumulate", "init_stats", "frob_error", "target_correlation",
     "SparsitySpec", "round_to",
-    "PruneResult", "PrunerConfig", "prune_operator", "prune_with_method",
+    "PruneResult", "PrunerConfig", "prune_group", "prune_operator",
+    "prune_with_method",
 ]

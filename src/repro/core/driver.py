@@ -66,18 +66,24 @@ def parallel_prune(model: ModelDef, params: Any, calib_batches: Sequence[Dict],
         pruned_unit, reports, _ = seq_lib.prune_unit(
             model, spec, dense_unit, dense_states, pruned_states, cfg)
         return {"unit_params": pruned_unit,
-                "reports": [dataclasses.asdict(r) for r in reports]}
+                "reports": [dataclasses.asdict(r) for r in reports],
+                "solver": {"outer_impl": cfg.pruner.outer_impl,
+                           "group_batch": cfg.pruner.group_batch,
+                           "batched_ops": sum(1 for r in reports
+                                              if r.solver == "fused-group")}}
 
     def save_payload(name: str, payload: Dict) -> None:
         store.save(sched.checkpoint_dir, f"unit_{name}",
                    {"unit_params": payload["unit_params"]},
-                   extra={"reports": payload["reports"]})
+                   extra={"reports": payload["reports"],
+                          "solver": payload.get("solver", {})})
 
     def load_payload(name: str) -> Dict:
         spec = units[name]
         like = {"unit_params": seq_lib._unit_params_of(params, spec)}
         tree, extra = store.load(sched.checkpoint_dir, f"unit_{name}", like)
-        return {"unit_params": tree["unit_params"], "reports": extra["reports"]}
+        return {"unit_params": tree["unit_params"], "reports": extra["reports"],
+                "solver": extra.get("solver", {})}
 
     has_store = sched.checkpoint_dir is not None
     scheduler = PruneScheduler(

@@ -121,13 +121,25 @@ def target_correlation(stats: GramStats, w_dense: jnp.ndarray) -> jnp.ndarray:
     return w_dense.astype(jnp.float32) @ stats.C
 
 
+def frob_error_sq_gh(G: jnp.ndarray, h: jnp.ndarray, y: jnp.ndarray,
+                     b: jnp.ndarray) -> jnp.ndarray:
+    """Raw-array form of :func:`frob_error_sq` — usable inside fused loops
+    (core/pruner.py's device-resident Algorithm 1) without a GramStats."""
+    yf = y.astype(jnp.float32)
+    quad = jnp.sum((yf @ G) * yf)
+    cross = jnp.sum(yf * b)
+    return jnp.maximum(quad - 2.0 * cross + h, 0.0)
+
+
+def frob_error_gh(G: jnp.ndarray, h: jnp.ndarray, y: jnp.ndarray,
+                  b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sqrt(frob_error_sq_gh(G, h, y, b))
+
+
 @jax.jit
 def frob_error_sq(stats: GramStats, y: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """||Y X* - W X||_F^2 = <Y G, Y> - 2 <Y, B> + h  (clamped at 0)."""
-    yf = y.astype(jnp.float32)
-    quad = jnp.sum((yf @ stats.G) * yf)
-    cross = jnp.sum(yf * b)
-    return jnp.maximum(quad - 2.0 * cross + stats.h, 0.0)
+    return frob_error_sq_gh(stats.G, stats.h, y, b)
 
 
 def frob_error(stats: GramStats, y: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

@@ -13,15 +13,27 @@ Per operator (paper Sec. 3.3/3.4):
         bisect lam on [0, 1e6] by E_round/E_total vs xi=0.3
     until t >= T or E_stop < eps
 
-The outer loop is host Python (a handful of iterations); the FISTA solve,
-rounding, and error evaluations are jitted Gram-form computations, so the
-inner work never leaves the device.
+Two implementations of the outer loop are provided:
+
+* ``outer_impl="fused"`` (default) — the whole of Algorithm 1 (FISTA solve,
+  rounding, error evaluations, patience/eps stop, lambda bisection) is one
+  ``lax.while_loop`` inside a single jitted computation: zero per-iteration
+  host<->device syncs.  :func:`prune_group` additionally ``vmap``s the fused
+  loop across all same-shape operators of a pruning group, so one dispatch
+  solves e.g. wq/wk/wv or every MoE expert's gate+up at once.
+* ``outer_impl="host"`` — the reference host-Python loop (one device sync
+  per outer iteration).  Kept as the equivalence oracle for tests and for
+  step-by-step debugging.
+
+Both implementations run the same math; see DESIGN.md §3.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Union
+from functools import partial
+from typing import List, NamedTuple, Optional, Sequence, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -52,6 +64,8 @@ class PrunerConfig:
     warm_start: str = "wanda"      # wanda | sparsegpt | magnitude | dense
     momentum: str = "fista"        # fista | paper  (see core/fista.py)
     step_impl: str = "jnp"         # jnp | pallas
+    outer_impl: str = "fused"      # fused (device-resident) | host (reference)
+    group_batch: bool = True       # vmap same-shape operators of a group
 
 
 @dataclasses.dataclass
@@ -80,6 +94,129 @@ def _warm_start(name_or_w: Union[str, jnp.ndarray], w: jnp.ndarray,
     raise ValueError(f"unknown warm start {name_or_w!r}")
 
 
+# ---------------------------------------------------------------------------
+# fused device-resident outer loop
+# ---------------------------------------------------------------------------
+class OuterState(NamedTuple):
+    """while_loop carry of the fused Algorithm 1 (all device arrays)."""
+
+    w_best: jnp.ndarray   # (m, n) best feasible candidate so far
+    e_best: jnp.ndarray   # scalar ||W_best X* - W X||_F
+    lam: jnp.ndarray      # current lambda
+    lo: jnp.ndarray       # bisection bracket
+    hi: jnp.ndarray
+    t: jnp.ndarray        # int32 patience counter
+    e_stop: jnp.ndarray   # last relative improvement (inf until first)
+    k: jnp.ndarray        # int32 outer iterations executed
+    inner: jnp.ndarray    # int32 total FISTA iterations
+
+
+def _fused_outer(G: jnp.ndarray, B: jnp.ndarray, h: jnp.ndarray,
+                 w0: jnp.ndarray, L: jnp.ndarray, spec: SparsitySpec,
+                 cfg: PrunerConfig) -> tuple:
+    """Algorithm 1 as one XLA computation.  Returns (OuterState, warm_error).
+
+    Branches of the host loop become ``jnp.where`` selects; the stopping
+    rule (t >= T or E_stop < eps, checked after the bisection update)
+    becomes the while_loop condition.  Trip count, bisection trajectory and
+    accepted candidates match the host reference exactly up to fp32
+    round-off of the lambda midpoints.
+    """
+    w0 = round_to(w0.astype(jnp.float32), spec)  # feasible warm start
+    e0 = gram_lib.frob_error_gh(G, h, w0, B)
+    state = OuterState(
+        w_best=w0, e_best=e0,
+        lam=jnp.float32(cfg.lam_init), lo=jnp.float32(cfg.lam_lo),
+        hi=jnp.float32(cfg.lam_hi), t=jnp.int32(0),
+        e_stop=jnp.float32(jnp.inf), k=jnp.int32(0),
+        inner=jnp.int32(0))
+
+    def cond(s: OuterState):
+        return (s.k < cfg.max_outer) & (s.t < cfg.patience) & (s.e_stop >= cfg.eps)
+
+    def body(s: OuterState) -> OuterState:
+        w_k, iters = fista_lib.solve(
+            G, B, s.w_best, s.lam, L=L, max_iters=cfg.fista_iters,
+            tol=cfg.fista_tol, momentum=cfg.momentum, step_impl=cfg.step_impl)
+        w_k1 = round_to(w_k, spec)
+        e_fista = gram_lib.frob_error_gh(G, h, w_k, B)
+        e_total = gram_lib.frob_error_gh(G, h, w_k1, B)
+        e_round = e_total - e_fista
+
+        improved = e_total < s.e_best
+        e_stop = jnp.where(
+            improved, (s.e_best - e_total) / jnp.maximum(s.e_best, 1e-30),
+            s.e_stop)
+        w_best = jnp.where(improved, w_k1, s.w_best)
+        e_best = jnp.where(improved, e_total, s.e_best)
+        t = jnp.where(improved, jnp.int32(0), s.t + 1)
+
+        # bisection on lambda driven by the rounding-error share (Sec. 3.3):
+        # high share => FISTA solution not sparse enough => raise lambda.
+        ratio = e_round / jnp.maximum(e_total, 1e-30)
+        raise_lam = ratio > cfg.xi
+        lo = jnp.where(raise_lam, s.lam, s.lo)
+        hi = jnp.where(raise_lam, s.hi, s.lam)
+        lam = 0.5 * (lo + hi)
+        return OuterState(w_best, e_best, lam, lo, hi, t, e_stop,
+                          s.k + 1, s.inner + iters.astype(jnp.int32))
+
+    return jax.lax.while_loop(cond, body, state), e0
+
+
+def _solve_one(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
+               cfg: PrunerConfig, warm: str) -> tuple:
+    """Warm start + fused Algorithm 1 for one operator (trace-level)."""
+    w = w.astype(jnp.float32)
+    B = gram_lib.target_correlation(stats, w)
+    L = gram_lib.max_eigval(stats.G) * 1.01
+    w0 = _warm_start(warm, w, stats, spec)
+    return _fused_outer(stats.G, B, stats.h, w0, L, spec, cfg)
+
+
+@partial(jax.jit, static_argnames=("spec", "cfg", "warm"))
+def _fused_single(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
+                  cfg: PrunerConfig, warm: str) -> tuple:
+    return _solve_one(w, stats, spec, cfg, warm)
+
+
+@partial(jax.jit, static_argnames=("spec", "cfg"))
+def _fused_single_warm(w: jnp.ndarray, stats: GramStats, w0: jnp.ndarray,
+                       spec: SparsitySpec, cfg: PrunerConfig) -> tuple:
+    """Fused solve with an explicitly provided (array) warm start."""
+    w = w.astype(jnp.float32)
+    B = gram_lib.target_correlation(stats, w)
+    L = gram_lib.max_eigval(stats.G) * 1.01
+    return _fused_outer(stats.G, B, stats.h, w0.astype(jnp.float32), L, spec, cfg)
+
+
+@partial(jax.jit, static_argnames=("spec", "cfg", "warm"))
+def _fused_group(ws: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
+                 cfg: PrunerConfig, warm: str) -> tuple:
+    """vmap of the fused Algorithm 1 over stacked same-shape operators.
+
+    ``ws`` (k, m, n); every GramStats leaf carries a leading k axis.  JAX's
+    while_loop batching keeps converged lanes frozen (select on the batched
+    predicate), so each lane's trajectory is identical to its unbatched
+    solve while the whole group is one dispatch.
+    """
+    return jax.vmap(lambda w, st: _solve_one(w, st, spec, cfg, warm))(ws, stats)
+
+
+def _make_result(weight, e_best: float, lam: float, outer: int, inner: int,
+                 warm_error: float, stats_h: float) -> PruneResult:
+    wx_norm = float(np.sqrt(max(stats_h, 1e-30)))
+    return PruneResult(
+        weight=weight, error=e_best, rel_error=e_best / max(wx_norm, 1e-30),
+        lam=lam, outer_iters=outer, fista_iters=inner, warm_error=warm_error)
+
+
+def _result_from_outer(out: OuterState, e0, w_dtype, stats_h: float) -> PruneResult:
+    return _make_result(out.w_best.astype(w_dtype), float(out.e_best),
+                        float(out.lam), int(out.k), int(out.inner), float(e0),
+                        stats_h)
+
+
 def prune_operator(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
                    cfg: PrunerConfig = PrunerConfig(),
                    warm: Optional[Union[str, jnp.ndarray]] = None) -> PruneResult:
@@ -88,6 +225,77 @@ def prune_operator(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
     ``stats`` must hold the Gram statistics accumulated with this operator's
     dense/pruned calibration activations (see core/gram.py).
     """
+    w = jnp.asarray(w, jnp.float32)
+    if cfg.outer_impl == "host":
+        return _prune_operator_host(w, stats, spec, cfg, warm)
+    if cfg.outer_impl != "fused":
+        raise ValueError(f"unknown outer_impl {cfg.outer_impl!r}")
+    warm_in = cfg.warm_start if warm is None else warm
+    if isinstance(warm_in, str):
+        out, e0 = _fused_single(w, stats, spec, cfg, warm_in)
+    else:
+        out, e0 = _fused_single_warm(w, stats, jnp.asarray(warm_in, jnp.float32),
+                                     spec, cfg)
+    return _result_from_outer(out, e0, w.dtype, float(stats.h))
+
+
+def prune_group(ws: Union[jnp.ndarray, Sequence[jnp.ndarray]],
+                stats: Union[GramStats, Sequence[GramStats]],
+                spec: SparsitySpec, cfg: PrunerConfig = PrunerConfig(),
+                warm: Optional[str] = None) -> List[PruneResult]:
+    """Prune a whole group of SAME-SHAPE operators in one batched dispatch.
+
+    ``ws`` is either a stacked (k, m, n) array or a sequence of (m, n)
+    operators; ``stats`` the matching stacked GramStats (leaves with a
+    leading k axis) or a sequence of per-operator GramStats.  Only string
+    warm starts are supported (the warm start is computed inside the
+    batched computation).  Heterogeneous groups must be partitioned by
+    shape before calling (core/sequential.py does this automatically).
+
+    With ``cfg.outer_impl == "host"`` this falls back to per-operator
+    host-loop solves — the equivalence oracle for the batched path.
+    """
+    if isinstance(ws, (list, tuple)):
+        shapes = {tuple(jnp.asarray(w).shape) for w in ws}
+        if len(shapes) != 1:
+            raise ValueError(f"prune_group needs same-shape operators, got {shapes}")
+        ws = jnp.stack([jnp.asarray(w, jnp.float32) for w in ws])
+    else:
+        ws = jnp.asarray(ws, jnp.float32)
+    if isinstance(stats, (list, tuple)):
+        stats = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stats)
+    warm_name = cfg.warm_start if warm is None else warm
+    if not isinstance(warm_name, str):
+        raise ValueError("prune_group supports only string warm starts")
+
+    if cfg.outer_impl == "host":
+        from repro.utils.tree import tree_index
+        return [_prune_operator_host(ws[i], tree_index(stats, i), spec, cfg,
+                                     warm_name)
+                for i in range(ws.shape[0])]
+    if cfg.outer_impl != "fused":
+        raise ValueError(f"unknown outer_impl {cfg.outer_impl!r}")
+
+    out, e0 = _fused_group(ws, stats, spec, cfg, warm_name)
+    # one host sync for the whole group
+    h_np = np.asarray(stats.h, np.float32)
+    e_best = np.asarray(out.e_best, np.float32)
+    lam = np.asarray(out.lam, np.float32)
+    outer = np.asarray(out.k, np.int32)
+    inner = np.asarray(out.inner, np.int32)
+    warm_err = np.asarray(e0, np.float32)
+    return [_make_result(out.w_best[i], float(e_best[i]), float(lam[i]),
+                         int(outer[i]), int(inner[i]), float(warm_err[i]),
+                         float(h_np[i]))
+            for i in range(ws.shape[0])]
+
+
+# ---------------------------------------------------------------------------
+# host-loop reference (the seed implementation, kept as the oracle)
+# ---------------------------------------------------------------------------
+def _prune_operator_host(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
+                         cfg: PrunerConfig,
+                         warm: Optional[Union[str, jnp.ndarray]] = None) -> PruneResult:
     w = jnp.asarray(w, jnp.float32)
     B = gram_lib.target_correlation(stats, w)
     L = gram_lib.max_eigval(stats.G) * 1.01

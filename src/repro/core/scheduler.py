@@ -71,6 +71,7 @@ class PruneScheduler:
         self._inflight: Dict[str, float] = {}    # unit -> start time
         self._failed: Dict[str, str] = {}
         self._duplicated: set = set()
+        self._pending_persist = 0                # results not yet on disk
 
     # -- persistence ---------------------------------------------------------
     def _ckpt_name(self, unit: str) -> str:
@@ -139,8 +140,20 @@ class PruneScheduler:
                 if unit not in self._results:      # first completion wins
                     self._results[unit] = UnitResult(unit, payload, dt, attempt, wid)
                     first = True
+                    # reserve the persist before releasing the lock so run()
+                    # cannot observe "all done" with this checkpoint still
+                    # in flight (a resumed job would recompute the unit)
+                    self._pending_persist += 1
             if first:
-                self._persist(unit, payload)
+                try:
+                    self._persist(unit, payload)
+                except Exception as exc:  # noqa: BLE001 — a checkpoint
+                    # failure must not kill the worker (the result is already
+                    # recorded); a resumed job just recomputes this unit
+                    log.warning("unit %s checkpoint save failed: %s", unit, exc)
+                finally:
+                    with self._lock:
+                        self._pending_persist -= 1
             self._queue.task_done()
 
     def _all_done(self) -> bool:
@@ -193,7 +206,7 @@ class PruneScheduler:
         # abandoned straggler must not block the job once its duplicate won
         while True:
             with self._lock:
-                if self._all_done():
+                if self._all_done() and self._pending_persist == 0:
                     break
             time.sleep(0.01)
         if self._failed:
@@ -202,8 +215,14 @@ class PruneScheduler:
 
     @property
     def stats(self) -> Dict[str, Any]:
+        durations = {u: r.seconds for u, r in self._results.items()}
+        fresh = [s for s in durations.values() if s > 0]  # resumed units are 0
         return {
             "completed": len(self._results),
             "duplicated": sorted(self._duplicated),
             "attempts": dict(self._attempts),
+            "durations": durations,
+            "total_unit_seconds": sum(fresh),
+            "median_unit_seconds": (sorted(fresh)[len(fresh) // 2]
+                                    if fresh else 0.0),
         }

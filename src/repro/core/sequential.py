@@ -17,12 +17,15 @@ paper's full pipeline (Sec. 3.1, Fig. 2):
       more accurate, but serializes layers (noted in DESIGN.md)
 
 Memory: the relay keeps one unit's activations for the current
-calibration micro-batch only; Gram statistics are O(n^2) per operator.
+calibration set (the group-stats scan stacks the micro-batches of that
+unit's captures); Gram statistics are O(n^2) per operator.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
+import weakref
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -37,7 +40,8 @@ from repro.core.sparsity import SparsitySpec
 from repro.models.registry import ModelDef
 from repro.models.transformer import UnitSpec
 from repro.utils import get_logger
-from repro.utils.tree import get_path, set_path, tree_index
+from repro.utils.tree import (flatten_with_paths, get_path, set_path,
+                              tree_index, tree_stack)
 
 log = get_logger("sequential")
 
@@ -61,6 +65,8 @@ class OperatorReport:
     outer_iters: int = 0
     fista_iters: int = 0
     seconds: float = 0.0
+    solver: str = ""        # "host" | "fused" | "fused-group" | baseline name
+    group_size: int = 1     # operators solved in the same batched dispatch
 
 
 # ---------------------------------------------------------------------------
@@ -107,15 +113,91 @@ def _write_unit_params(params: Any, spec: UnitSpec, new_unit: Any) -> Any:
     return set_path(params, spec.param_path, updated)
 
 
+_CAPTURE_FWD_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
 def _capture_forward(model: ModelDef, spec: UnitSpec):
-    """jitted (unit_params, state) -> (next_state, captures)."""
+    """jitted (unit_params, state) -> (next_state, captures).
 
-    def fn(unit_params, state):
-        cap: Dict[str, jnp.ndarray] = {}
-        nxt = model.unit_apply(unit_params, spec.layer_index, state, cap)
-        return nxt, cap
+    Cached per (model, layer) so repeated prune calls (scheduler retries,
+    straggler duplicates, benchmarks) reuse the compiled forward instead of
+    re-tracing a fresh closure every time.  Weak-keyed on the ModelDef so a
+    discarded model's closures and compiled executables are not pinned."""
+    per_model = _CAPTURE_FWD_CACHE.get(model)
+    if per_model is None:
+        per_model = {}
+        _CAPTURE_FWD_CACHE[model] = per_model
+    # param_path disambiguates units sharing a layer index (encdec enc/dec)
+    cache_key = (spec.param_path, spec.layer_index)
+    fwd = per_model.get(cache_key)
+    if fwd is None:
+        unit_apply, layer_index = model.unit_apply, spec.layer_index
 
-    return jax.jit(fn)
+        def fn(unit_params, state):
+            cap: Dict[str, jnp.ndarray] = {}
+            nxt = unit_apply(unit_params, layer_index, state, cap)
+            return nxt, cap
+
+        fwd = jax.jit(fn)
+        per_model[cache_key] = fwd
+    return fwd
+
+
+@functools.partial(jax.jit, static_argnames=("unit_apply", "layer_index",
+                                             "group_keys", "ec_none"))
+def _group_stats_scan(init: Dict[str, GramStats], current: Any,
+                      ws: Dict[str, jnp.ndarray],
+                      dense_caps: Dict[str, jnp.ndarray],
+                      pruned_states: Dict[str, jnp.ndarray], *,
+                      unit_apply, layer_index: int,
+                      group_keys: Tuple[str, ...], ec_none: bool
+                      ) -> Dict[str, GramStats]:
+    """Accumulate a whole group's GramStats in ONE jitted scan over the
+    calibration micro-batches, continuing from ``init``.
+
+    ``dense_caps[key]`` / ``pruned_states`` leaves carry a leading
+    micro-batch axis (stacked by the caller).  The pruned-path forward of
+    ``current`` and every operator's G/C/H/h update run inside the scan
+    body, so there is a single dispatch per same-shape run of batches
+    instead of the seed's per-batch x per-key Python loops.  With
+    ``ec_none`` the pruned path is skipped entirely (X* = X, the Fig. 4a
+    ablation).
+    """
+
+    def body(acc, xs):
+        cap_d, ps = xs
+        if ec_none:
+            cap_p = cap_d
+        else:
+            cap_p = {}
+            unit_apply(current, layer_index, ps, cap_p)
+        new = {}
+        for key in group_keys:
+            xd, xp = cap_d[key], cap_p[key]
+            new[key] = gram_lib.accumulate(acc[key], xd, xp, xd @ ws[key])
+        return new, None
+
+    out, _ = jax.lax.scan(body, init, (dense_caps, pruned_states))
+    return out
+
+
+def _shape_buckets(states: Sequence[Dict]) -> List[List[int]]:
+    """Partition micro-batch indices into same-shape buckets (a ragged
+    final calibration batch must not be stacked with the full ones)."""
+    buckets: Dict[Tuple, List[int]] = {}
+    for i, s in enumerate(states):
+        key = tuple((p, tuple(x.shape)) for p, x in flatten_with_paths(s))
+        buckets.setdefault(key, []).append(i)
+    return list(buckets.values())
+
+
+def _shape_subgroups(group: Sequence[str], dense_unit: Any) -> List[List[str]]:
+    """Partition a group's keys into maximal same-shape runs (order kept)."""
+    by_shape: Dict[Tuple[int, ...], List[str]] = {}
+    for key in group:
+        shape = tuple(get_weight(dense_unit, key).shape)
+        by_shape.setdefault(shape, []).append(key)
+    return list(by_shape.values())
 
 
 def prune_unit(model: ModelDef, spec: UnitSpec, dense_unit: Any,
@@ -133,46 +215,69 @@ def prune_unit(model: ModelDef, spec: UnitSpec, dense_unit: Any,
     reports: List[OperatorReport] = []
     # dense-path captures don't change while the unit is pruned: one pass
     dense_caps = [fwd(dense_unit, s)[1] for s in dense_states]
+    ec_none = cfg.error_correction == "none"
+    buckets = _shape_buckets(dense_states)
+    # the scan body never reads the pruned states in the "none" ablation —
+    # pass cheap placeholders instead of stacking a copy of every state
+    pruned_stacked = [jnp.zeros((len(idx),), jnp.float32) if ec_none
+                      else tree_stack([dict(pruned_states[i]) for i in idx])
+                      for idx in buckets]
+    use_group = (cfg.method == "fista" and cfg.pruner.outer_impl == "fused"
+                 and cfg.pruner.group_batch)
 
     for group in spec.groups:
-        # accumulate Gram statistics for every operator in the group
-        stats: Dict[str, GramStats] = {}
-        for b in range(len(dense_states)):
-            cap_d = dense_caps[b]
-            if cfg.error_correction == "none":
-                cap_p = cap_d
-            else:
-                _, cap_p = fwd(current, pruned_states[b])
-            for key in group:
-                xd, xp = cap_d[key], cap_p[key]
-                w = get_weight(dense_unit, key)          # (in, out) model layout
-                n = w.shape[0]
-                if key not in stats:
-                    stats[key] = gram_lib.init_stats(n)
-                wx = xd @ w                                # dense target W X
-                stats[key] = gram_lib.accumulate(stats[key], xd, xp, wx)
+        # accumulate Gram statistics for every operator of the group in one
+        # jitted scan per same-shape run of calibration batches (DESIGN.md §4)
+        group_keys = tuple(group)
+        ws = {k: get_weight(dense_unit, k) for k in group_keys}
+        stats: Dict[str, GramStats] = {
+            k: gram_lib.init_stats(ws[k].shape[0]) for k in group_keys}
+        for idx, pstacked in zip(buckets, pruned_stacked):
+            caps_stacked = tree_stack([{k: dense_caps[i][k] for k in group_keys}
+                                       for i in idx])
+            stats = _group_stats_scan(
+                stats, current, ws, caps_stacked, pstacked,
+                unit_apply=model.unit_apply, layer_index=spec.layer_index,
+                group_keys=group_keys, ec_none=ec_none)
 
-        # prune each operator in the group against its statistics
-        for key in group:
-            w_model = get_weight(dense_unit, key)
-            w_paper = jnp.asarray(w_model, jnp.float32).T   # (out, in)
-            t0 = time.perf_counter()
-            if cfg.method == "fista":
-                res = pruner_lib.prune_operator(w_paper, stats[key], cfg.spec,
-                                                cfg.pruner)
-                new_w, err = res.weight, res.error
-                rep = OperatorReport(spec.name, key, tuple(w_paper.shape), err,
-                                     res.rel_error, res.lam, res.outer_iters,
-                                     res.fista_iters)
-            else:
-                new_w, err = pruner_lib.prune_with_method(
-                    cfg.method, w_paper, stats[key], cfg.spec, cfg.pruner)
-                wx_norm = float(np.sqrt(max(float(stats[key].h), 1e-30)))
-                rep = OperatorReport(spec.name, key, tuple(w_paper.shape), err,
-                                     err / max(wx_norm, 1e-30))
-            rep.seconds = time.perf_counter() - t0
-            reports.append(rep)
-            current = set_weight(current, key, new_w.T)
+        # prune the group's operators against their statistics: same-shape
+        # operators are solved in one vmap-batched dispatch when possible
+        for sub in _shape_subgroups(group, dense_unit):
+            if use_group and len(sub) > 1:
+                t0 = time.perf_counter()
+                results = pruner_lib.prune_group(
+                    [jnp.asarray(ws[k], jnp.float32).T for k in sub],
+                    [stats[k] for k in sub], cfg.spec, cfg.pruner)
+                per_op = (time.perf_counter() - t0) / len(sub)
+                for key, res in zip(sub, results):
+                    rep = OperatorReport(
+                        spec.name, key, tuple(res.weight.shape), res.error,
+                        res.rel_error, res.lam, res.outer_iters,
+                        res.fista_iters, per_op, "fused-group", len(sub))
+                    reports.append(rep)
+                    current = set_weight(current, key, res.weight.T)
+                continue
+            for key in sub:
+                w_paper = jnp.asarray(ws[key], jnp.float32).T   # (out, in)
+                t0 = time.perf_counter()
+                if cfg.method == "fista":
+                    res = pruner_lib.prune_operator(w_paper, stats[key],
+                                                    cfg.spec, cfg.pruner)
+                    new_w, err = res.weight, res.error
+                    rep = OperatorReport(spec.name, key, tuple(w_paper.shape),
+                                         err, res.rel_error, res.lam,
+                                         res.outer_iters, res.fista_iters,
+                                         solver=cfg.pruner.outer_impl)
+                else:
+                    new_w, err = pruner_lib.prune_with_method(
+                        cfg.method, w_paper, stats[key], cfg.spec, cfg.pruner)
+                    wx_norm = float(np.sqrt(max(float(stats[key].h), 1e-30)))
+                    rep = OperatorReport(spec.name, key, tuple(w_paper.shape),
+                                         err, err / max(wx_norm, 1e-30),
+                                         solver=cfg.method)
+                rep.seconds = time.perf_counter() - t0
+                reports.append(rep)
+                current = set_weight(current, key, new_w.T)
 
     # relay: pruned next states through the fully-pruned unit
     pruned_next = []

@@ -22,6 +22,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.utils import compat
+
 from repro.utils.tree import tree_map_with_path
 
 
@@ -55,8 +57,8 @@ def pipeline_apply(mesh: Mesh, stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarra
         idx = jax.lax.axis_index(axis)
         # initial carries must be marked pod-varying: they mix with idx-
         # dependent values inside the loop (shard_map vma typing)
-        zero = jax.lax.pvary(jnp.zeros_like(xs_local[0]), (axis,))
-        outputs = jax.lax.pvary(jnp.zeros_like(xs_local), (axis,))
+        zero = compat.pvary(jnp.zeros_like(xs_local[0]), (axis,))
+        outputs = compat.pvary(jnp.zeros_like(xs_local), (axis,))
 
         def tick(t, state):
             carry, outputs = state

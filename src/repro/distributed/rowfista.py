@@ -44,7 +44,8 @@ def sharded_solve(mesh: Mesh, G: jnp.ndarray, B: jnp.ndarray, y0: jnp.ndarray,
 
     fn = shard_map(local, mesh=mesh,
                    in_specs=(P(None, None), P(axis, None), P(axis, None)),
-                   out_specs=P(axis, None))
+                   out_specs=P(axis, None),
+                   check_rep=False)  # no replication rule for while_loop
     return fn(G, B.astype(jnp.float32), y0.astype(jnp.float32))
 
 

@@ -12,6 +12,12 @@ Tiling: grid (m/bm, n/bn, n/bk), k innermost.  VMEM per step =
 fp32; the default 256x256x512 tiles use ~1.4 MB, comfortably inside the
 ~16 MB/core v5e VMEM with double buffering.  All dims 128-aligned for
 the MXU.
+
+vmap contract: the batched group solver (core/pruner.py prune_group)
+maps this step over stacked operators with per-operator G/B/inv_l/
+thresh.  That works through JAX's pallas_call batching rule (a leading
+grid axis is prepended; the scalar pair rides along as a batched (1,2)
+operand), pinned by tests/test_pruner_fused.py::TestKernelVmap.
 """
 from __future__ import annotations
 

@@ -39,6 +39,12 @@ def main() -> None:
     ap.add_argument("--correction", default="intra", choices=["intra", "none", "full"])
     ap.add_argument("--warm-start", default="wanda",
                     choices=["wanda", "sparsegpt", "magnitude", "dense"])
+    ap.add_argument("--outer-impl", default="fused", choices=["fused", "host"],
+                    help="Algorithm-1 outer loop: fused on-device lax.while_loop"
+                         " (default) or the host-Python reference")
+    ap.add_argument("--no-group-batch", action="store_true",
+                    help="disable the vmap-batched solve of same-shape"
+                         " operator groups (wq/wk/wv, gate/up, MoE experts)")
     ap.add_argument("--train-steps", type=int, default=150)
     ap.add_argument("--calib-sequences", type=int, default=32)
     ap.add_argument("--calib-seq-len", type=int, default=64)
@@ -63,7 +69,9 @@ def main() -> None:
         batch_size=8, seed=args.seed))
     cfg = SequentialConfig(
         spec=SparsitySpec.parse(args.sparsity),
-        pruner=PrunerConfig(warm_start=args.warm_start),
+        pruner=PrunerConfig(warm_start=args.warm_start,
+                            outer_impl=args.outer_impl,
+                            group_batch=not args.no_group_batch),
         method=args.method, error_correction=args.correction)
     pruned, reports, stats = parallel_prune(
         model, tr.params, calib, cfg,
@@ -71,15 +79,19 @@ def main() -> None:
     pruned_ppl = evaluate_ppl(model, pruned, corpus, 8, args.calib_seq_len, 4)
 
     rel = sum(r.rel_error for r in reports) / max(len(reports), 1)
+    batched = sum(1 for r in reports if r.solver == "fused-group")
     print(f"arch={args.arch} method={args.method} sparsity={args.sparsity} "
-          f"correction={args.correction}")
+          f"correction={args.correction} outer_impl={args.outer_impl}")
     print(f"dense_ppl={dense_ppl:.3f} pruned_ppl={pruned_ppl:.3f} "
-          f"mean_rel_err={rel:.4f} units={stats.get('completed', 'n/a')}")
+          f"mean_rel_err={rel:.4f} units={stats.get('completed', 'n/a')} "
+          f"group_batched_ops={batched}/{len(reports)}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"arch": args.arch, "method": args.method,
                        "sparsity": args.sparsity, "dense_ppl": dense_ppl,
-                       "pruned_ppl": pruned_ppl, "mean_rel_err": rel}, f)
+                       "pruned_ppl": pruned_ppl, "mean_rel_err": rel,
+                       "outer_impl": args.outer_impl,
+                       "group_batched_ops": batched}, f)
 
 
 if __name__ == "__main__":

@@ -174,8 +174,9 @@ def _flash_sharded(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     ambient mesh (single-device tests) this is a plain local call.
     """
     from repro.kernels import ops as kops
+    from repro.utils import compat
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.ambient_mesh()
     if mesh is None or not mesh.axis_names:
         return kops.flash_mha(q, k, v, causal, window)
     from jax.experimental.shard_map import shard_map

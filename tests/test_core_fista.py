@@ -234,8 +234,11 @@ class TestAlgorithm1:
             _, errs[method] = prune_with_method(
                 method, jnp.asarray(w), stats, spec,
                 PrunerConfig(warm_start="wanda", eps=1e-6, max_outer=24))
-        assert errs["fista"] <= errs["wanda"] + 1e-5
-        assert errs["fista"] <= errs["magnitude"] + 1e-5
+        # relative tolerance: the error norms are ~1e2, where an absolute
+        # 1e-5 margin is below fp32 resolution and scores ties as losses
+        # (benchmarks/run.py's headline check is relative for the same reason)
+        assert errs["fista"] <= errs["wanda"] * (1 + 1e-4)
+        assert errs["fista"] <= errs["magnitude"] * (1 + 1e-4)
 
     def test_sparsegpt_warm_start(self):
         w, x, xs, stats = make_problem(m=16, n=24)

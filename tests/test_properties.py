@@ -1,6 +1,11 @@
 """Hypothesis property tests on the system's core invariants."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dep (pip install '.[test]') — see pyproject.toml")
 from hypothesis import given, settings, strategies as st
 import hypothesis.extra.numpy as hnp
 

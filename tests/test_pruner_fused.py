@@ -1,0 +1,262 @@
+"""Equivalence of the device-resident (fused) Algorithm 1 with the host-loop
+reference, and of the vmap-batched group solve with per-operator solves.
+
+The fused path re-expresses the outer loop (FISTA solve -> round ->
+error eval -> patience/eps stop -> lambda bisection) as one
+``lax.while_loop``; these tests pin it to the host oracle: same W_best,
+same E_best, same lambda trajectory within fp32 tolerance, and no KKT
+regression of the final FISTA solve.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fista as fista_lib
+from repro.core import gram as gram_lib
+from repro.core.pruner import (PrunerConfig, prune_group, prune_operator)
+from repro.core.sparsity import SparsitySpec, satisfies
+
+SPECS = [SparsitySpec(ratio=0.5), SparsitySpec(kind="nm", n=2, m=4)]
+
+
+def make_problem(m=24, n=32, p=256, seed=0, pruned_shift=0.05):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(m, n)).astype(np.float32)
+    x = rng.normal(size=(n, p)).astype(np.float32)
+    xs = x + pruned_shift * rng.normal(size=(n, p)).astype(np.float32)
+    stats = gram_lib.init_stats(n)
+    stats = gram_lib.accumulate(stats, x.T, xs.T, (w @ x).T)
+    return jnp.asarray(w), stats
+
+
+HOST = PrunerConfig(outer_impl="host")
+FUSED = PrunerConfig(outer_impl="fused")
+
+
+class TestFusedEquivalence:
+    @pytest.mark.parametrize("spec", SPECS, ids=str)
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_matches_host_loop(self, spec, seed):
+        w, stats = make_problem(seed=seed)
+        host = prune_operator(w, stats, spec, HOST)
+        fused = prune_operator(w, stats, spec, FUSED)
+        assert satisfies(fused.weight, spec)
+        np.testing.assert_allclose(np.asarray(fused.weight),
+                                   np.asarray(host.weight), atol=1e-5)
+        assert np.isclose(fused.error, host.error, rtol=1e-4)
+        assert np.isclose(fused.warm_error, host.warm_error, rtol=1e-4)
+        # same trajectory: identical trip counts and final bracket midpoint
+        assert fused.outer_iters == host.outer_iters
+        assert fused.fista_iters == host.fista_iters
+        assert np.isclose(fused.lam, host.lam, rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("warm", ["wanda", "sparsegpt", "magnitude", "dense"])
+    def test_all_warm_starts(self, warm):
+        w, stats = make_problem(seed=3)
+        spec = SparsitySpec(ratio=0.5)
+        host = prune_operator(w, stats, spec,
+                              PrunerConfig(outer_impl="host", warm_start=warm))
+        fused = prune_operator(w, stats, spec,
+                               PrunerConfig(outer_impl="fused", warm_start=warm))
+        np.testing.assert_allclose(np.asarray(fused.weight),
+                                   np.asarray(host.weight), atol=1e-5)
+        assert np.isclose(fused.error, host.error, rtol=1e-4)
+
+    def test_array_warm_start(self):
+        w, stats = make_problem(seed=4)
+        spec = SparsitySpec(ratio=0.5)
+        w0 = np.asarray(w) * (np.random.default_rng(0).random(w.shape) > 0.3)
+        host = prune_operator(w, stats, spec, HOST, warm=jnp.asarray(w0))
+        fused = prune_operator(w, stats, spec, FUSED, warm=jnp.asarray(w0))
+        np.testing.assert_allclose(np.asarray(fused.weight),
+                                   np.asarray(host.weight), atol=1e-5)
+
+    def test_respects_max_outer_and_patience(self):
+        w, stats = make_problem(seed=5)
+        cfg = PrunerConfig(outer_impl="fused", max_outer=6, patience=2)
+        res = prune_operator(w, stats, SparsitySpec(ratio=0.5), cfg)
+        assert 1 <= res.outer_iters <= 6
+
+    def test_kkt_residual_no_regression(self):
+        """The FISTA solve at the fused path's final lambda must satisfy the
+        LASSO KKT conditions as well as at the host path's final lambda."""
+        w, stats = make_problem(m=16, n=24, p=128, seed=6)
+        spec = SparsitySpec(ratio=0.5)
+        b = gram_lib.target_correlation(stats, w)
+        residual = {}
+        for name, cfg in (("host", HOST), ("fused", FUSED)):
+            res = prune_operator(w, stats, spec, cfg)
+            y, _ = fista_lib.solve(stats.G, b, jnp.asarray(res.weight),
+                                   res.lam, max_iters=2000, tol=1e-9)
+            residual[name] = float(fista_lib.kkt_residual(stats.G, b, y, res.lam))
+        scale = float(jnp.max(jnp.abs(b)))
+        assert residual["fused"] < 1e-2 * scale, residual
+        assert residual["fused"] <= residual["host"] * 1.5 + 1e-4 * scale, residual
+
+
+class TestGroupBatched:
+    @pytest.mark.parametrize("spec", SPECS, ids=str)
+    def test_matches_per_operator(self, spec):
+        ws, sts = zip(*[make_problem(seed=s) for s in range(3)])
+        results = prune_group(list(ws), list(sts), spec, FUSED)
+        assert len(results) == 3
+        for i, res in enumerate(results):
+            solo = prune_operator(ws[i], sts[i], spec, FUSED)
+            assert satisfies(res.weight, spec)
+            np.testing.assert_allclose(np.asarray(res.weight),
+                                       np.asarray(solo.weight), atol=1e-5)
+            assert np.isclose(res.error, solo.error, rtol=1e-4)
+            assert res.outer_iters == solo.outer_iters
+
+    def test_matches_host_loop(self):
+        spec = SparsitySpec(kind="nm", n=2, m=4)
+        ws, sts = zip(*[make_problem(seed=10 + s) for s in range(2)])
+        batched = prune_group(list(ws), list(sts), spec, FUSED)
+        host = prune_group(list(ws), list(sts), spec, HOST)
+        for b, h in zip(batched, host):
+            np.testing.assert_allclose(np.asarray(b.weight),
+                                       np.asarray(h.weight), atol=1e-5)
+            assert np.isclose(b.error, h.error, rtol=1e-4)
+
+    def test_stacked_array_input(self):
+        spec = SparsitySpec(ratio=0.5)
+        ws, sts = zip(*[make_problem(seed=20 + s) for s in range(2)])
+        stacked_w = jnp.stack(list(ws))
+        stacked_stats = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *sts)
+        a = prune_group(stacked_w, stacked_stats, spec, FUSED)
+        b = prune_group(list(ws), list(sts), spec, FUSED)
+        for ra, rb in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(ra.weight),
+                                          np.asarray(rb.weight))
+
+    def test_rejects_mixed_shapes(self):
+        w1, s1 = make_problem(m=8, n=16, seed=0)
+        w2, s2 = make_problem(m=8, n=32, seed=0)
+        with pytest.raises(ValueError):
+            prune_group([w1, w2], [s1, s2], SparsitySpec(ratio=0.5), FUSED)
+
+
+class TestKernelVmap:
+    def test_fista_step_survives_vmap(self):
+        """kernels/fista_step must be vmap-able (the batched group solver
+        maps over it); check both the ref fallback and the Pallas tile path
+        against the per-slice oracle."""
+        from repro.kernels import ops as kops
+        from repro.kernels import ref
+
+        rng = np.random.default_rng(0)
+        for m, n in ((32, 48), (128, 128)):   # ref path, pallas path
+            y = jnp.asarray(rng.normal(size=(3, m, n)).astype(np.float32))
+            a = rng.normal(size=(3, n, n)).astype(np.float32) * 0.2
+            G = jnp.asarray(np.einsum("kij,klj->kil", a, a))
+            B = jnp.asarray(rng.normal(size=(3, m, n)).astype(np.float32))
+            inv_l = jnp.asarray([0.01, 0.02, 0.03], jnp.float32)
+            thresh = jnp.asarray([0.005, 0.004, 0.003], jnp.float32)
+            got = jax.vmap(kops.fista_prox_step)(y, G, B, inv_l, thresh)
+            want = jnp.stack([ref.fista_prox_step(y[i], G[i], B[i],
+                                                  inv_l[i], thresh[i])
+                              for i in range(3)])
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=1e-5)
+
+    def test_solve_survives_vmap_with_pallas_step(self):
+        """End-to-end: the FISTA solver under vmap with step_impl=pallas."""
+        rng = np.random.default_rng(1)
+        m = n = 128
+        y0 = jnp.asarray(rng.normal(size=(2, m, n)).astype(np.float32))
+        a = rng.normal(size=(2, n, n)).astype(np.float32) * 0.2
+        G = jnp.asarray(np.einsum("kij,klj->kil", a, a))
+        B = jnp.asarray(rng.normal(size=(2, m, n)).astype(np.float32))
+        lam = jnp.asarray([0.5, 1.0], jnp.float32)
+
+        def solve(step_impl, i=None):
+            fn = lambda G_, B_, y_, l_: fista_lib.solve(
+                G_, B_, y_, l_, max_iters=5, step_impl=step_impl)[0]
+            if i is None:
+                return jax.vmap(fn)(G, B, y0, lam)
+            return fn(G[i], B[i], y0[i], lam[i])
+
+        got = solve("pallas")
+        for i in range(2):
+            np.testing.assert_allclose(np.asarray(got[i]),
+                                       np.asarray(solve("jnp", i)), atol=1e-4)
+
+
+class TestPipelineFused:
+    def test_ragged_calibration_batches(self):
+        """A truncated final calibration batch (num_sequences % batch_size
+        != 0) must work: the group-stats scan buckets micro-batches by
+        shape instead of stacking ragged arrays."""
+        import dataclasses
+        from repro.configs.opt125m_proxy import tiny_config
+        from repro.core.sequential import SequentialConfig, prune_model
+        from repro.data import (CalibConfig, CorpusConfig, MarkovCorpus,
+                                calibration_batches)
+        from repro.models.registry import model_def
+        from repro.utils.tree import flatten_with_paths
+
+        cfg = tiny_config().replace(num_layers=1, d_model=32, d_ff=64,
+                                    num_heads=4, num_kv_heads=4, vocab=128)
+        model = model_def(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        corpus = MarkovCorpus(CorpusConfig(vocab=cfg.vocab, seed=5))
+        calib = calibration_batches(corpus, CalibConfig(num_sequences=10,
+                                                        seq_len=16,
+                                                        batch_size=4))
+        assert len({b["tokens"].shape for b in calib}) > 1  # really ragged
+        fast = PrunerConfig(fista_iters=4, max_outer=3, patience=2, eps=1e-4)
+        outs = {}
+        for impl in ("host", "fused"):
+            scfg = SequentialConfig(
+                spec=SparsitySpec(ratio=0.5), method="fista",
+                pruner=dataclasses.replace(fast, outer_impl=impl))
+            outs[impl], reports = prune_model(model, params, calib, scfg)
+            assert all(np.isfinite(r.error) for r in reports)
+        for (pa, a), (pb, b) in zip(flatten_with_paths(outs["host"]),
+                                    flatten_with_paths(outs["fused"])):
+            assert pa == pb
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=2e-4, err_msg=pa)
+
+
+    def test_prune_unit_group_batching_matches_unbatched(self):
+        """Whole-pipeline equivalence: fused+group_batch == fused without
+        batching == host loop, on a real transformer unit."""
+        from repro.configs.opt125m_proxy import tiny_config
+        from repro.core.sequential import SequentialConfig, prune_model
+        from repro.data import (CalibConfig, CorpusConfig, MarkovCorpus,
+                                calibration_batches)
+        from repro.models.registry import model_def
+        from repro.utils.tree import flatten_with_paths
+
+        cfg = tiny_config().replace(num_layers=1, d_model=64, d_ff=128,
+                                    num_heads=4, num_kv_heads=4, vocab=128)
+        model = model_def(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        corpus = MarkovCorpus(CorpusConfig(vocab=cfg.vocab, seed=5))
+        calib = calibration_batches(corpus, CalibConfig(num_sequences=8,
+                                                        seq_len=32,
+                                                        batch_size=4))
+        outs = {}
+        reports = {}
+        for name, pruner in (
+                ("host", PrunerConfig(fista_iters=8, max_outer=4, patience=2,
+                                      eps=1e-4, outer_impl="host")),
+                ("fused", PrunerConfig(fista_iters=8, max_outer=4, patience=2,
+                                       eps=1e-4, group_batch=False)),
+                ("group", PrunerConfig(fista_iters=8, max_outer=4, patience=2,
+                                       eps=1e-4, group_batch=True))):
+            scfg = SequentialConfig(spec=SparsitySpec(ratio=0.5),
+                                    pruner=pruner, method="fista")
+            outs[name], reports[name] = prune_model(model, params, calib, scfg)
+        assert any(r.solver == "fused-group" for r in reports["group"])
+        assert all(r.solver == "host" for r in reports["host"])
+        for variant in ("fused", "group"):
+            for (pa, a), (pb, b) in zip(flatten_with_paths(outs["host"]),
+                                        flatten_with_paths(outs[variant])):
+                assert pa == pb
+                np.testing.assert_allclose(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    atol=2e-4, err_msg=f"{variant}:{pa}")
