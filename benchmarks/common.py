@@ -19,6 +19,7 @@ import numpy as np
 import jax
 
 from repro.checkpoint import store
+from repro.core import solvers as solvers_lib
 from repro.core.driver import parallel_prune
 from repro.core.pruner import PrunerConfig
 from repro.core.scheduler import SchedulerConfig
@@ -95,8 +96,10 @@ def prune_and_eval(t: Trained, method: str, spec: SparsitySpec,
                    correction: str = "intra", calib: Optional[CalibConfig] = None,
                    pruner: Optional[PrunerConfig] = None) -> Dict[str, float]:
     calib_batches = calibration_batches(t.corpus, calib or CALIB)
-    cfg = SequentialConfig(spec=spec, pruner=pruner or family_pruner(t.family),
-                           method=method, error_correction=correction)
+    pr = pruner or family_pruner(t.family)
+    cfg = SequentialConfig(spec=spec, pruner=pr, method=method,
+                           error_correction=correction,
+                           solver=solvers_lib.from_legacy(method, pr))
     t0 = time.perf_counter()
     pruned, reports = prune_model(t.model, t.params, calib_batches, cfg)
     dt = time.perf_counter() - t0

@@ -1,17 +1,19 @@
-"""Solver-throughput benchmark: host-loop vs fused vs group-batched.
+"""Solver-throughput benchmark: FISTA outer-loop variants + the full
+per-solver matrix of the registry.
 
-Times Algorithm 1 over one transformer pruning unit (all four operator
-groups of a decoder layer) under the three outer-loop implementations:
+Two sections, both over one transformer pruning unit (all four operator
+groups of a decoder layer), both configured through ``PruneRecipe``:
 
-* ``host``        — the seed's host-Python outer loop (one device sync
-                    per outer iteration per operator);
-* ``fused``       — device-resident ``lax.while_loop`` (one dispatch per
-                    operator);
-* ``fused-group`` — fused + vmap over same-shape group peers (one
-                    dispatch per shape-subgroup).
+* ``rows`` — Algorithm 1 under its three outer-loop implementations
+  (``host`` reference / ``fused`` device-resident / ``fused-group``
+  vmap-batched), the PR-1 speedup trajectory;
+* ``solver_matrix`` — one row per registered solver (fista, admm, wanda,
+  sparsegpt) per sparsity: wall-clock, mean relative error, batched-op
+  share.  This is the extensibility surface made measurable — a newly
+  registered solver shows up here by adding its name to ``MATRIX``.
 
 Unlike the kernel microbenchmarks, wall-clock is meaningful here on any
-backend: the fused path removes host<->device round trips, which cost on
+backend: the fused paths remove host<->device round trips, which cost on
 CPU exactly as they do on TPU.  Each variant is run once to compile and
 then timed, so the numbers compare steady-state solves.
 
@@ -26,13 +28,19 @@ from typing import Dict, List
 
 import jax
 
-from repro.core.pruner import PrunerConfig
-from repro.core.sequential import SequentialConfig, prune_model
-from repro.core.sparsity import SparsitySpec
+from repro.api import PruneRecipe
+from repro.core.sequential import prune_model
 from repro.data import CalibConfig, CorpusConfig, MarkovCorpus, calibration_batches
 from repro.models.registry import model_def
 
 OUT_PATH = "BENCH_prune.json"
+
+SPARSITIES = ("50%", "2:4")
+MATRIX = ("fista", "admm", "wanda", "sparsegpt")
+
+# paper-default solver depth (K=20), deep enough that the solve dominates
+# the unit wall-clock; shared by every fista-family recipe below
+_FISTA_KW = {"fista_iters": 20, "max_outer": 12, "patience": 3, "eps": 1e-6}
 
 
 def _unit_problem(d_model: int = 64, d_ff: int = 128, seed: int = 0):
@@ -47,58 +55,81 @@ def _unit_problem(d_model: int = 64, d_ff: int = 128, seed: int = 0):
     return model, params, calib
 
 
-def _variants(base: PrunerConfig) -> Dict[str, PrunerConfig]:
-    import dataclasses
+def _impl_recipes(sparsity: str) -> Dict[str, PruneRecipe]:
     return {
-        "host": dataclasses.replace(base, outer_impl="host"),
-        "fused": dataclasses.replace(base, outer_impl="fused",
-                                     group_batch=False),
-        "fused-group": dataclasses.replace(base, outer_impl="fused",
-                                           group_batch=True),
+        "host": PruneRecipe(method="fista", sparsity=sparsity,
+                            solver=dict(_FISTA_KW, outer_impl="host")),
+        "fused": PruneRecipe(method="fista", sparsity=sparsity,
+                             solver=dict(_FISTA_KW, outer_impl="fused",
+                                         group_batch=False)),
+        "fused-group": PruneRecipe(method="fista", sparsity=sparsity,
+                                   solver=dict(_FISTA_KW, outer_impl="fused",
+                                               group_batch=True)),
     }
 
 
-def bench_prune_impls(d_model: int = 64, d_ff: int = 128, repeats: int = 5,
-                      out_path: str = OUT_PATH) -> List[Dict]:
-    model, params, calib = _unit_problem(d_model, d_ff)
-    # paper-default solver depth (K=20), deep enough that the solve — the
-    # phase this PR moves on-device — dominates the unit wall-clock
-    base = PrunerConfig(fista_iters=20, max_outer=12, patience=3, eps=1e-6)
-    rows: List[Dict] = []
-    for spec in (SparsitySpec(ratio=0.5), SparsitySpec(kind="nm", n=2, m=4)):
-        for name, pruner in _variants(base).items():
-            cfg = SequentialConfig(spec=spec, pruner=pruner, method="fista")
-            prune_model(model, params, calib, cfg)          # compile
-            times, solver_times, reports = [], [], []
-            for _ in range(repeats):
-                t0 = time.perf_counter()
-                _, reports = prune_model(model, params, calib, cfg)
-                times.append(time.perf_counter() - t0)
-                solver_times.append(sum(r.seconds for r in reports))
-            rows.append({
-                "impl": name, "sparsity": str(spec),
-                "d_model": d_model, "d_ff": d_ff,
-                "unit_seconds": min(times),
-                "solver_seconds": min(solver_times),
-                "operators": len(reports),
-                "batched_operators": sum(1 for r in reports
-                                         if r.solver == "fused-group"),
-                "mean_rel_err": (sum(r.rel_error for r in reports)
-                                 / max(len(reports), 1)),
-            })
-            print(f"{name:>12} {spec}: unit {min(times)*1e3:8.1f} ms  "
-                  f"solver {min(solver_times)*1e3:8.1f} ms  "
-                  f"({rows[-1]['batched_operators']}/{len(reports)} batched)")
+def _timed_prune(model, params, calib, recipe: PruneRecipe,
+                 repeats: int) -> Dict:
+    cfg = recipe.sequential_config()
+    prune_model(model, params, calib, cfg)          # compile
+    times, solver_times, reports = [], [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _, reports = prune_model(model, params, calib, cfg)
+        times.append(time.perf_counter() - t0)
+        solver_times.append(sum(r.seconds for r in reports))
+    return {
+        "unit_seconds": min(times),
+        "solver_seconds": min(solver_times),
+        "operators": len(reports),
+        "batched_operators": sum(1 for r in reports if r.group_size > 1),
+        "mean_rel_err": (sum(r.rel_error for r in reports)
+                         / max(len(reports), 1)),
+    }
 
-    summary = _summarize(rows)
-    payload = {"rows": rows, "summary": summary,
-               "backend": jax.default_backend()}
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=1)
-    from benchmarks import common
-    common.write_result("prune_bench", payload)
-    print(f"\nwrote {out_path}; speedup vs host-loop: "
-          + "  ".join(f"{k}={v:.2f}x" for k, v in sorted(summary.items())))
+
+def bench_prune_impls(d_model: int = 64, d_ff: int = 128,
+                      repeats: int = 5) -> List[Dict]:
+    """FISTA outer-loop implementation comparison (host/fused/fused-group)."""
+    model, params, calib = _unit_problem(d_model, d_ff)
+    rows: List[Dict] = []
+    for sparsity in SPARSITIES:
+        for name, recipe in _impl_recipes(sparsity).items():
+            row = dict(impl=name, sparsity=sparsity, d_model=d_model,
+                       d_ff=d_ff,
+                       **_timed_prune(model, params, calib, recipe, repeats))
+            rows.append(row)
+            print(f"{name:>12} {sparsity}: unit {row['unit_seconds']*1e3:8.1f} ms  "
+                  f"solver {row['solver_seconds']*1e3:8.1f} ms  "
+                  f"({row['batched_operators']}/{row['operators']} batched)")
+    return rows
+
+
+def bench_solver_matrix(d_model: int = 64, d_ff: int = 128,
+                        repeats: int = 3) -> List[Dict]:
+    """One row per registered solver per sparsity — the pluggable-API
+    surface under benchmark.  New solvers: add the name to MATRIX."""
+    model, params, calib = _unit_problem(d_model, d_ff)
+    rows: List[Dict] = []
+    for sparsity in SPARSITIES:
+        for method in MATRIX:
+            solver_kw = dict(_FISTA_KW) if method == "fista" else {}
+            recipe = PruneRecipe(method=method, sparsity=sparsity,
+                                 solver=solver_kw)
+            # solvers that don't read the pruned-path Gram report the
+            # dense-path error ||YX - WX||; tag each row so rel_err
+            # columns are not compared across different metrics
+            error_stats = ("pruned-path" if recipe.build_solver().wants_pruned_gram
+                           else "dense-path")
+            row = dict(solver=method, sparsity=sparsity, d_model=d_model,
+                       d_ff=d_ff, error_stats=error_stats,
+                       **_timed_prune(model, params, calib, recipe, repeats))
+            rows.append(row)
+            print(f"{method:>12} {sparsity}: unit {row['unit_seconds']*1e3:8.1f} ms  "
+                  f"rel_err {row['mean_rel_err']:.4f} ({error_stats})  "
+                  f"({row['batched_operators']}/{row['operators']} batched)")
+    print("   (rel_err is ||YX*-WX|| for pruned-path rows, ||YX-WX|| for"
+          " dense-path rows — compare within a mode, or by table ppl)")
     return rows
 
 
@@ -120,6 +151,18 @@ def _summarize(rows: List[Dict]) -> Dict[str, float]:
     return out
 
 
-def run_all() -> List[Dict]:
+def run_all(out_path: str = OUT_PATH) -> List[Dict]:
     print("\n== Prune solver bench (host vs fused vs group-batched) ==")
-    return bench_prune_impls()
+    rows = bench_prune_impls()
+    print("\n== Per-solver matrix (fista / admm / wanda / sparsegpt) ==")
+    matrix = bench_solver_matrix()
+    summary = _summarize(rows)
+    payload = {"rows": rows, "solver_matrix": matrix, "summary": summary,
+               "backend": jax.default_backend()}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    from benchmarks import common
+    common.write_result("prune_bench", payload)
+    print(f"\nwrote {out_path}; speedup vs host-loop: "
+          + "  ".join(f"{k}={v:.2f}x" for k, v in sorted(summary.items())))
+    return rows

@@ -5,6 +5,9 @@
     PYTHONPATH=src python -m benchmarks.run --only table1,fig3
 
 Every benchmark prints its table and writes experiments/bench/<name>.json.
+``--only prune`` additionally writes BENCH_prune.json at the repo root:
+FISTA outer-loop impl rows plus the per-solver matrix (one row per
+registered solver — fista, admm, wanda, sparsegpt — per sparsity).
 The headline assertion of the suite (the paper's claim) is checked at the
 end: FISTAPruner ppl <= Wanda and SparseGPT at 50% and 2:4 on both
 families.

@@ -10,10 +10,8 @@ model family.
 """
 import argparse
 
-from repro.core.pruner import PrunerConfig
-from repro.core.sequential import SequentialConfig, prune_model
-from repro.core.sparsity import SparsitySpec
-from repro.data import CalibConfig, CorpusConfig, MarkovCorpus, calibration_batches
+from repro import api
+from repro.data import CorpusConfig, MarkovCorpus
 from repro.models.registry import model_def
 from repro.train import AdamWConfig, TrainConfig, Trainer, evaluate_ppl
 
@@ -36,16 +34,17 @@ def main():
     dense_ppl = evaluate_ppl(model, tr.params, corpus, 8, 64, 6)
     print(f"dense ppl = {dense_ppl:.3f}\n")
 
-    calib = calibration_batches(corpus, CalibConfig(num_sequences=32, seq_len=64,
-                                                    batch_size=8))
-    spec = SparsitySpec.parse(args.sparsity)
+    # one PruneRecipe per method — every registered solver flows through
+    # the same repro.api.prune entry point (DESIGN.md §7)
     print(f"{'method':>10} | {'ppl':>8} | {'mean rel err':>12}")
-    for method in ("magnitude", "wanda", "sparsegpt", "fista"):
-        cfg = SequentialConfig(
-            spec=spec, method=method,
-            pruner=PrunerConfig(warm_start="sparsegpt", fista_iters=20,
-                                eps=1e-6, max_outer=12))
-        pruned, reports = prune_model(model, tr.params, calib, cfg)
+    for method in ("magnitude", "wanda", "sparsegpt", "admm", "fista"):
+        solver_kw = {"warm_start": "sparsegpt", "fista_iters": 20,
+                     "eps": 1e-6, "max_outer": 12} if method == "fista" else {}
+        recipe = api.PruneRecipe(
+            method=method, sparsity=args.sparsity, solver=solver_kw,
+            calibration={"num_sequences": 32, "seq_len": 64, "batch_size": 8})
+        calib = api.calibration_for(recipe, corpus)
+        pruned, reports, _ = api.prune(model, tr.params, calib, recipe)
         ppl = evaluate_ppl(model, pruned, corpus, 8, 64, 6)
         rel = sum(r.rel_error for r in reports) / max(len(reports), 1)
         print(f"{method:>10} | {ppl:8.3f} | {rel:12.4f}")

@@ -9,7 +9,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import gram
-from repro.core.pruner import PrunerConfig, prune_operator, prune_with_method
+from repro.core.pruner import PrunerConfig, prune_operator
+from repro.core.solvers import get_solver
 from repro.core.sparsity import SparsitySpec, sparsity
 
 # a synthetic "linear operator + calibration activations" problem:
@@ -36,8 +37,9 @@ print(f"sparsity        : {float(sparsity(res.weight)):.3f} (target {1-spec.targ
 print(f"relative error  : {res.rel_error:.4f}  (||W*X - WX||_F / ||WX||_F)")
 print(f"final lambda    : {res.lam:.3e}  after {res.outer_iters} outer iters")
 
-# 3. compare against the baselines on the same statistics
-for method in ("magnitude", "wanda", "sparsegpt"):
-    _, err = prune_with_method(method, W, stats, spec)
-    print(f"{method:>10} err : {err / np.sqrt(float(stats.h)):.4f}")
-print(f"{'fista':>10} err : {res.rel_error:.4f}   <- should be the smallest")
+# 3. compare against other registered solvers on the same statistics
+#    (every method is a LayerSolver — see core/solvers.py / DESIGN.md §7)
+for method in ("magnitude", "wanda", "sparsegpt", "admm"):
+    r = get_solver(method).solve(W, stats, spec)
+    print(f"{method:>10} err : {r.rel_error:.4f}")
+print(f"{'fista':>10} err : {res.rel_error:.4f}   <- should beat the one-shots")

@@ -1,0 +1,167 @@
+"""Public pruning API: a serializable ``PruneRecipe`` consumed by one
+entry point, :func:`prune` (DESIGN.md §7).
+
+A recipe is the complete, JSON-round-trippable description of a pruning
+run — architecture, solver (registry name + its kwargs), sparsity,
+error-correction mode, calibration sampling and scheduler settings:
+
+    from repro import api
+
+    recipe = api.PruneRecipe(arch="opt125m-proxy", method="admm",
+                             sparsity="2:4",
+                             solver={"rho_rel": 0.1},
+                             calibration={"num_sequences": 32, "seq_len": 64},
+                             scheduler={"workers": 4})
+    pruned, reports, stats = api.prune(model, params, calib, recipe)
+
+Every launcher (launch/prune.py, launch/dryrun.py, benchmarks) builds
+recipes instead of hand-assembling SequentialConfig / PrunerConfig /
+SchedulerConfig trees, so defaults live in exactly one place and a run
+is reproducible from its serialized recipe alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ALL_ARCHS
+from repro.core import solvers as solvers_lib
+from repro.core.driver import parallel_prune
+from repro.core.scheduler import SchedulerConfig
+from repro.core.sequential import OperatorReport, SequentialConfig
+from repro.core.solvers import LayerSolver
+from repro.core.sparsity import SparsitySpec
+from repro.data import CalibConfig, calibration_batches
+from repro.models.registry import ModelDef, load_arch
+
+#: every `--arch` a launcher accepts (registry archs + the CI proxy)
+ARCH_CHOICES: Tuple[str, ...] = tuple(ALL_ARCHS) + ("opt125m-proxy",)
+
+_CORRECTIONS = ("intra", "none", "full")
+
+
+def load_model(arch: str, smoke: bool = False) -> ModelDef:
+    """The one arch -> ModelDef builder shared by all launchers."""
+    if arch not in ARCH_CHOICES:
+        raise ValueError(f"unknown arch {arch!r}; choices: "
+                         f"{', '.join(ARCH_CHOICES)}")
+    return load_arch(arch, smoke=smoke)
+
+
+def _checked_kwargs(kwargs: Dict[str, Any], cls, what: str) -> Dict[str, Any]:
+    """Reject keys that are not fields of the target config dataclass —
+    the recipe must fail loudly instead of silently dropping a knob."""
+    fields = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(kwargs) - fields)
+    if unknown:
+        raise ValueError(f"unknown {what} keys {unknown}; "
+                         f"valid: {sorted(fields)}")
+    return dict(kwargs)
+
+
+@dataclasses.dataclass
+class PruneRecipe:
+    """Serializable description of one pruning run.
+
+    ``solver`` holds the registered solver's own kwargs (e.g. FISTA's
+    ``fista_iters``/``outer_impl``, ADMM's ``rho_rel``, SparseGPT's
+    ``blocksize``); ``calibration`` overrides :class:`CalibConfig` fields;
+    ``scheduler`` overrides :class:`SchedulerConfig` fields.
+    """
+
+    arch: str = "opt125m-proxy"
+    method: str = "fista"
+    solver: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    sparsity: str = "50%"
+    correction: str = "intra"
+    calibration: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    scheduler: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.correction not in _CORRECTIONS:
+            raise ValueError(f"unknown correction {self.correction!r}; "
+                             f"choices: {_CORRECTIONS}")
+        SparsitySpec.parse(self.sparsity)          # fail early on bad specs
+        self.scheduler_config()                    # ... bad kwargs
+        self.calib_config()
+        self.build_solver()                        # ... and bad solvers —
+        # a typo'd --recipe must die at load time, not after the dense
+        # model has been trained
+
+    # -- builders ------------------------------------------------------------
+    def build_solver(self) -> LayerSolver:
+        """Registry lookup; unknown names list the registered solvers."""
+        try:
+            return solvers_lib.get_solver(self.method, **self.solver)
+        except TypeError as exc:
+            raise ValueError(
+                f"bad solver kwargs {sorted(self.solver)} for "
+                f"{self.method!r}: {exc}") from None
+
+    def sparsity_spec(self) -> SparsitySpec:
+        return SparsitySpec.parse(self.sparsity)
+
+    def sequential_config(self) -> SequentialConfig:
+        solver = self.build_solver()
+        # mirror a FISTA solver's config into the legacy field so anything
+        # still reading cfg.pruner sees the recipe's knobs, not defaults
+        pruner = solver.cfg if isinstance(solver, solvers_lib.FistaSolver) \
+            else SequentialConfig().pruner
+        return SequentialConfig(spec=self.sparsity_spec(), pruner=pruner,
+                                method=self.method, solver=solver,
+                                error_correction=self.correction)
+
+    def calib_config(self) -> CalibConfig:
+        return CalibConfig(**_checked_kwargs(self.calibration, CalibConfig,
+                                             "calibration"))
+
+    def scheduler_config(self) -> SchedulerConfig:
+        return SchedulerConfig(**_checked_kwargs(self.scheduler,
+                                                 SchedulerConfig, "scheduler"))
+
+    def load_model(self, smoke: bool = False) -> ModelDef:
+        return load_model(self.arch, smoke=smoke)
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PruneRecipe":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - fields)
+        if unknown:
+            raise ValueError(f"unknown PruneRecipe keys {unknown}; "
+                             f"valid: {sorted(fields)}")
+        return cls(**d)
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        text = json.dumps(self.to_dict(), indent=1, sort_keys=True)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text + "\n")
+        return text
+
+    @classmethod
+    def from_json(cls, text_or_path: str) -> "PruneRecipe":
+        if text_or_path.lstrip().startswith("{"):
+            return cls.from_dict(json.loads(text_or_path))
+        with open(text_or_path) as f:
+            return cls.from_dict(json.load(f))
+
+
+def prune(model: ModelDef, params: Any, calib: Sequence[Dict],
+          recipe: PruneRecipe,
+          sched: Optional[SchedulerConfig] = None
+          ) -> Tuple[Any, List[OperatorReport], Dict]:
+    """Prune ``params`` per the recipe.  Returns (pruned params, per-operator
+    reports, scheduler stats) — the single entry point every launcher uses."""
+    return parallel_prune(model, params, calib, recipe.sequential_config(),
+                          sched if sched is not None
+                          else recipe.scheduler_config())
+
+
+def calibration_for(recipe: PruneRecipe, corpus) -> List[Dict]:
+    """Sample the recipe's calibration batches from a corpus."""
+    return calibration_batches(corpus, recipe.calib_config())

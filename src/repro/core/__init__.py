@@ -1,13 +1,19 @@
 """FISTAPruner core: convex model, FISTA solver, Algorithm-1 pruner,
-baselines, intra-layer error correction and the layer-unit scheduler."""
+the LayerSolver registry (ADMM + baselines), intra-layer error
+correction and the layer-unit scheduler."""
 from repro.core.gram import GramStats, accumulate, init_stats, frob_error, target_correlation
 from repro.core.sparsity import SparsitySpec, round_to
 from repro.core.pruner import (PruneResult, PrunerConfig, prune_group,
                                prune_operator, prune_with_method)
+from repro.core.admm import AdmmConfig
+from repro.core.solvers import (LayerSolver, get_solver, register_solver,
+                                registered_solvers)
 
 __all__ = [
     "GramStats", "accumulate", "init_stats", "frob_error", "target_correlation",
     "SparsitySpec", "round_to",
     "PruneResult", "PrunerConfig", "prune_group", "prune_operator",
     "prune_with_method",
+    "AdmmConfig",
+    "LayerSolver", "get_solver", "register_solver", "registered_solvers",
 ]

@@ -117,6 +117,26 @@ def _sparsegpt_block(W1: jnp.ndarray, U1: jnp.ndarray, ratio: float,
     return W1f, Err1
 
 
+def warm_start(name_or_w, w: jnp.ndarray, stats: GramStats,
+               spec: SparsitySpec) -> jnp.ndarray:
+    """Dispatch a warm-start candidate by name (or pass an array through).
+
+    Shared by the iterative solvers (FISTA's Algorithm 1, the ADMM
+    backend): all of them start from a baseline solution per paper Sec. 4.1.
+    """
+    if not isinstance(name_or_w, str):
+        return jnp.asarray(name_or_w, jnp.float32)
+    if name_or_w == "wanda":
+        return wanda(w, stats, spec)
+    if name_or_w == "sparsegpt":
+        return sparsegpt(w, stats, spec)
+    if name_or_w == "magnitude":
+        return magnitude(w, spec)
+    if name_or_w == "dense":
+        return w.astype(jnp.float32)
+    raise ValueError(f"unknown warm start {name_or_w!r}")
+
+
 def sparsegpt(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
               blocksize: int = 128, damp_rel: float = 0.01,
               use_pruned_gram: bool = False) -> jnp.ndarray:

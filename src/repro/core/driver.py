@@ -50,6 +50,7 @@ def parallel_prune(model: ModelDef, params: Any, calib_batches: Sequence[Dict],
                    cfg: SequentialConfig,
                    sched: SchedulerConfig = SchedulerConfig()
                    ) -> Tuple[Any, List[OperatorReport], Dict]:
+    cfg = cfg.with_solver()   # resolve the legacy (method, pruner) pair once
     if cfg.error_correction == "full":
         new_params, reports = seq_lib.prune_model(model, params, calib_batches, cfg)
         return new_params, reports, {"mode": "serial-full"}
@@ -65,12 +66,11 @@ def parallel_prune(model: ModelDef, params: Any, calib_batches: Sequence[Dict],
         pruned_states = [dict(s) for s in dense_states]
         pruned_unit, reports, _ = seq_lib.prune_unit(
             model, spec, dense_unit, dense_states, pruned_states, cfg)
+        telemetry = dict(cfg.solver.describe(),
+                         batched_ops=sum(1 for r in reports if r.group_size > 1))
         return {"unit_params": pruned_unit,
                 "reports": [dataclasses.asdict(r) for r in reports],
-                "solver": {"outer_impl": cfg.pruner.outer_impl,
-                           "group_batch": cfg.pruner.group_batch,
-                           "batched_ops": sum(1 for r in reports
-                                              if r.solver == "fused-group")}}
+                "solver": telemetry}
 
     def save_payload(name: str, payload: Dict) -> None:
         store.save(sched.checkpoint_dir, f"unit_{name}",

@@ -79,19 +79,8 @@ class PruneResult:
     warm_error: float              # error of the warm start (for ablation)
 
 
-def _warm_start(name_or_w: Union[str, jnp.ndarray], w: jnp.ndarray,
-                stats: GramStats, spec: SparsitySpec) -> jnp.ndarray:
-    if not isinstance(name_or_w, str):
-        return jnp.asarray(name_or_w, jnp.float32)
-    if name_or_w == "wanda":
-        return baselines_lib.wanda(w, stats, spec)
-    if name_or_w == "sparsegpt":
-        return baselines_lib.sparsegpt(w, stats, spec)
-    if name_or_w == "magnitude":
-        return baselines_lib.magnitude(w, spec)
-    if name_or_w == "dense":
-        return w.astype(jnp.float32)
-    raise ValueError(f"unknown warm start {name_or_w!r}")
+# warm-start dispatch lives with the baselines it selects from
+_warm_start = baselines_lib.warm_start
 
 
 # ---------------------------------------------------------------------------
@@ -353,23 +342,27 @@ def _prune_operator_host(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
 def prune_with_method(method: str, w: jnp.ndarray, stats: GramStats,
                       spec: SparsitySpec, cfg: PrunerConfig = PrunerConfig()
                       ) -> tuple[jnp.ndarray, float]:
-    """Uniform entry point for benchmarks: returns (pruned weight, error)."""
-    w = jnp.asarray(w, jnp.float32)
-    if method == "fista":
-        r = prune_operator(w, stats, spec, cfg)
-        return r.weight, r.error
-    if method == "wanda":
-        y = baselines_lib.wanda(w, stats, spec)
-    elif method == "sparsegpt":
-        y = baselines_lib.sparsegpt(w, stats, spec)
-    elif method == "magnitude":
-        y = baselines_lib.magnitude(w, spec)
-    elif method == "dense":
-        y = w
-    else:
-        raise ValueError(f"unknown method {method!r}")
-    B = gram_lib.target_correlation(stats, w)
-    return y, float(gram_lib.frob_error(stats, y, B))
+    """DEPRECATED string switch — use the solver registry instead:
+
+        repro.core.solvers.get_solver(method).solve(w, stats, spec)
+
+    Kept as a thin shim so pre-redesign callers keep working; delegates to
+    the registered solver and returns the legacy (weight, error) pair.
+    """
+    import warnings
+
+    warnings.warn(
+        "prune_with_method is deprecated; use "
+        "repro.core.solvers.get_solver(name).solve(...) or a PruneRecipe "
+        "(repro.api)", DeprecationWarning, stacklevel=2)
+    from repro.core import solvers as solvers_lib
+
+    try:
+        solver = solvers_lib.from_legacy(method, cfg)
+    except KeyError as exc:
+        raise ValueError(str(exc)) from None
+    res = solver.solve(jnp.asarray(w, jnp.float32), stats, spec)
+    return res.weight, res.error
 
 
-METHODS = ("dense", "magnitude", "wanda", "sparsegpt", "fista")
+METHODS = ("dense", "magnitude", "wanda", "sparsegpt", "fista", "admm")

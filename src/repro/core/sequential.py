@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 import weakref
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -33,9 +34,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gram as gram_lib
-from repro.core import pruner as pruner_lib
+from repro.core import solvers as solvers_lib
 from repro.core.gram import GramStats
 from repro.core.pruner import PrunerConfig
+from repro.core.solvers import LayerSolver
 from repro.core.sparsity import SparsitySpec
 from repro.models.registry import ModelDef
 from repro.models.transformer import UnitSpec
@@ -49,9 +51,29 @@ log = get_logger("sequential")
 @dataclasses.dataclass(frozen=True)
 class SequentialConfig:
     spec: SparsitySpec = SparsitySpec(ratio=0.5)
-    pruner: PrunerConfig = PrunerConfig()
-    method: str = "fista"            # fista | wanda | sparsegpt | magnitude
+    pruner: PrunerConfig = PrunerConfig()    # legacy fista knobs (see below)
+    method: str = "fista"            # registry name (core/solvers.py)
     error_correction: str = "intra"  # intra | none | full
+    # canonical solver handle; when None the legacy (method, pruner) pair is
+    # resolved through the registry with a DeprecationWarning.  PruneRecipe
+    # (repro/api.py) always sets this.
+    solver: Optional[LayerSolver] = None
+
+    def resolve_solver(self) -> LayerSolver:
+        if self.solver is not None:
+            return self.solver
+        warnings.warn(
+            "SequentialConfig(method=...) without an explicit solver is "
+            "deprecated; build a PruneRecipe (repro.api) or pass "
+            "solver=repro.core.solvers.get_solver(name, ...)",
+            DeprecationWarning, stacklevel=3)
+        return solvers_lib.from_legacy(self.method, self.pruner)
+
+    def with_solver(self) -> "SequentialConfig":
+        """Return a config whose ``solver`` field is materialized."""
+        if self.solver is not None:
+            return self
+        return dataclasses.replace(self, solver=self.resolve_solver())
 
 
 @dataclasses.dataclass
@@ -210,20 +232,27 @@ def prune_unit(model: ModelDef, spec: UnitSpec, dense_unit: Any,
     ``dense_states[b]`` / ``pruned_states[b]`` are the unit-input states of
     calibration micro-batch b on the dense / pruned paths.
     """
+    cfg = cfg.with_solver()
+    solver = cfg.solver
     fwd = _capture_forward(model, spec)
     current = dense_unit  # progressively replaced with pruned weights
     reports: List[OperatorReport] = []
     # dense-path captures don't change while the unit is pruned: one pass
     dense_caps = [fwd(dense_unit, s)[1] for s in dense_states]
-    ec_none = cfg.error_correction == "none"
+    # the pruned-path forward is skipped in the "none" ablation AND for
+    # solvers that only read dense-path statistics.  In the latter case the
+    # weights are unaffected, but the reported per-operator error becomes
+    # the dense-path reconstruction error ||YX - WX|| (the standard metric
+    # of the Wanda/SparseGPT literature) instead of the relay error
+    # ||YX* - WX|| — cross-solver rel_error comparisons must account for
+    # this (benchmarks tag each row with its error_stats mode).
+    ec_none = cfg.error_correction == "none" or not solver.wants_pruned_gram
     buckets = _shape_buckets(dense_states)
-    # the scan body never reads the pruned states in the "none" ablation —
+    # the scan body never reads the pruned states when ec_none —
     # pass cheap placeholders instead of stacking a copy of every state
     pruned_stacked = [jnp.zeros((len(idx),), jnp.float32) if ec_none
                       else tree_stack([dict(pruned_states[i]) for i in idx])
                       for idx in buckets]
-    use_group = (cfg.method == "fista" and cfg.pruner.outer_impl == "fused"
-                 and cfg.pruner.group_batch)
 
     for group in spec.groups:
         # accumulate Gram statistics for every operator of the group in one
@@ -241,43 +270,33 @@ def prune_unit(model: ModelDef, spec: UnitSpec, dense_unit: Any,
                 group_keys=group_keys, ec_none=ec_none)
 
         # prune the group's operators against their statistics: same-shape
-        # operators are solved in one vmap-batched dispatch when possible
+        # operators are solved in one batched dispatch when the solver can
         for sub in _shape_subgroups(group, dense_unit):
-            if use_group and len(sub) > 1:
+            if solver.supports_group_batch and len(sub) > 1:
                 t0 = time.perf_counter()
-                results = pruner_lib.prune_group(
+                results = solver.solve_group(
                     [jnp.asarray(ws[k], jnp.float32).T for k in sub],
-                    [stats[k] for k in sub], cfg.spec, cfg.pruner)
+                    [stats[k] for k in sub], cfg.spec)
                 per_op = (time.perf_counter() - t0) / len(sub)
                 for key, res in zip(sub, results):
                     rep = OperatorReport(
                         spec.name, key, tuple(res.weight.shape), res.error,
                         res.rel_error, res.lam, res.outer_iters,
-                        res.fista_iters, per_op, "fused-group", len(sub))
+                        res.fista_iters, per_op, solver.group_label, len(sub))
                     reports.append(rep)
                     current = set_weight(current, key, res.weight.T)
                 continue
             for key in sub:
                 w_paper = jnp.asarray(ws[key], jnp.float32).T   # (out, in)
                 t0 = time.perf_counter()
-                if cfg.method == "fista":
-                    res = pruner_lib.prune_operator(w_paper, stats[key],
-                                                    cfg.spec, cfg.pruner)
-                    new_w, err = res.weight, res.error
-                    rep = OperatorReport(spec.name, key, tuple(w_paper.shape),
-                                         err, res.rel_error, res.lam,
-                                         res.outer_iters, res.fista_iters,
-                                         solver=cfg.pruner.outer_impl)
-                else:
-                    new_w, err = pruner_lib.prune_with_method(
-                        cfg.method, w_paper, stats[key], cfg.spec, cfg.pruner)
-                    wx_norm = float(np.sqrt(max(float(stats[key].h), 1e-30)))
-                    rep = OperatorReport(spec.name, key, tuple(w_paper.shape),
-                                         err, err / max(wx_norm, 1e-30),
-                                         solver=cfg.method)
+                res = solver.solve(w_paper, stats[key], cfg.spec)
+                rep = OperatorReport(spec.name, key, tuple(w_paper.shape),
+                                     res.error, res.rel_error, res.lam,
+                                     res.outer_iters, res.fista_iters,
+                                     solver=solver.op_label)
                 rep.seconds = time.perf_counter() - t0
                 reports.append(rep)
-                current = set_weight(current, key, new_w.T)
+                current = set_weight(current, key, res.weight.T)
 
     # relay: pruned next states through the fully-pruned unit
     pruned_next = []
@@ -296,6 +315,7 @@ def prune_model(model: ModelDef, params: Any, calib_batches: Sequence[Dict],
                 progress: Optional[Callable[[str], None]] = None
                 ) -> Tuple[Any, List[OperatorReport]]:
     """Prune every unit of ``params`` using the calibration batches."""
+    cfg = cfg.with_solver()   # resolve the legacy (method, pruner) pair once
     units = list(units if units is not None else model.units())
     dense_states = [model.embed(params, b) for b in calib_batches]
     pruned_states = [dict(s) for s in dense_states]

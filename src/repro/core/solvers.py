@@ -1,0 +1,283 @@
+"""Unified LayerSolver protocol + registry: one pluggable API for every
+pruning method (DESIGN.md §7).
+
+The paper's FISTAPruner is one member of a family of layer-wise pruners
+that share everything except the per-operator solve: ALPS swaps FISTA for
+ADMM (arXiv:2406.07831), Frank-Wolfe relaxes the same objective
+(arXiv:2510.13713), and the one-shot baselines (magnitude / Wanda /
+SparseGPT) are degenerate single-candidate members.  A ``LayerSolver``
+owns exactly that per-operator solve:
+
+    solve(w, stats, spec) -> PruneResult          # paper layout (out, in)
+    solve_group(ws, stats, spec) -> [PruneResult] # same-shape batch
+
+plus two capability flags the pipeline consults:
+
+* ``supports_group_batch`` — the solver can batch all same-shape
+  operators of a pruning group into one dispatch (core/sequential.py
+  partitions groups by shape and calls ``solve_group``);
+* ``wants_pruned_gram``    — the solver reads the pruned-path statistics
+  G = X* X*^T / C = X X*^T.  When no solver in play wants them, the
+  group-stats scan skips the pruned-path forward entirely (the baselines
+  only read the dense-path H / diag(H)).
+
+Adding a method is one registered class — zero edits to
+core/sequential.py, the driver, or the launchers:
+
+    @register_solver("mymethod")
+    class MySolver(LayerSolver):
+        def solve(self, w, stats, spec): ...
+
+and every entry point (`SequentialConfig`, `PruneRecipe`,
+``--method mymethod``) picks it up by name.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import admm as admm_lib
+from repro.core import baselines as baselines_lib
+from repro.core import gram as gram_lib
+from repro.core import pruner as pruner_lib
+from repro.core.admm import AdmmConfig
+from repro.core.gram import GramStats
+from repro.core.pruner import PruneResult, PrunerConfig, _make_result
+from repro.core.sparsity import SparsitySpec
+
+
+class LayerSolver(abc.ABC):
+    """One pruning method, in the paper layout W (out=m, in=n).
+
+    Subclasses are registered with :func:`register_solver` and constructed
+    by name via :func:`get_solver` (kwargs are the solver's own knobs, so
+    they serialize naturally into a ``PruneRecipe``).
+    """
+
+    name: str = "?"              # set by @register_solver
+    wants_pruned_gram: bool = True
+
+    @property
+    def supports_group_batch(self) -> bool:
+        return False
+
+    @property
+    def op_label(self) -> str:
+        """OperatorReport.solver tag for a per-operator solve."""
+        return self.name
+
+    @property
+    def group_label(self) -> str:
+        """OperatorReport.solver tag for a batched group solve."""
+        return f"{self.name}-group"
+
+    @abc.abstractmethod
+    def solve(self, w: jnp.ndarray, stats: GramStats,
+              spec: SparsitySpec) -> PruneResult:
+        ...
+
+    def solve_group(self, ws: Sequence[jnp.ndarray],
+                    stats: Sequence[GramStats],
+                    spec: SparsitySpec) -> List[PruneResult]:
+        """Batch solve; the fallback is a per-operator loop so every
+        solver is group-callable regardless of ``supports_group_batch``."""
+        return [self.solve(w, st, spec) for w, st in zip(ws, stats)]
+
+    def describe(self) -> Dict[str, Any]:
+        """Scheduler/driver telemetry payload."""
+        return {"name": self.name, "group_batch": self.supports_group_batch}
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, Type[LayerSolver]] = {}
+
+
+def register_solver(name: str) -> Callable[[Type[LayerSolver]], Type[LayerSolver]]:
+    """Class decorator: ``@register_solver("mymethod")``."""
+
+    def deco(cls: Type[LayerSolver]) -> Type[LayerSolver]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def registered_solvers() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def unregister_solver(name: str) -> None:
+    """Remove a registered solver (test helper for toy solvers)."""
+    _REGISTRY.pop(name, None)
+
+
+def get_solver(name: str, **kwargs: Any) -> LayerSolver:
+    """Instantiate a registered solver by name with its own kwargs."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown solver {name!r}; registered solvers: "
+            f"{', '.join(registered_solvers())}") from None
+    return cls(**kwargs)
+
+
+def from_legacy(method: str,
+                pruner: Optional[PrunerConfig] = None) -> LayerSolver:
+    """Map the pre-redesign (method, PrunerConfig) pair onto a solver.
+
+    Only "fista" ever consumed the PrunerConfig; every other legacy method
+    ignores it (exactly as the old string switch did).
+    """
+    if method == "fista":
+        return FistaSolver(cfg=pruner)
+    return get_solver(method)
+
+
+# ---------------------------------------------------------------------------
+# iterative solvers
+# ---------------------------------------------------------------------------
+@register_solver("fista")
+class FistaSolver(LayerSolver):
+    """The paper's Algorithm 1 (core/pruner.py): FISTA + lambda bisection."""
+
+    wants_pruned_gram = True
+
+    def __init__(self, cfg: Optional[PrunerConfig] = None, **overrides: Any):
+        self.cfg = dataclasses.replace(cfg or PrunerConfig(), **overrides)
+
+    @property
+    def supports_group_batch(self) -> bool:
+        return self.cfg.outer_impl == "fused" and self.cfg.group_batch
+
+    @property
+    def op_label(self) -> str:
+        return self.cfg.outer_impl          # "fused" | "host"
+
+    @property
+    def group_label(self) -> str:
+        return "fused-group"
+
+    def solve(self, w, stats, spec):
+        return pruner_lib.prune_operator(w, stats, spec, self.cfg)
+
+    def solve_group(self, ws, stats, spec):
+        return pruner_lib.prune_group(list(ws), list(stats), spec, self.cfg)
+
+    def describe(self):
+        return {"name": self.name, "outer_impl": self.cfg.outer_impl,
+                "group_batch": self.cfg.group_batch}
+
+
+@register_solver("admm")
+class AdmmSolver(LayerSolver):
+    """ALPS-style ADMM on the same objective (core/admm.py)."""
+
+    wants_pruned_gram = True
+
+    def __init__(self, cfg: Optional[AdmmConfig] = None, **overrides: Any):
+        self.cfg = dataclasses.replace(cfg or AdmmConfig(), **overrides)
+
+    @property
+    def supports_group_batch(self) -> bool:
+        return True
+
+    def solve(self, w, stats, spec):
+        return admm_lib.prune_operator_admm(w, stats, spec, self.cfg)
+
+    def solve_group(self, ws, stats, spec):
+        return admm_lib.prune_group_admm(list(ws), list(stats), spec, self.cfg)
+
+    def describe(self):
+        return {"name": self.name, "rho_rel": self.cfg.rho_rel,
+                "group_batch": True}
+
+
+# ---------------------------------------------------------------------------
+# one-shot solvers (the paper's baselines)
+# ---------------------------------------------------------------------------
+class OneShotSolver(LayerSolver):
+    """Single-candidate methods: score/sweep once, report the exact
+    Gram-form error of the candidate.  Group solves vmap the candidate
+    construction + error evaluation into one dispatch."""
+
+    wants_pruned_gram = False
+
+    @property
+    def supports_group_batch(self) -> bool:
+        return True
+
+    def _candidate(self, w: jnp.ndarray, stats: GramStats,
+                   spec: SparsitySpec) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def _solve_traced(self, w, stats, spec):
+        w = w.astype(jnp.float32)
+        y = self._candidate(w, stats, spec)
+        b = gram_lib.target_correlation(stats, w)
+        return y, gram_lib.frob_error(stats, y, b)
+
+    def solve(self, w, stats, spec):
+        w = jnp.asarray(w, jnp.float32)
+        y, e = self._solve_traced(w, stats, spec)
+        return _make_result(y, float(e), 0.0, 0, 0, float(e), float(stats.h))
+
+    def solve_group(self, ws, stats, spec):
+        ws = jnp.stack([jnp.asarray(w, jnp.float32) for w in ws])
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stats)
+        ys, es = jax.vmap(
+            lambda w, st: self._solve_traced(w, st, spec))(ws, stacked)
+        e_np = np.asarray(es, np.float32)
+        h_np = np.asarray(stacked.h, np.float32)
+        return [_make_result(ys[i], float(e_np[i]), 0.0, 0, 0, float(e_np[i]),
+                             float(h_np[i]))
+                for i in range(ws.shape[0])]
+
+
+@register_solver("magnitude")
+class MagnitudeSolver(OneShotSolver):
+    def _candidate(self, w, stats, spec):
+        return baselines_lib.magnitude(w, spec)
+
+
+@register_solver("wanda")
+class WandaSolver(OneShotSolver):
+    def _candidate(self, w, stats, spec):
+        return baselines_lib.wanda(w, stats, spec)
+
+
+@register_solver("sparsegpt")
+class SparseGptSolver(OneShotSolver):
+    def __init__(self, blocksize: int = 128, damp_rel: float = 0.01,
+                 use_pruned_gram: bool = False):
+        self.blocksize = blocksize
+        self.damp_rel = damp_rel
+        self.use_pruned_gram = use_pruned_gram
+        # capability follows the Gram the sweep actually reads
+        self.wants_pruned_gram = use_pruned_gram
+
+    def _candidate(self, w, stats, spec):
+        return baselines_lib.sparsegpt(
+            w, stats, spec, blocksize=self.blocksize, damp_rel=self.damp_rel,
+            use_pruned_gram=self.use_pruned_gram)
+
+    def describe(self):
+        return {"name": self.name, "blocksize": self.blocksize,
+                "use_pruned_gram": self.use_pruned_gram,
+                "group_batch": True}
+
+
+@register_solver("dense")
+class DenseSolver(OneShotSolver):
+    """No-op solver (keeps the dense weights) — benchmark control row."""
+
+    def _candidate(self, w, stats, spec):
+        return w

@@ -35,10 +35,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import api
 from repro.configs.base import ALL_ARCHS, SHAPES, ShapeSpec, shape_applicable
 from repro.distributed import sharding as rules
 from repro.launch.mesh import make_production_mesh
-from repro.models.registry import ModelDef, load_arch
+from repro.models.registry import ModelDef
 from repro.train import optim
 from repro.utils import compat
 
@@ -251,7 +252,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         _write(rec, out_dir)
         return rec
 
-    model = load_arch(arch, smoke=False)
+    # same arch builder as launch/prune.py (repro.api) — the two drivers
+    # must not drift on how an arch name resolves to a config
+    model = api.load_model(arch)
     if unroll:  # unrolled layers: accurate HLO cost accounting (scan bodies
         # are otherwise counted ONCE by XLA's cost analysis)
         from repro.models.registry import model_def
@@ -374,7 +377,7 @@ def run_cell_extrapolated(arch: str, shape_name: str, multi_pod: bool,
         _write(rec, out_dir)
         return rec
 
-    model = load_arch(arch, smoke=False)
+    model = api.load_model(arch)
     if flash:
         from repro.models.registry import model_def as _md
         model = _md(model.cfg.replace(attn_impl="flash"))
@@ -450,7 +453,7 @@ def run_cell_extrapolated(arch: str, shape_name: str, multi_pod: bool,
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ALL_ARCHS + ["opt125m-proxy"])
+    ap.add_argument("--arch", choices=list(api.ARCH_CHOICES))
     ap.add_argument("--shape", choices=list(SHAPES))
     ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
     ap.add_argument("--all", action="store_true")

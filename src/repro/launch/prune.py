@@ -1,40 +1,58 @@
-"""Pruning driver: train (or load) a model, prune it with any method,
-report perplexity before/after.
+"""Pruning driver: train (or load) a model, prune it with any registered
+solver, report perplexity before/after.
 
     python -m repro.launch.prune --arch opt125m-proxy --method fista \
         --sparsity 50% --workers 4 --ckpt-dir /tmp/prune_ckpts
+    python -m repro.launch.prune --method admm --sparsity 2:4
+    python -m repro.launch.prune --recipe my_recipe.json
 
 This is the end-to-end path of the paper: calibration data -> layer-wise
-FISTAPruner with intra-layer error correction -> pruned checkpoint ->
-WikiText-style perplexity table row.
+pruning with intra-layer error correction -> pruned checkpoint ->
+WikiText-style perplexity table row.  All pruning configuration flows
+through one ``repro.api.PruneRecipe`` (serialized into the JSON report,
+so any run is reproducible from its report alone).
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-import jax
-
-from repro.configs.base import ALL_ARCHS
-from repro.core.driver import parallel_prune
-from repro.core.pruner import PrunerConfig
-from repro.core.scheduler import SchedulerConfig
-from repro.core.sequential import SequentialConfig
-from repro.core.sparsity import SparsitySpec
-from repro.data import CalibConfig, CorpusConfig, MarkovCorpus, calibration_batches
-from repro.models.registry import load_arch
+from repro import api
+from repro.core.solvers import registered_solvers
+from repro.data import CorpusConfig, MarkovCorpus
 from repro.train import AdamWConfig, TrainConfig, Trainer, evaluate_ppl
 from repro.utils import get_logger
 
 log = get_logger("launch.prune")
 
 
+def recipe_from_args(args: argparse.Namespace) -> api.PruneRecipe:
+    """CLI flags -> PruneRecipe (the only place flags map onto config)."""
+    if args.recipe:
+        return api.PruneRecipe.from_json(args.recipe)
+    solver_kwargs = {}
+    if args.method == "fista":
+        solver_kwargs = {"warm_start": args.warm_start,
+                         "outer_impl": args.outer_impl,
+                         "group_batch": not args.no_group_batch}
+    elif args.method == "admm":
+        solver_kwargs = {"warm_start": args.warm_start}
+    return api.PruneRecipe(
+        arch=args.arch, method=args.method, solver=solver_kwargs,
+        sparsity=args.sparsity, correction=args.correction,
+        calibration={"num_sequences": args.calib_sequences,
+                     "seq_len": args.calib_seq_len, "batch_size": 8,
+                     "seed": args.seed},
+        scheduler={"workers": args.workers,
+                   "checkpoint_dir": args.ckpt_dir})
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="opt125m-proxy",
-                    choices=ALL_ARCHS + ["opt125m-proxy"])
+                    choices=list(api.ARCH_CHOICES))
     ap.add_argument("--method", default="fista",
-                    choices=["fista", "wanda", "sparsegpt", "magnitude"])
+                    choices=sorted(registered_solvers()))
     ap.add_argument("--sparsity", default="50%", help="'50%%' or '2:4'")
     ap.add_argument("--correction", default="intra", choices=["intra", "none", "full"])
     ap.add_argument("--warm-start", default="wanda",
@@ -45,6 +63,9 @@ def main() -> None:
     ap.add_argument("--no-group-batch", action="store_true",
                     help="disable the vmap-batched solve of same-shape"
                          " operator groups (wq/wk/wv, gate/up, MoE experts)")
+    ap.add_argument("--recipe", default=None,
+                    help="load the full PruneRecipe from this JSON file "
+                         "(overrides every other pruning flag)")
     ap.add_argument("--train-steps", type=int, default=150)
     ap.add_argument("--calib-sequences", type=int, default=32)
     ap.add_argument("--calib-seq-len", type=int, default=64)
@@ -54,44 +75,36 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    model = load_arch(args.arch, smoke=True)
+    recipe = recipe_from_args(args)
+    model = recipe.load_model(smoke=True)
     corpus = MarkovCorpus(CorpusConfig(vocab=model.cfg.vocab, seed=args.seed))
 
     log.info("training the dense model (%d steps)", args.train_steps)
+    seq_len = recipe.calib_config().seq_len
     tr = Trainer(model, corpus, TrainConfig(
-        steps=args.train_steps, batch=8, seq=args.calib_seq_len,
+        steps=args.train_steps, batch=8, seq=seq_len,
         optim=AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=args.train_steps)))
     tr.run()
-    dense_ppl = evaluate_ppl(model, tr.params, corpus, 8, args.calib_seq_len, 4)
+    dense_ppl = evaluate_ppl(model, tr.params, corpus, 8, seq_len, 4)
 
-    calib = calibration_batches(corpus, CalibConfig(
-        num_sequences=args.calib_sequences, seq_len=args.calib_seq_len,
-        batch_size=8, seed=args.seed))
-    cfg = SequentialConfig(
-        spec=SparsitySpec.parse(args.sparsity),
-        pruner=PrunerConfig(warm_start=args.warm_start,
-                            outer_impl=args.outer_impl,
-                            group_batch=not args.no_group_batch),
-        method=args.method, error_correction=args.correction)
-    pruned, reports, stats = parallel_prune(
-        model, tr.params, calib, cfg,
-        SchedulerConfig(workers=args.workers, checkpoint_dir=args.ckpt_dir))
-    pruned_ppl = evaluate_ppl(model, pruned, corpus, 8, args.calib_seq_len, 4)
+    calib = api.calibration_for(recipe, corpus)
+    pruned, reports, stats = api.prune(model, tr.params, calib, recipe)
+    pruned_ppl = evaluate_ppl(model, pruned, corpus, 8, seq_len, 4)
 
     rel = sum(r.rel_error for r in reports) / max(len(reports), 1)
-    batched = sum(1 for r in reports if r.solver == "fused-group")
-    print(f"arch={args.arch} method={args.method} sparsity={args.sparsity} "
-          f"correction={args.correction} outer_impl={args.outer_impl}")
+    batched = sum(1 for r in reports if r.group_size > 1)
+    print(f"arch={recipe.arch} method={recipe.method} "
+          f"sparsity={recipe.sparsity} correction={recipe.correction}")
     print(f"dense_ppl={dense_ppl:.3f} pruned_ppl={pruned_ppl:.3f} "
           f"mean_rel_err={rel:.4f} units={stats.get('completed', 'n/a')} "
           f"group_batched_ops={batched}/{len(reports)}")
     if args.out:
         with open(args.out, "w") as f:
-            json.dump({"arch": args.arch, "method": args.method,
-                       "sparsity": args.sparsity, "dense_ppl": dense_ppl,
+            json.dump({"arch": recipe.arch, "method": recipe.method,
+                       "sparsity": recipe.sparsity, "dense_ppl": dense_ppl,
                        "pruned_ppl": pruned_ppl, "mean_rel_err": rel,
-                       "outer_impl": args.outer_impl,
-                       "group_batched_ops": batched}, f)
+                       "group_batched_ops": batched,
+                       "recipe": recipe.to_dict()}, f)
 
 
 if __name__ == "__main__":

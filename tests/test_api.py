@@ -1,0 +1,130 @@
+"""PruneRecipe serialization + the repro.api.prune entry point.
+
+Pins the ISSUE-2 acceptance criteria: JSON round-trip, fista-recipe
+bitwise equivalence with the pre-redesign SequentialConfig path, and an
+admm recipe running end-to-end on the opt125m proxy family."""
+import numpy as np
+import jax
+import pytest
+
+from repro import api
+from repro.core.pruner import PrunerConfig
+from repro.core.scheduler import SchedulerConfig
+from repro.core.sequential import SequentialConfig
+from repro.core.driver import parallel_prune
+from repro.core.sparsity import SparsitySpec, satisfies
+from repro.data import CalibConfig, CorpusConfig, MarkovCorpus, calibration_batches
+from repro.models.registry import model_def
+from repro.utils.tree import flatten_with_paths
+
+
+def tiny_setup(seed=0, layers=2):
+    from repro.configs.opt125m_proxy import tiny_config
+    cfg = tiny_config().replace(num_layers=layers, d_model=32, d_ff=64,
+                                num_heads=4, num_kv_heads=4, vocab=128)
+    model = model_def(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    corpus = MarkovCorpus(CorpusConfig(vocab=cfg.vocab, seed=5))
+    calib = calibration_batches(corpus, CalibConfig(num_sequences=4, seq_len=16,
+                                                    batch_size=2))
+    return model, params, calib
+
+
+FAST_KW = {"fista_iters": 8, "max_outer": 6, "patience": 2, "eps": 1e-4}
+
+
+class TestRecipeSerialization:
+    def test_json_round_trip(self, tmp_path):
+        recipe = api.PruneRecipe(
+            arch="opt125m-proxy", method="admm", sparsity="2:4",
+            correction="none", solver={"rho_rel": 0.2, "max_iters": 32},
+            calibration={"num_sequences": 8, "seq_len": 32},
+            scheduler={"workers": 3})
+        back = api.PruneRecipe.from_json(recipe.to_json())
+        assert back == recipe
+        path = tmp_path / "recipe.json"
+        recipe.to_json(str(path))
+        assert api.PruneRecipe.from_json(str(path)) == recipe
+
+    def test_builders(self):
+        recipe = api.PruneRecipe(method="fista", sparsity="2:4",
+                                 solver=FAST_KW, scheduler={"workers": 2})
+        cfg = recipe.sequential_config()
+        assert isinstance(cfg, SequentialConfig)
+        assert cfg.solver is not None and cfg.solver.name == "fista"
+        assert cfg.pruner == PrunerConfig(**FAST_KW)   # mirrored legacy field
+        assert cfg.spec == SparsitySpec(kind="nm", n=2, m=4)
+        assert recipe.scheduler_config() == SchedulerConfig(workers=2)
+        assert recipe.calib_config() == CalibConfig()
+
+    def test_rejects_unknown_keys(self):
+        with pytest.raises(ValueError, match="calibration"):
+            api.PruneRecipe(calibration={"num_sequence": 8})   # typo'd key
+        with pytest.raises(ValueError, match="scheduler"):
+            api.PruneRecipe(scheduler={"worker_count": 2})
+        with pytest.raises(ValueError, match="PruneRecipe"):
+            api.PruneRecipe.from_dict({"method": "fista", "sparsityy": "50%"})
+        with pytest.raises(ValueError):
+            api.PruneRecipe(correction="sideways")
+
+    def test_unknown_method_lists_solvers_at_construction(self):
+        """A typo'd recipe must die at load time, before any training."""
+        with pytest.raises(KeyError, match="registered solvers"):
+            api.PruneRecipe(method="no-such")
+
+    def test_bad_solver_kwargs_fail_at_construction(self):
+        with pytest.raises(ValueError, match="fista_iter"):
+            api.PruneRecipe(method="fista", solver={"fista_iter": 8})  # typo
+        with pytest.raises(ValueError, match="admm"):
+            api.PruneRecipe(method="admm", solver={"rho": 0.1})
+
+
+class TestPruneEntryPoint:
+    def test_fista_recipe_bitwise_matches_legacy_path(self):
+        """Acceptance: the fista recipe is bitwise-identical to the
+        pre-redesign SequentialConfig(method='fista') path."""
+        model, params, calib = tiny_setup()
+        recipe = api.PruneRecipe(method="fista", sparsity="50%",
+                                 solver=FAST_KW, scheduler={"workers": 1})
+        new, new_reports, _ = api.prune(model, params, calib, recipe)
+
+        legacy_cfg = SequentialConfig(spec=SparsitySpec(ratio=0.5),
+                                      pruner=PrunerConfig(**FAST_KW),
+                                      method="fista")
+        with pytest.warns(DeprecationWarning):
+            old, old_reports, _ = parallel_prune(
+                model, params, calib, legacy_cfg, SchedulerConfig(workers=1))
+
+        for (pa, a), (pb, b) in zip(flatten_with_paths(old),
+                                    flatten_with_paths(new)):
+            assert pa == pb
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=pa)
+        assert [r.key for r in old_reports] == [r.key for r in new_reports]
+
+    @pytest.mark.parametrize("method,solver_kw", [
+        ("fista", FAST_KW),
+        ("admm", {"max_iters": 16, "polish_iters": 4}),
+    ])
+    def test_recipes_run_end_to_end_on_opt_proxy(self, method, solver_kw):
+        """Acceptance: {"method": "fista"} and {"method": "admm"} recipes
+        both run end-to-end on the opt125m proxy family."""
+        model, params, calib = tiny_setup(layers=1)
+        recipe = api.PruneRecipe(arch="opt125m-proxy", method=method,
+                                 sparsity="2:4", solver=solver_kw,
+                                 scheduler={"workers": 2})
+        pruned, reports, stats = api.prune(model, params, calib, recipe)
+        spec = SparsitySpec(kind="nm", n=2, m=4)
+        from repro.core import sequential as seq_lib
+        for u in model.units():
+            up = seq_lib._unit_params_of(pruned, u)
+            for group in u.groups:
+                for key in group:
+                    w = seq_lib.get_weight(up, key)
+                    assert satisfies(np.asarray(w, np.float32).T, spec)
+        assert all(np.isfinite(r.error) for r in reports)
+        assert stats.get("completed") == len(model.units())
+
+    def test_load_model_rejects_unknown_arch(self):
+        with pytest.raises(ValueError, match="unknown arch"):
+            api.load_model("opt350m")
