@@ -8,6 +8,10 @@ Every benchmark prints its table and writes experiments/bench/<name>.json.
 ``--only prune`` additionally writes BENCH_prune.json at the repo root:
 FISTA outer-loop impl rows plus the per-solver matrix (one row per
 registered solver — fista, admm, wanda, sparsegpt — per sparsity).
+``--only quality`` writes BENCH_quality.json (held-out perplexity / KL
+per solver per sparsity + the sparse-serving decode row) and enforces
+the committed 2:4-fista perplexity regression gate
+(benchmarks/quality_baseline.json).
 The headline assertion of the suite (the paper's claim) is checked at the
 end: FISTAPruner ppl <= Wanda and SparseGPT at 50% and 2:4 on both
 families.
@@ -25,11 +29,11 @@ def main() -> None:
                     help="more training steps + wider sweeps")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,ptbc4,fig3,fig4a,"
-                         "fig4b,seeds,kernels,prune")
+                         "fig4b,seeds,kernels,prune,quality")
     args = ap.parse_args()
 
     steps = 500 if args.full else 300
-    from benchmarks import figures, kernel_bench, prune_bench, tables
+    from benchmarks import figures, kernel_bench, prune_bench, quality_bench, tables
 
     registry = {
         "table1": lambda: tables.table1_opt_family(steps),
@@ -46,6 +50,7 @@ def main() -> None:
             steps, seeds=(0, 1, 2, 3, 4) if args.full else (0, 1, 2)),
         "kernels": kernel_bench.run_all,
         "prune": prune_bench.run_all,
+        "quality": lambda: quality_bench.run_all(steps),
     }
     names = args.only.split(",") if args.only else list(registry)
 
@@ -57,8 +62,15 @@ def main() -> None:
         results[name] = registry[name]()
         print(f"[{name} done in {time.perf_counter()-t1:.1f}s]")
 
-    # headline claim check (paper Tables 1-2 ordering)
+    # quality regression gate (checked at the end so a ppl drift never
+    # aborts the remaining benchmarks mid-suite)
     ok = True
+    q = results.get("quality")
+    if isinstance(q, dict) and not q.get("gate_ok", True):
+        ok = False
+        print(f"QUALITY GATE: {q.get('regression_gate')}")
+
+    # headline claim check (paper Tables 1-2 ordering)
     for tbl in ("table1", "table2"):
         if tbl not in results:
             continue
@@ -75,7 +87,8 @@ def main() -> None:
             print(f"CLAIM {tbl}@{sp}: fista={f:.3f} wanda={w:.3f} "
                   f"sparsegpt={s:.3f} -> {'PASS' if verdict else 'FAIL'}")
     print(f"\nbenchmarks completed in {time.perf_counter()-t0:.1f}s; "
-          f"headline ordering: {'PASS' if ok else 'FAIL'}")
+          f"verdict (headline ordering + quality gate): "
+          f"{'PASS' if ok else 'FAIL'}")
     if not ok:
         sys.exit(1)
 

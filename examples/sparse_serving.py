@@ -45,11 +45,20 @@ def main():
           f"({stats['packed_bytes']/stats['dense_bytes']:.3f}x weight traffic)")
 
     prompt = jnp.asarray(next(corpus.batches(2, 16))[1][:, :16], jnp.int32)
-    dense_out = Engine(model, pruned, ServeConfig(max_new_tokens=12)).generate(prompt)
+    # sparse="dense" is the fallback flag; the default sparse="auto" would
+    # detect the 2:4 checkpoint and pack it (losslessly) by itself
+    dense_out = Engine(model, pruned,
+                       ServeConfig(max_new_tokens=12, sparse="dense")).generate(prompt)
+    auto = Engine(model, pruned, ServeConfig(max_new_tokens=12))
+    print("auto-detected:", auto.sparse_stats)
+    auto_out = auto.generate(prompt)
     packed_out = Engine(model, packed, ServeConfig(max_new_tokens=12)).generate(prompt)
-    print("dense-weight decode :", dense_out[0].tolist())
-    print("packed-2:4 decode   :", packed_out[0].tolist())
-    print("identical:", bool(np.array_equal(dense_out, packed_out)))
+    print("dense-weight decode  :", dense_out[0].tolist())
+    print("auto-packed decode   :", auto_out[0].tolist())
+    print("bf16-packed decode   :", packed_out[0].tolist())
+    print("auto == dense (bitwise fp32 logits):",
+          bool(np.array_equal(dense_out, auto_out)))
+    print("bf16 == dense:", bool(np.array_equal(dense_out, packed_out)))
 
 
 if __name__ == "__main__":

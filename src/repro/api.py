@@ -33,10 +33,15 @@ from repro.core.sequential import OperatorReport, SequentialConfig
 from repro.core.solvers import LayerSolver
 from repro.core.sparsity import SparsitySpec
 from repro.data import CalibConfig, calibration_batches
+from repro.eval.perplexity import EvalConfig
 from repro.models.registry import ModelDef, load_arch
 
 #: every `--arch` a launcher accepts (registry archs + the CI proxy)
 ARCH_CHOICES: Tuple[str, ...] = tuple(ALL_ARCHS) + ("opt125m-proxy",)
+
+#: checkpoint names a prune run leaves in its run dir (written by
+#: launch/prune.py, consumed by launch/evaluate.py and the serve path)
+DENSE_MODEL, PRUNED_MODEL = "dense_model", "pruned_model"
 
 _CORRECTIONS = ("intra", "none", "full")
 
@@ -67,7 +72,9 @@ class PruneRecipe:
     ``solver`` holds the registered solver's own kwargs (e.g. FISTA's
     ``fista_iters``/``outer_impl``, ADMM's ``rho_rel``, SparseGPT's
     ``blocksize``); ``calibration`` overrides :class:`CalibConfig` fields;
-    ``scheduler`` overrides :class:`SchedulerConfig` fields.
+    ``scheduler`` overrides :class:`SchedulerConfig` fields; ``eval``
+    overrides :class:`EvalConfig` fields (perplexity / KL / error-budget
+    settings consumed by ``launch/evaluate.py`` and the quality bench).
     """
 
     arch: str = "opt125m-proxy"
@@ -77,6 +84,7 @@ class PruneRecipe:
     correction: str = "intra"
     calibration: Dict[str, Any] = dataclasses.field(default_factory=dict)
     scheduler: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    eval: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self) -> None:
         if self.correction not in _CORRECTIONS:
@@ -85,6 +93,7 @@ class PruneRecipe:
         SparsitySpec.parse(self.sparsity)          # fail early on bad specs
         self.scheduler_config()                    # ... bad kwargs
         self.calib_config()
+        self.eval_config()
         self.build_solver()                        # ... and bad solvers —
         # a typo'd --recipe must die at load time, not after the dense
         # model has been trained
@@ -119,6 +128,9 @@ class PruneRecipe:
     def scheduler_config(self) -> SchedulerConfig:
         return SchedulerConfig(**_checked_kwargs(self.scheduler,
                                                  SchedulerConfig, "scheduler"))
+
+    def eval_config(self) -> EvalConfig:
+        return EvalConfig(**_checked_kwargs(self.eval, EvalConfig, "eval"))
 
     def load_model(self, smoke: bool = False) -> ModelDef:
         return load_model(self.arch, smoke=smoke)

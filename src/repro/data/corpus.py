@@ -72,7 +72,8 @@ class MarkovCorpus:
         """Infinite deterministic batch stream.  Each (step, tokens) is a
         pure function of (seed, split, step) => checkpoint/resume replays
         the exact stream from any cursor."""
-        split_off = {"train": 0, "valid": 1_000_003, "calib": 2_000_003}[split]
+        split_off = {"train": 0, "valid": 1_000_003, "calib": 2_000_003,
+                     "test": 3_000_017}[split]
         step = start_step
         while True:
             rng = np.random.default_rng(

@@ -1,0 +1,22 @@
+"""Model-level quality evaluation: perplexity, KL divergence, error budget.
+
+The measurement layer the paper's claims are judged by (DESIGN.md §8):
+
+* :func:`evaluate_perplexity` — batched teacher-forced perplexity on a
+  held-out corpus split;
+* :func:`kl_divergence` — token KL(dense || pruned) + greedy agreement;
+* :func:`error_budget_report` — per-unit audit of the intra-layer
+  cumulative error-correction mechanism;
+* :func:`quality_report` — all of the above as one serializable report,
+  configured by the strict :class:`EvalConfig` (``PruneRecipe.eval``).
+"""
+from repro.eval.divergence import DivergenceReport, kl_divergence
+from repro.eval.error_budget import UnitBudgetRow, error_budget_report
+from repro.eval.perplexity import (EvalConfig, PerplexityReport, eval_batches,
+                                   evaluate_perplexity)
+from repro.eval.report import QualityReport, quality_report
+
+__all__ = ["EvalConfig", "PerplexityReport", "evaluate_perplexity",
+           "eval_batches", "DivergenceReport", "kl_divergence",
+           "UnitBudgetRow", "error_budget_report", "QualityReport",
+           "quality_report"]

@@ -1,0 +1,86 @@
+"""KL divergence of pruned vs. dense logits on held-out data.
+
+Perplexity alone can hide distribution damage (a pruned model can match
+mean CE while reshuffling per-token probabilities); the serving-quality
+metric that predicts downstream behavior is the token-level divergence
+from the dense reference:
+
+    KL(p_dense || p_pruned) = sum_v p_dense(v) * (log p_dense(v) - log p_pruned(v))
+
+averaged over label-valid positions, plus greedy-decode agreement (the
+fraction of positions where both models argmax the same token — exactly
+what a greedy serving path emits).
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.corpus import MarkovCorpus
+from repro.eval.perplexity import EvalConfig, eval_batches
+from repro.models.registry import ModelDef
+
+_KL_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+@dataclasses.dataclass
+class DivergenceReport:
+    kl: float                   # mean KL(dense || pruned) per token, nats
+    top1_agreement: float       # greedy-decode match rate
+    tokens: int
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _kl_and_agreement(logits_ref: jnp.ndarray, logits_cmp: jnp.ndarray,
+                      labels: jnp.ndarray):
+    """Per-batch (sum KL, sum agreement, count) over labels >= 0."""
+    lr = jax.nn.log_softmax(logits_ref.astype(jnp.float32), axis=-1)
+    lc = jax.nn.log_softmax(logits_cmp.astype(jnp.float32), axis=-1)
+    kl = jnp.sum(jnp.exp(lr) * (lr - lc), axis=-1)          # (B, S)
+    agree = (jnp.argmax(lr, axis=-1) == jnp.argmax(lc, axis=-1))
+    mask = (labels >= 0).astype(jnp.float32)
+    cnt = jnp.sum(mask)
+    return jnp.sum(kl * mask), jnp.sum(agree * mask), cnt
+
+
+def kl_divergence(model: ModelDef, dense_params, pruned_params,
+                  corpus: MarkovCorpus, cfg: EvalConfig = EvalConfig(),
+                  extras: Optional[Dict] = None) -> DivergenceReport:
+    """Mean token KL(dense || pruned) + argmax agreement over
+    ``cfg.kl_batches`` held-out batches."""
+    batch_stats = _KL_CACHE.get(model)
+    if batch_stats is None:
+        forward = model.forward_logits
+
+        @jax.jit
+        def batch_stats(pd, pp, b):
+            lr = forward(pd, b)
+            lc = forward(pp, b)
+            # modality prefixes (VLM patches) lengthen the logit stream;
+            # score the label-aligned tail
+            S = b["labels"].shape[1]
+            return _kl_and_agreement(lr[:, -S:, :], lc[:, -S:, :],
+                                     b["labels"])
+
+        _KL_CACHE[model] = batch_stats
+
+    kl_sum = agree_sum = count = 0.0
+    for b in eval_batches(corpus, cfg, n=cfg.kl_batches):
+        if extras:
+            b = dict(b, **{k: jnp.asarray(v[:cfg.batch_size])
+                           for k, v in extras.items()})
+        k, a, c = batch_stats(dense_params, pruned_params, b)
+        kl_sum += float(k)
+        agree_sum += float(a)
+        count += float(c)
+    count = max(count, 1.0)
+    return DivergenceReport(kl=float(kl_sum / count),
+                            top1_agreement=float(agree_sum / count),
+                            tokens=int(count))

@@ -1,0 +1,104 @@
+"""Batched held-out perplexity (the paper's model-level metric).
+
+The paper's headline numbers (Tables 1-2) are WikiText-2 perplexities of
+the pruned model; the in-repo analog is teacher-forced perplexity on a
+held-out slice of the synthetic corpus (``data/corpus.py``).  The eval
+stream uses its own ``"test"`` split — a seed stream disjoint from the
+``train``/``valid``/``calib`` splits — so neither training nor
+calibration ever sees an eval token.
+
+``EvalConfig`` is the strict, serializable knob set of the whole eval
+subsystem (perplexity + KL + error budget); ``PruneRecipe.eval`` maps
+onto it and unknown keys fail at recipe-load time, matching the rest of
+the recipe surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.corpus import MarkovCorpus, batch_to_model_inputs
+from repro.models.registry import ModelDef
+
+# jitted per-model eval closures, weak-keyed on the ModelDef so repeated
+# evaluations (the quality bench's 8-row matrix, CLI runs in one process)
+# reuse the compiled forward instead of re-tracing a fresh closure
+_CE_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _ce_fn(model: ModelDef):
+    fn = _CE_CACHE.get(model)
+    if fn is None:
+        loss = model.loss
+
+        @jax.jit
+        def fn(p, b):
+            _, metrics = loss(p, b)
+            return metrics["ce"]
+
+        _CE_CACHE[model] = fn
+    return fn
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalConfig:
+    """Knobs of the quality-evaluation subsystem (``PruneRecipe.eval``)."""
+
+    num_batches: int = 8        # perplexity batches
+    batch_size: int = 8
+    seq_len: int = 64
+    split: str = "test"         # held-out corpus split (test | valid)
+    kl_batches: int = 4         # KL / agreement batches (0 disables)
+    budget_batches: int = 2     # error-budget audit batches (0 disables)
+    budget_slack: float = 2.0   # within-budget factor (see error_budget.py)
+
+    def __post_init__(self) -> None:
+        if self.split not in ("test", "valid"):
+            raise ValueError(f"unknown eval split {self.split!r}; "
+                             f"choices: ('test', 'valid')")
+
+
+@dataclasses.dataclass
+class PerplexityReport:
+    ppl: float
+    ce_nats: float              # mean CE per token, nats
+    tokens: int
+    batches: int
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def eval_batches(corpus: MarkovCorpus, cfg: EvalConfig, n: Optional[int] = None):
+    """The eval stream: deterministic (seed, split, step) batches."""
+    it = corpus.batches(cfg.batch_size, cfg.seq_len, split=cfg.split)
+    for _ in range(cfg.num_batches if n is None else n):
+        _, toks = next(it)
+        yield {k: jnp.asarray(v) for k, v in batch_to_model_inputs(toks).items()}
+
+
+def evaluate_perplexity(model: ModelDef, params, corpus: MarkovCorpus,
+                        cfg: EvalConfig = EvalConfig(),
+                        extras: Optional[Dict] = None) -> PerplexityReport:
+    """Teacher-forced perplexity over ``cfg.num_batches`` held-out batches.
+
+    Uses the model's own ``loss`` metrics (labels < 0 are masked), so every
+    architecture family evaluates through the same path it trains through.
+    """
+    ce_of = _ce_fn(model)
+    tot, nb = 0.0, 0
+    for b in eval_batches(corpus, cfg):
+        if extras:
+            b = dict(b, **{k: jnp.asarray(v[:cfg.batch_size])
+                           for k, v in extras.items()})
+        tot += float(ce_of(params, b))
+        nb += 1
+    ce = tot / max(nb, 1)
+    return PerplexityReport(ppl=float(np.exp(ce)), ce_nats=float(ce),
+                            tokens=nb * cfg.batch_size * cfg.seq_len,
+                            batches=nb)

@@ -1,0 +1,94 @@
+"""Aggregate quality report: perplexity + KL + error budget, one call.
+
+``quality_report`` is the single function behind every quality surface —
+``launch/evaluate.py``, ``benchmarks/quality_bench.py`` and the tests
+all call it, so "model quality" means exactly one thing repo-wide.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.data.corpus import MarkovCorpus
+from repro.eval.divergence import kl_divergence
+from repro.eval.error_budget import error_budget_report
+from repro.eval.perplexity import (EvalConfig, PerplexityReport,
+                                   evaluate_perplexity)
+from repro.models.registry import ModelDef
+
+
+@dataclasses.dataclass
+class QualityReport:
+    """One evaluated checkpoint, JSON-serializable."""
+
+    ppl: float
+    ce_nats: float
+    tokens: int
+    dense_ppl: Optional[float] = None       # set when a dense reference ran
+    ppl_ratio: Optional[float] = None       # ppl / dense_ppl
+    kl: Optional[float] = None              # mean KL(dense || pruned), nats
+    top1_agreement: Optional[float] = None
+    error_budget: Optional[List[Dict]] = None   # per-unit audit rows
+    budget_ok: Optional[bool] = None            # all units within budget
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        text = json.dumps(self.to_dict(), indent=1, sort_keys=True,
+                          default=float)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text + "\n")
+        return text
+
+    def summary(self) -> str:
+        parts = [f"ppl={self.ppl:.3f}"]
+        if self.dense_ppl is not None:
+            parts.append(f"dense_ppl={self.dense_ppl:.3f}")
+            parts.append(f"ppl_ratio={self.ppl_ratio:.4f}")
+        if self.kl is not None:
+            parts.append(f"kl={self.kl:.5f}")
+            parts.append(f"top1_agree={self.top1_agreement:.3f}")
+        if self.budget_ok is not None:
+            parts.append(f"budget_ok={self.budget_ok}")
+        return " ".join(parts)
+
+
+def quality_report(model: ModelDef, params: Any, corpus: MarkovCorpus,
+                   cfg: EvalConfig = EvalConfig(),
+                   dense_params: Optional[Any] = None,
+                   reports: Optional[Sequence] = None,
+                   extras: Optional[Dict] = None,
+                   meta: Optional[Dict[str, Any]] = None,
+                   dense_eval: Optional[PerplexityReport] = None
+                   ) -> QualityReport:
+    """Evaluate ``params``; with ``dense_params`` also KL + error budget.
+
+    ``reports`` (a prune run's OperatorReports, dataclass or dict form)
+    give the error-budget audit its per-unit budgets.  ``dense_eval``
+    short-circuits the dense perplexity pass when the caller already
+    evaluated the same dense params under the same config (the quality
+    bench scores many pruned checkpoints against one dense reference).
+    """
+    ppl = evaluate_perplexity(model, params, corpus, cfg, extras=extras)
+    out = QualityReport(ppl=ppl.ppl, ce_nats=ppl.ce_nats, tokens=ppl.tokens,
+                        meta=dict(meta or {}, eval=dataclasses.asdict(cfg)))
+    if dense_params is None:
+        return out
+    dense = dense_eval if dense_eval is not None else \
+        evaluate_perplexity(model, dense_params, corpus, cfg, extras=extras)
+    out.dense_ppl = dense.ppl
+    out.ppl_ratio = ppl.ppl / dense.ppl if dense.ppl else float("nan")
+    if cfg.kl_batches > 0:
+        div = kl_divergence(model, dense_params, params, corpus, cfg,
+                            extras=extras)
+        out.kl, out.top1_agreement = div.kl, div.top1_agreement
+    if cfg.budget_batches > 0:
+        rows = error_budget_report(model, dense_params, params, corpus, cfg,
+                                   reports=reports, extras=extras)
+        out.error_budget = [r.to_dict() for r in rows]
+        out.budget_ok = all(r.within_budget for r in rows)
+    return out

@@ -15,15 +15,41 @@ so any run is reproducible from its report alone).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 
 from repro import api
+from repro.checkpoint import store
 from repro.core.solvers import registered_solvers
 from repro.data import CorpusConfig, MarkovCorpus
 from repro.train import AdamWConfig, TrainConfig, Trainer, evaluate_ppl
 from repro.utils import get_logger
 
 log = get_logger("launch.prune")
+
+#: model checkpoints a prune run leaves in its checkpoint dir (next to the
+#: scheduler's per-unit checkpoints) — `launch/evaluate.py` and the serve
+#: path consume these by name
+DENSE_MODEL, PRUNED_MODEL = api.DENSE_MODEL, api.PRUNED_MODEL
+
+
+def save_run_models(ckpt_dir: str, recipe: api.PruneRecipe, dense_params,
+                    pruned_params=None, reports=None, save_dense: bool = True,
+                    **extra) -> None:
+    """Persist the run's dense (and pruned) model params with everything
+    needed to re-evaluate them: the recipe, the corpus seed, and the
+    per-operator solver reports (the error-budget audit's budgets).
+    ``save_dense=False`` skips the dense write when an identical snapshot
+    was already saved (the pre-prune call)."""
+    meta = dict(extra, recipe=recipe.to_dict())
+    if save_dense:
+        store.save(ckpt_dir, DENSE_MODEL, {"params": dense_params},
+                   extra=meta)
+    if pruned_params is not None:
+        meta = dict(meta, reports=[dataclasses.asdict(r)
+                                   for r in (reports or [])])
+        store.save(ckpt_dir, PRUNED_MODEL, {"params": pruned_params},
+                   extra=meta)
 
 
 def recipe_from_args(args: argparse.Namespace) -> api.PruneRecipe:
@@ -87,9 +113,25 @@ def main() -> None:
     tr.run()
     dense_ppl = evaluate_ppl(model, tr.params, corpus, 8, seq_len, 4)
 
+    ckpt_dir = recipe.scheduler_config().checkpoint_dir
+    if ckpt_dir:
+        # dense snapshot BEFORE pruning: a run killed mid-prune leaves
+        # dense_model + the scheduler's unit_* checkpoints, which
+        # launch/evaluate.py can assemble into the pruned model
+        save_run_models(ckpt_dir, recipe, tr.params,
+                        corpus_seed=args.seed, smoke=True,
+                        dense_ppl=dense_ppl)
+
     calib = api.calibration_for(recipe, corpus)
     pruned, reports, stats = api.prune(model, tr.params, calib, recipe)
     pruned_ppl = evaluate_ppl(model, pruned, corpus, 8, seq_len, 4)
+
+    if ckpt_dir:
+        save_run_models(ckpt_dir, recipe, tr.params, pruned, reports,
+                        save_dense=False,   # identical snapshot saved above
+                        corpus_seed=args.seed, smoke=True,
+                        dense_ppl=dense_ppl, pruned_ppl=pruned_ppl)
+        log.info("saved %s + %s under %s", DENSE_MODEL, PRUNED_MODEL, ckpt_dir)
 
     rel = sum(r.rel_error for r in reports) / max(len(reports), 1)
     batched = sum(1 for r in reports if r.group_size > 1)

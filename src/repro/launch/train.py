@@ -47,6 +47,8 @@ def main() -> None:
     cfg = TrainConfig(
         steps=args.steps, batch=args.batch, seq=args.seq,
         ckpt_dir=args.ckpt_dir, seed=args.seed,
+        ckpt_extra={"arch": args.arch, "smoke": args.smoke,
+                    "corpus_seed": args.seed},
         optim=AdamWConfig(lr=args.lr, schedule=args.schedule,
                           warmup_steps=max(args.steps // 20, 1),
                           total_steps=args.steps))

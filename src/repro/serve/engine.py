@@ -1,9 +1,18 @@
 """Batched serving engine: prefill + autoregressive decode.
 
 Drives any ModelDef through its ``prefill``/``init_serve_state``/
-``serve_step`` protocol; greedy or temperature sampling; works with
-dense or packed-2:4 params (models.common.dense dispatches).  The
-decode loop is jitted once per (batch, cache) shape.
+``serve_step`` protocol; greedy or temperature sampling; the decode loop
+is jitted once per (batch, cache) shape.
+
+**Sparse fast path** (``ServeConfig.sparse``): a 2:4-pruned checkpoint
+is detected at engine construction and its eligible weights are packed
+into the compressed ``{"vals", "meta"}`` form, so every decode matmul of
+those operators dispatches through the ``kernels/spmm24`` path (0.625x
+weight traffic, the batch-1 decode roofline bound — DESIGN.md §2).
+Packing preserves the weight dtype, so packed logits are bitwise-equal
+to the dense matmul of the same masked weights.  ``sparse="dense"`` is
+the fallback flag: packed checkpoints are unpacked and everything runs
+through plain dense matmuls.
 """
 from __future__ import annotations
 
@@ -15,9 +24,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import ModelDef
+from repro.serve import packed as packed_lib
 from repro.utils import get_logger
 
 log = get_logger("serve")
+
+_SPARSE_MODES = ("auto", "packed", "dense")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,12 +38,46 @@ class ServeConfig:
     temperature: float = 0.0       # 0 => greedy
     cache_len: int = 256
     seed: int = 0
+    sparse: str = "auto"           # auto | packed | dense (fallback flag)
 
 
 class Engine:
     def __init__(self, model: ModelDef, params: Any, cfg: ServeConfig = ServeConfig()):
-        self.model, self.params, self.cfg = model, params, cfg
+        if cfg.sparse not in _SPARSE_MODES:
+            raise ValueError(f"unknown sparse mode {cfg.sparse!r}; "
+                             f"choices: {_SPARSE_MODES}")
+        self.model, self.cfg = model, cfg
+        self.params, self.sparse_stats = self._prepare_params(params)
         self._decode_fn = jax.jit(self._decode_step)
+
+    def _prepare_params(self, params: Any) -> Tuple[Any, Dict[str, Any]]:
+        """Route params onto the requested weight representation.
+
+        auto   — pack when the checkpoint's weights satisfy 2:4 (lossless,
+                 weight dtype kept); otherwise serve dense.
+        packed — require a 2:4 checkpoint (already packed or packable).
+        dense  — force dense matmuls (unpacks a packed checkpoint).
+        """
+        pre_packed = packed_lib.count_packed(params)
+        if self.cfg.sparse == "dense":
+            if pre_packed:
+                log.info("sparse=dense: unpacking %d packed operators",
+                         pre_packed)
+                params = packed_lib.unpack_tree(params)
+            return params, {"mode": "dense", "packed_ops": 0}
+        if pre_packed:      # caller packed explicitly (e.g. bf16 storage)
+            return params, {"mode": "packed", "packed_ops": pre_packed}
+        packed, stats = packed_lib.pack_tree(params, dtype=None)
+        if stats["packed_ops"] == 0:
+            if self.cfg.sparse == "packed":
+                raise ValueError(
+                    "sparse='packed' but no operator satisfies 2:4 — prune "
+                    "the checkpoint to 2:4 first, or serve with sparse='auto'")
+            return params, {"mode": "dense", "packed_ops": 0}
+        log.info("2:4 checkpoint detected: packed %d operators "
+                 "(%.2f MB -> %.2f MB weight traffic)", stats["packed_ops"],
+                 stats["dense_bytes"] / 1e6, stats["packed_bytes"] / 1e6)
+        return packed, {"mode": "packed", **stats}
 
     def _decode_step(self, params, state, token, pos, key):
         logits, state = self.model.serve_step(params, state, token, pos)

@@ -38,46 +38,74 @@ def _packable(path: str, w: Any) -> bool:
         return False
     if w.shape[-2] % 4 != 0:   # input dim (in, out layout) must be whole groups
         return False
+    if min(w.shape[-2:]) < 8:  # layer-stacked bias vectors (L, d) are 2-D too
+        return False
     wn = np.asarray(w, np.float32)
+    if not wn.any():           # all-zero (fresh-init) tensors are not "2:4"
+        return False
     w_paper = wn.T if w.ndim == 2 else wn.transpose(0, 2, 1)  # (L, out, in)
     return _pattern_ok(w_paper)
 
 
-def pack_tree(params: Any) -> Tuple[Any, dict]:
+def pack_tree(params: Any, dtype: Any = jnp.bfloat16) -> Tuple[Any, dict]:
     """Returns (packed params, stats {packed_ops, dense_bytes, packed_bytes}).
 
     2-D weights (in, out) pack to {"vals" (out,in/2), "meta" (out,in/4)};
     layer-stacked 3-D weights (L, in, out) pack per-slice via vmap — the
     serving scan then slices the packed leaves exactly like dense ones.
+
+    ``dtype`` is the packed-value storage dtype (bf16, the TPU serving
+    default); ``dtype=None`` keeps each weight's own dtype, making the
+    packing bitwise-lossless — the serve engine's fast path uses this so
+    packed logits match the dense-matmul logits exactly.
     """
     stats = {"packed_ops": 0, "dense_bytes": 0, "packed_bytes": 0}
 
     def visit(path, w):
         if _packable(path, w):
+            wt = jnp.asarray(w)
+            wt = wt if dtype is None else wt.astype(dtype)
             if w.ndim == 2:
-                vals, meta = kops.pack24(jnp.asarray(w).T.astype(jnp.bfloat16))
+                vals, meta = kops.pack24(wt.T)
             else:
                 import jax
-                vals, meta = jax.vmap(kops.pack24)(
-                    jnp.asarray(w).transpose(0, 2, 1).astype(jnp.bfloat16))
+                vals, meta = jax.vmap(kops.pack24)(wt.transpose(0, 2, 1))
+            itemsize = jnp.dtype(vals.dtype).itemsize
             stats["packed_ops"] += 1 if w.ndim == 2 else w.shape[0]
-            stats["dense_bytes"] += w.size * 2          # bf16 dense baseline
-            stats["packed_bytes"] += vals.size * 2 + meta.size
+            stats["dense_bytes"] += w.size * itemsize
+            stats["packed_bytes"] += vals.size * itemsize + meta.size
             return {"vals": vals, "meta": meta}
         return w
 
     return tree_map_with_path(visit, params), stats
 
 
-def unpack_tree(params: Any) -> Any:
-    """Inverse of pack_tree (packed dicts -> dense (in, out) bf16)."""
+def is_packed_leaf(node: Any) -> bool:
+    return (isinstance(node, dict) and len(node) == 2
+            and "vals" in node and "meta" in node)
 
-    def visit(path, w):
-        return w
+
+def count_packed(params: Any) -> int:
+    """Number of packed-2:4 operator leaves in a param tree."""
+
+    def rec(node) -> int:
+        if is_packed_leaf(node):
+            return node["vals"].shape[0] if node["vals"].ndim == 3 else 1
+        if isinstance(node, dict):
+            return sum(rec(v) for v in node.values())
+        if isinstance(node, (list, tuple)):
+            return sum(rec(v) for v in node)
+        return 0
+
+    return rec(params)
+
+
+def unpack_tree(params: Any) -> Any:
+    """Inverse of pack_tree (packed dicts -> dense (in, out))."""
 
     def rec(node):
         if isinstance(node, dict):
-            if "vals" in node and "meta" in node and len(node) == 2:
+            if is_packed_leaf(node):
                 n = node["vals"].shape[-1] * 2
                 if node["vals"].ndim == 3:
                     import jax

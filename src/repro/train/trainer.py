@@ -40,6 +40,10 @@ class TrainConfig:
     log_every: int = 10
     seed: int = 0
     optim: optim.AdamWConfig = optim.AdamWConfig()
+    # recorded in every checkpoint's manifest extra (e.g. arch/smoke/
+    # corpus_seed) so downstream consumers — launch/evaluate.py — can
+    # rebuild the exact model/corpus from the run dir alone
+    ckpt_extra: Optional[Dict[str, Any]] = None
 
 
 def make_train_step(model: ModelDef, ocfg: optim.AdamWConfig):
@@ -113,7 +117,8 @@ class Trainer:
                  "nu": self.opt_state.nu,
                  "opt_step": self.opt_state.step}
         path = store.save(self.cfg.ckpt_dir, store.step_name(self.step), state,
-                          extra={"step": self.step, "time": time.time()})
+                          extra={"step": self.step, "time": time.time(),
+                                 **(self.cfg.ckpt_extra or {})})
         store.prune_old(self.cfg.ckpt_dir, keep=self.cfg.keep_ckpts)
         return path
 

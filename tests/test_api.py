@@ -67,6 +67,26 @@ class TestRecipeSerialization:
         with pytest.raises(ValueError):
             api.PruneRecipe(correction="sideways")
 
+    def test_eval_section_round_trip(self):
+        from repro.eval import EvalConfig
+        recipe = api.PruneRecipe(eval={"num_batches": 3, "seq_len": 32,
+                                       "split": "valid", "kl_batches": 0})
+        assert api.PruneRecipe.from_json(recipe.to_json()) == recipe
+        cfg = recipe.eval_config()
+        assert cfg == EvalConfig(num_batches=3, seq_len=32, split="valid",
+                                 kl_batches=0)
+        assert api.PruneRecipe().eval_config() == EvalConfig()
+
+    def test_eval_section_rejects_unknown_keys(self):
+        """Unknown eval keys fail at recipe load time (PR-2 strictness)."""
+        with pytest.raises(ValueError, match="eval"):
+            api.PruneRecipe(eval={"num_batch": 4})             # typo'd key
+        with pytest.raises(ValueError, match="split"):
+            api.PruneRecipe(eval={"split": "tset"})
+        with pytest.raises(ValueError, match="eval"):
+            api.PruneRecipe.from_json(
+                '{"method": "fista", "eval": {"bogus": 1}}')
+
     def test_unknown_method_lists_solvers_at_construction(self):
         """A typo'd recipe must die at load time, before any training."""
         with pytest.raises(KeyError, match="registered solvers"):

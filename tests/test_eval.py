@@ -1,0 +1,240 @@
+"""Eval subsystem (repro/eval) + sparse serving fast path.
+
+Covers the ISSUE-3 acceptance criteria: perplexity/KL/error-budget on
+pruned checkpoints, and the serve engine's 2:4 fast path producing
+fp32-bitwise-equal logits vs. dense matmul of the same masked weights.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.core.sparsity import SparsitySpec, round_nm, satisfies
+from repro.data import CalibConfig, CorpusConfig, MarkovCorpus, calibration_batches
+from repro.eval import (EvalConfig, error_budget_report, evaluate_perplexity,
+                        kl_divergence, quality_report)
+from repro.models.registry import model_def
+from repro.serve import Engine, ServeConfig, pack_tree
+from repro.serve.packed import count_packed
+from repro.utils.tree import tree_map_with_path
+
+
+def tiny_setup(seed=0, layers=2, d_model=32, d_ff=64, vocab=128):
+    from repro.configs.opt125m_proxy import tiny_config
+    cfg = tiny_config().replace(num_layers=layers, d_model=d_model,
+                                d_ff=d_ff, num_heads=4, num_kv_heads=4,
+                                vocab=vocab)
+    model = model_def(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    corpus = MarkovCorpus(CorpusConfig(vocab=cfg.vocab, seed=5))
+    return model, params, corpus
+
+
+EC = EvalConfig(num_batches=3, batch_size=2, seq_len=16, kl_batches=2,
+                budget_batches=1)
+
+
+def mask_24(params):
+    """Magnitude-2:4 every layer weight (a fake pruned checkpoint)."""
+
+    def visit(path, w):
+        if (hasattr(w, "ndim") and w.ndim == 3 and "embed" not in path
+                and w.shape[-2] % 4 == 0):
+            return jax.vmap(lambda x: round_nm(x.T, 2, 4).T)(w)
+        return w
+
+    return tree_map_with_path(visit, params)
+
+
+class TestPerplexity:
+    def test_deterministic_and_positive(self):
+        model, params, corpus = tiny_setup()
+        a = evaluate_perplexity(model, params, corpus, EC)
+        b = evaluate_perplexity(model, params, corpus, EC)
+        assert a.ppl == b.ppl > 1.0
+        assert a.tokens == EC.num_batches * EC.batch_size * EC.seq_len
+        assert np.isclose(a.ppl, np.exp(a.ce_nats))
+
+    def test_split_streams_differ(self):
+        """The test split is a different held-out stream than valid."""
+        model, params, corpus = tiny_setup()
+        t = evaluate_perplexity(model, params, corpus, EC)
+        import dataclasses
+        v = evaluate_perplexity(model, params, corpus,
+                                dataclasses.replace(EC, split="valid"))
+        assert t.ppl != v.ppl        # distinct seed streams
+
+    def test_rejects_unknown_split(self):
+        with pytest.raises(ValueError, match="split"):
+            EvalConfig(split="train-ish")
+
+
+class TestDivergence:
+    def test_identical_params_zero_kl(self):
+        model, params, corpus = tiny_setup()
+        d = kl_divergence(model, params, params, corpus, EC)
+        assert d.kl == 0.0 and d.top1_agreement == 1.0
+
+    def test_damaged_params_positive_kl(self):
+        model, params, corpus = tiny_setup()
+        damaged = mask_24(params)
+        d = kl_divergence(model, params, damaged, corpus, EC)
+        assert np.isfinite(d.kl) and d.kl > 0.0
+        assert 0.0 <= d.top1_agreement <= 1.0
+
+
+class TestErrorBudget:
+    def test_pruned_run_within_budget(self):
+        """A real intra-corrected prune run: every unit's measured output
+        error stays within slack x the sum of its solver errors."""
+        model, params, corpus = tiny_setup()
+        calib = calibration_batches(corpus, CalibConfig(
+            num_sequences=4, seq_len=16, batch_size=2))
+        recipe = api.PruneRecipe(
+            method="fista", sparsity="2:4",
+            solver={"fista_iters": 8, "max_outer": 6, "patience": 2,
+                    "eps": 1e-4},
+            scheduler={"workers": 1})
+        pruned, reports, _ = api.prune(model, params, calib, recipe)
+        rows = error_budget_report(model, params, pruned, corpus, EC,
+                                   reports=reports)
+        assert len(rows) == len(model.units())
+        for r in rows:
+            assert np.isfinite(r.output_rel_err) and r.output_rel_err > 0
+            assert r.ops > 0 and np.isfinite(r.op_budget)
+            assert r.within_budget, \
+                f"{r.unit}: err {r.output_rel_err} vs budget {r.op_budget}"
+
+    def test_dict_reports_accepted(self):
+        """Checkpoint extras persist reports as dicts — same audit."""
+        model, params, corpus = tiny_setup(layers=1)
+        reports = [{"unit": "layer000", "rel_error": 10.0}]  # huge budget
+        rows = error_budget_report(model, params, mask_24(params), corpus,
+                                   EC, reports=reports)
+        assert rows[0].ops == 1 and rows[0].op_budget == 10.0
+        assert rows[0].within_budget
+
+    def test_no_reports_still_measures(self):
+        model, params, corpus = tiny_setup(layers=1)
+        rows = error_budget_report(model, params, mask_24(params), corpus, EC)
+        assert np.isnan(rows[0].op_budget) and rows[0].within_budget
+        assert rows[0].output_rel_err > 0
+
+
+class TestQualityReport:
+    def test_aggregate_and_json(self, tmp_path):
+        import json
+        model, params, corpus = tiny_setup(layers=1)
+        q = quality_report(model, mask_24(params), corpus, EC,
+                           dense_params=params, meta={"method": "magnitude"})
+        assert q.ppl >= q.dense_ppl * 0.5 and q.ppl_ratio == q.ppl / q.dense_ppl
+        assert q.kl > 0 and q.error_budget is not None
+        path = tmp_path / "q.json"
+        q.to_json(str(path))
+        back = json.loads(path.read_text())
+        assert back["meta"]["method"] == "magnitude"
+        assert back["ppl"] == q.ppl
+
+
+class TestResolveRun:
+    def test_recipe_override_merges_eval_only(self, tmp_path):
+        """--recipe on a prune run overrides ONLY the eval section; the
+        stored recipe stays the source of truth for what was pruned."""
+        from repro.launch.evaluate import resolve_run
+        from repro.launch.prune import save_run_models
+        model, params, _ = tiny_setup(layers=1)
+        stored = api.PruneRecipe(method="admm", sparsity="2:4")
+        save_run_models(str(tmp_path), stored, params, params, [],
+                        corpus_seed=7, smoke=True)
+
+        run = resolve_run(str(tmp_path))
+        assert run["kind"] == "prune" and run["corpus_seed"] == 7
+        assert run["recipe"].method == "admm"
+
+        override = tmp_path / "eval_only.json"
+        override.write_text('{"eval": {"num_batches": 2}}')
+        run = resolve_run(str(tmp_path), str(override))
+        assert run["recipe"].method == "admm"          # identity preserved
+        assert run["recipe"].sparsity == "2:4"
+        assert run["recipe"].eval_config().num_batches == 2   # eval overridden
+
+
+class TestSparseServePath:
+    def test_auto_detects_and_is_bitwise_equal(self):
+        """Acceptance: the spmm24 fast path's logits are fp32-bitwise-equal
+        to dense matmul on the same masked weights (lossless packing)."""
+        model, params, corpus = tiny_setup(layers=2, d_model=64, d_ff=128,
+                                           vocab=256)
+        masked = mask_24(params)
+        cfg = ServeConfig(max_new_tokens=6, cache_len=32)
+        import dataclasses
+        eng_dense = Engine(model, masked,
+                           dataclasses.replace(cfg, sparse="dense"))
+        eng_auto = Engine(model, masked, cfg)   # sparse="auto" default
+        assert eng_auto.sparse_stats["mode"] == "packed"
+        assert eng_auto.sparse_stats["packed_ops"] > 0
+        assert eng_dense.sparse_stats["mode"] == "dense"
+
+        prompt = jnp.asarray(np.arange(2 * 8).reshape(2, 8) % 256, jnp.int32)
+        # bitwise logits: prefill and one decode step
+        ld, st_d = model.prefill(masked, prompt, 32, None)
+        la, st_a = model.prefill(eng_auto.params, prompt, 32, None)
+        np.testing.assert_array_equal(np.asarray(ld, np.float32),
+                                      np.asarray(la, np.float32))
+        tok = jnp.zeros((2, 1), jnp.int32)
+        gd, _ = jax.jit(model.serve_step)(masked, st_d, tok, jnp.int32(8))
+        ga, _ = jax.jit(model.serve_step)(eng_auto.params, st_a, tok,
+                                          jnp.int32(8))
+        np.testing.assert_array_equal(np.asarray(gd, np.float32),
+                                      np.asarray(ga, np.float32))
+        # and therefore identical greedy generations
+        np.testing.assert_array_equal(eng_dense.generate(prompt),
+                                      eng_auto.generate(prompt))
+
+    def test_dense_params_stay_dense(self):
+        model, params, _ = tiny_setup()
+        eng = Engine(model, params, ServeConfig(max_new_tokens=4))
+        assert eng.sparse_stats == {"mode": "dense", "packed_ops": 0}
+        assert count_packed(eng.params) == 0
+
+    def test_dense_fallback_unpacks(self):
+        model, params, _ = tiny_setup(layers=1, d_model=64, d_ff=128,
+                                      vocab=256)
+        masked = mask_24(params)
+        packed, stats = pack_tree(masked, dtype=None)
+        assert stats["packed_ops"] == count_packed(packed) > 0
+        eng = Engine(model, packed, ServeConfig(sparse="dense"))
+        assert eng.sparse_stats["mode"] == "dense"
+        assert count_packed(eng.params) == 0
+        # unpack is exact for dtype=None packing
+        for spec in model.units():
+            from repro.core import sequential as seq_lib
+            up = seq_lib._unit_params_of(eng.params, spec)
+            uw = seq_lib._unit_params_of(masked, spec)
+            for group in spec.groups:
+                for key in group:
+                    np.testing.assert_array_equal(
+                        np.asarray(seq_lib.get_weight(up, key)),
+                        np.asarray(seq_lib.get_weight(uw, key)))
+
+    def test_packed_mode_requires_sparse_checkpoint(self):
+        model, params, _ = tiny_setup()
+        with pytest.raises(ValueError, match="2:4"):
+            Engine(model, params, ServeConfig(sparse="packed"))
+        with pytest.raises(ValueError, match="sparse mode"):
+            Engine(model, params, ServeConfig(sparse="fast"))
+
+    def test_pruned_checkpoint_satisfies_spec_after_pack_cycle(self):
+        model, params, _ = tiny_setup(layers=1, d_model=64, d_ff=128,
+                                      vocab=256)
+        masked = mask_24(params)
+        eng = Engine(model, masked, ServeConfig())
+        from repro.serve.packed import unpack_tree
+        spec = SparsitySpec(kind="nm", n=2, m=4)
+        from repro.core import sequential as seq_lib
+        up = seq_lib._unit_params_of(unpack_tree(eng.params), model.units()[0])
+        for group in model.units()[0].groups:
+            for key in group:
+                w = seq_lib.get_weight(up, key)
+                assert satisfies(np.asarray(w, np.float32).T, spec)

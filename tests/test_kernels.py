@@ -141,6 +141,22 @@ class TestSpmm24Kernel:
             np.asarray(got.astype(jnp.float32)), np.asarray(want.astype(jnp.float32)),
             rtol=2e-2, atol=2e-2)
 
+    def test_lossless_fp32_pack_equals_dense_matmul(self):
+        """The serve fast path packs in the weight's own dtype
+        (pack_tree(dtype=None)); fp32 vals through the kernel must equal
+        the dense matmul of the same masked weights exactly."""
+        m, n = 256, 512
+        w = ref.round24(rand((m, n), seed=11))          # fp32 2:4 weights
+        vals, meta = ref.pack24(w)
+        assert vals.dtype == jnp.float32
+        x = rand((4, n), seed=12)
+        got = spmm24.spmm24(x, vals, meta, n, bm=128, bk=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w.T),
+                                   rtol=1e-6, atol=1e-5)
+        # the ref path (ops dispatch for small problems) is exactly bitwise
+        np.testing.assert_array_equal(np.asarray(ref.spmm24(x, vals, meta, n)),
+                                      np.asarray(x @ w.T))
+
 
 class TestOpsDispatch:
     def test_small_problems_use_ref(self):

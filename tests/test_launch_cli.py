@@ -46,3 +46,46 @@ def test_prune_cli_end_to_end(tmp_path):
     assert rec["method"] == "fista" and rec["sparsity"] == "2:4"
     assert rec["pruned_ppl"] > 0 and rec["dense_ppl"] > 0
     assert rec["mean_rel_err"] < 1.0
+
+
+def test_prune_then_evaluate_cli(tmp_path):
+    """The quality loop of the README: prune --ckpt-dir, then evaluate the
+    run's pruned checkpoint against its dense reference."""
+    run_dir = tmp_path / "run"
+    out = _run("repro.launch.prune", "--arch", "opt125m-proxy",
+               "--method", "fista", "--sparsity", "2:4",
+               "--train-steps", "30", "--calib-sequences", "8",
+               "--calib-seq-len", "32", "--workers", "2",
+               "--ckpt-dir", str(run_dir))
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert (run_dir / "pruned_model" / "MANIFEST.json").exists()
+
+    report = tmp_path / "quality.json"
+    out = _run("repro.launch.evaluate", "--checkpoint", str(run_dir),
+               "--against-dense", "--out", str(report))
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ppl=" in out.stdout and "kl=" in out.stdout
+    rec = json.loads(report.read_text())
+    assert rec["ppl"] > 0 and rec["dense_ppl"] > 0
+    assert rec["kl"] >= 0 and 0 <= rec["top1_agreement"] <= 1
+    assert rec["meta"]["sparsity"] == "2:4"
+    assert rec["error_budget"] and rec["budget_ok"] is not None
+
+
+def test_evaluate_cli_rejects_bad_eval_recipe(tmp_path):
+    """Unknown `eval` keys in a recipe must fail at load time (exit != 0),
+    matching the strictness of every other recipe section."""
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"method": "fista",
+                               "eval": {"num_batch": 4}}))   # typo'd key
+    out = _run("repro.launch.evaluate", "--checkpoint", str(tmp_path),
+               "--recipe", str(bad))
+    assert out.returncode != 0
+    assert "eval" in (out.stderr + out.stdout)
+
+
+def test_evaluate_cli_missing_run_errors(tmp_path):
+    out = _run("repro.launch.evaluate", "--checkpoint",
+               str(tmp_path / "nowhere"))
+    assert out.returncode == 2
+    assert "not found" in out.stderr

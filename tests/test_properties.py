@@ -13,6 +13,8 @@ from repro.core import fista as fista_lib
 from repro.core import gram as gram_lib
 from repro.core.sparsity import (SparsitySpec, mask_by_score, round_nm,
                                  round_unstructured, satisfies)
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 from repro.utils import tree as tree_lib
 
 F32 = st.floats(-10, 10, width=32, allow_nan=False, allow_infinity=False)
@@ -99,6 +101,51 @@ class TestGramProps:
         merged = gram_lib.merge(sa, sb)
         np.testing.assert_allclose(np.asarray(merged.G), np.asarray(joint.G), rtol=1e-4, atol=1e-4)
         np.testing.assert_allclose(float(merged.h), float(joint.h), rtol=1e-4)
+
+
+class TestTwoFourProps:
+    """Sparsity invariants of the 2:4 pipeline (round -> pack -> spmm)."""
+
+    @given(st.integers(1, 40), st.integers(1, 24), st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_round24_kernel_matches_ref_and_invariants(self, m, ngroups, seed):
+        """kernels.round24 == ref on random shapes (incl. ragged tails not
+        aligned to the kernel's 8x128 blocks); every 4-group keeps <= 2."""
+        n = 4 * ngroups
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+        out = np.asarray(kops.round24(w))        # kernel or oracle dispatch
+        np.testing.assert_array_equal(out, np.asarray(kref.round24(w)))
+        groups = out.reshape(m, ngroups, 4)
+        assert ((groups != 0).sum(axis=-1) <= 2).all()
+        # surviving values are a subset of the input, untouched
+        nz = out != 0
+        np.testing.assert_array_equal(out[nz], np.asarray(w)[nz])
+
+    @given(st.integers(1, 16), st.integers(1, 16), st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_round24_idempotent(self, m, ngroups, seed):
+        """Masks are a fixed point: re-rounding a 2:4 matrix is identity."""
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(m, 4 * ngroups)).astype(np.float32))
+        once = kops.round24(w)
+        np.testing.assert_array_equal(np.asarray(kops.round24(once)),
+                                      np.asarray(once))
+
+    @given(st.integers(1, 16), st.integers(1, 16), st.integers(0, 2**31 - 1),
+           st.sampled_from([0.0, 0.5, 0.9]))
+    @settings(max_examples=15, deadline=None)
+    def test_pack_roundtrip_any_sparsity(self, m, ngroups, seed, extra_zero):
+        """pack24/unpack24 round-trip exactly, including groups with fewer
+        than 2 nonzeros (zero-padded slots)."""
+        rng = np.random.default_rng(seed)
+        n = 4 * ngroups
+        w = rng.normal(size=(m, n)).astype(np.float32)
+        w[rng.random(size=w.shape) < extra_zero] = 0.0
+        w24 = kref.round24(jnp.asarray(w))
+        vals, meta = kref.pack24(w24)
+        np.testing.assert_array_equal(np.asarray(kref.unpack24(vals, meta, n)),
+                                      np.asarray(w24))
 
 
 class TestTreeProps:

@@ -109,6 +109,107 @@ def test_checkpoint_resume(tmp_path):
     assert float(res["u2"].payload[0]) == 2.0
 
 
+def _payload_of(u):
+    """Deterministic per-unit payload (pure function of the unit name)."""
+    import numpy as np
+    import jax.numpy as jnp
+    rng = np.random.default_rng(abs(hash(u)) % (2 ** 31))
+    return jnp.asarray(rng.normal(size=(4,)).astype(np.float32))
+
+
+def _store_io(tmp_path):
+    import jax.numpy as jnp
+
+    def save(u, payload):
+        store.save(str(tmp_path), f"unit_{u}", {"x": payload})
+
+    def load(u):
+        tree, _ = store.load(str(tmp_path), f"unit_{u}",
+                             {"x": jnp.zeros((4,), jnp.float32)})
+        return tree["x"]
+
+    return save, load
+
+
+def test_kill_mid_run_then_restart_skips_completed(tmp_path):
+    """Fault injection: the run dies mid-unit (simulated worker crash after
+    some units already checkpointed); a restart against the same checkpoint
+    dir must skip every completed unit and finish only the rest."""
+    import numpy as np
+
+    units = [f"u{i}" for i in range(5)]
+    save, load = _store_io(tmp_path)
+
+    def crashy(u):
+        if u in ("u3", "u4"):
+            raise RuntimeError(f"simulated kill while running {u}")
+        return _payload_of(u)
+
+    cfg = SchedulerConfig(workers=1, max_retries=0, retry_backoff=0.01,
+                          checkpoint_dir=str(tmp_path),
+                          straggler_min_wait=300.0)
+    with pytest.raises(UnitFailed):
+        PruneScheduler(units, crashy, cfg, save, load).run()
+    # the crash left a partial run: u0-u2 checkpointed, u3/u4 not
+    assert [store.exists(str(tmp_path), f"unit_{u}") for u in units] == \
+        [True, True, True, False, False]
+
+    ran = []
+
+    def healthy(u):
+        ran.append(u)
+        return _payload_of(u)
+
+    res = PruneScheduler(units, healthy, cfg, save, load).run()
+    assert sorted(ran) == ["u3", "u4"], "completed units must be skipped"
+    assert len(res) == 5
+    for u in units:   # resumed and fresh payloads are the same pure function
+        np.testing.assert_array_equal(np.asarray(res[u].payload),
+                                      np.asarray(_payload_of(u)))
+
+
+def test_straggler_redispatch_idempotent_payload(tmp_path):
+    """Speculative duplicates are pure recomputations: whichever copy wins,
+    the persisted payload is bitwise-identical, and a follow-up restart
+    resumes from it without recomputing anything."""
+    import numpy as np
+
+    state = {"first": True}
+    lock = threading.Lock()
+
+    def work(u):
+        payload = _payload_of(u)       # compute BEFORE stalling: both the
+        if u == "slow":                # straggler and its duplicate produce
+            with lock:                 # finished results; first wins
+                first, state["first"] = state["first"], False
+            if first:
+                time.sleep(10)
+        else:
+            time.sleep(0.02)
+        return payload
+
+    save, load = _store_io(tmp_path)
+    cfg = SchedulerConfig(workers=3, straggler_factor=2.0,
+                          straggler_min_wait=0.2,
+                          checkpoint_dir=str(tmp_path))
+    s = PruneScheduler(["a", "b", "c", "slow"], work, cfg, save, load)
+    res = s.run()
+    assert "slow" in s.stats["duplicated"]
+    np.testing.assert_array_equal(np.asarray(res["slow"].payload),
+                                  np.asarray(_payload_of("slow")))
+    # the winning copy's checkpoint is bitwise-equal to the pure payload
+    np.testing.assert_array_equal(np.asarray(load("slow")),
+                                  np.asarray(_payload_of("slow")))
+
+    def must_not_run(u):
+        raise AssertionError(f"unit {u} recomputed after clean completion")
+
+    res2 = PruneScheduler(["a", "b", "c", "slow"], must_not_run, cfg,
+                          save, load).run()
+    np.testing.assert_array_equal(np.asarray(res2["slow"].payload),
+                                  np.asarray(_payload_of("slow")))
+
+
 def test_elastic_worker_counts_agree():
     def work(u):
         return hash(u) % 97
