@@ -12,6 +12,10 @@ registered solver — fista, admm, wanda, sparsegpt — per sparsity).
 per solver per sparsity + the sparse-serving decode row) and enforces
 the committed 2:4-fista perplexity regression gate
 (benchmarks/quality_baseline.json).
+``--only serve`` writes BENCH_serve.json (continuous-batching modeled
+throughput + latency percentiles, dense vs packed 2:4 per pressure
+level) and enforces the committed packed-throughput regression gate
+(benchmarks/serve_baseline.json, 5%).
 The headline assertion of the suite (the paper's claim) is checked at the
 end: FISTAPruner ppl <= Wanda and SparseGPT at 50% and 2:4 on both
 families.
@@ -29,11 +33,12 @@ def main() -> None:
                     help="more training steps + wider sweeps")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,ptbc4,fig3,fig4a,"
-                         "fig4b,seeds,kernels,prune,quality")
+                         "fig4b,seeds,kernels,prune,quality,serve")
     args = ap.parse_args()
 
     steps = 500 if args.full else 300
-    from benchmarks import figures, kernel_bench, prune_bench, quality_bench, tables
+    from benchmarks import (figures, kernel_bench, prune_bench, quality_bench,
+                            serve_bench, tables)
 
     registry = {
         "table1": lambda: tables.table1_opt_family(steps),
@@ -51,6 +56,7 @@ def main() -> None:
         "kernels": kernel_bench.run_all,
         "prune": prune_bench.run_all,
         "quality": lambda: quality_bench.run_all(steps),
+        "serve": serve_bench.run_all,
     }
     names = args.only.split(",") if args.only else list(registry)
 
@@ -62,13 +68,14 @@ def main() -> None:
         results[name] = registry[name]()
         print(f"[{name} done in {time.perf_counter()-t1:.1f}s]")
 
-    # quality regression gate (checked at the end so a ppl drift never
-    # aborts the remaining benchmarks mid-suite)
+    # regression gates (checked at the end so a drift never aborts the
+    # remaining benchmarks mid-suite)
     ok = True
-    q = results.get("quality")
-    if isinstance(q, dict) and not q.get("gate_ok", True):
-        ok = False
-        print(f"QUALITY GATE: {q.get('regression_gate')}")
+    for gate_name in ("quality", "serve"):
+        g = results.get(gate_name)
+        if isinstance(g, dict) and not g.get("gate_ok", True):
+            ok = False
+            print(f"{gate_name.upper()} GATE: {g.get('regression_gate')}")
 
     # headline claim check (paper Tables 1-2 ordering)
     for tbl in ("table1", "table2"):

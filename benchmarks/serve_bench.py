@@ -1,0 +1,202 @@
+"""Continuous-batching serving benchmark -> BENCH_serve.json.
+
+Replays closed-loop request traces (every request queued at t=0) at
+increasing pressure levels against the continuous batcher, once with
+dense weights and once with the same weights packed 2:4 — the serve-time
+payoff the paper motivates (memory conservation -> decode throughput).
+
+Headline numbers are **modeled TPU decode-roofline throughput**: the
+scheduler run on CPU yields exact step counts, slot occupancy and
+per-step context sizes (all deterministic for a greedy closed-loop
+trace), and each decode step is costed at its HBM traffic
+``(weight_bytes + kv_bytes) / bw`` — weights are read once per step
+regardless of how many slots are active, which is precisely why
+continuous batching multiplies decode throughput and why the 0.625x
+packed weight traffic lifts it further at every pressure level.  CPU
+wall-clock (which includes the interpret-mode spmm24 unpack) is
+recorded informationally only, the same convention as quality_bench's
+decode row (DESIGN.md §6/§9).
+
+Gate: packed modeled throughput may not regress more than ``tolerance``
+(5%) vs the committed ``benchmarks/serve_baseline.json`` at any
+pressure level; the benchmark also asserts packed >= dense everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core.sparsity import round_tree_nm
+from repro.models.registry import model_def
+from repro.serve import BatchConfig, ContinuousBatcher, synthetic_trace
+
+OUT_PATH = "BENCH_serve.json"
+BASELINE_PATH = "benchmarks/serve_baseline.json"
+
+HBM_BW = 819e9                      # v5e, as kernel_bench/quality_bench
+
+#: serving shape of the benchmark (fixed so rows are comparable PR-to-PR)
+BATCH = BatchConfig(slots=4, block_size=16, max_blocks_per_request=2,
+                    num_blocks=24, seed=0)
+PROMPT_LEN, MAX_NEW = (8, 14), 16
+PRESSURES = {"low": 4, "mid": 8, "high": 16}     # requests per trace
+
+
+def _sparse_model() -> Tuple[object, object]:
+    """Tiny opt-family model with every linear rounded to exact 2:4 —
+    serve throughput doesn't depend on weight values, so no training."""
+    cfg = common.opt_family_config()
+    model = model_def(cfg)
+    return model, round_tree_nm(model.init(jax.random.PRNGKey(0)))
+
+
+def _tree_bytes(params) -> int:
+    return int(sum(l.size * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree_util.tree_leaves(params)))
+
+
+def _kv_token_bytes(cfg) -> int:
+    """HBM bytes of one cached token across all layers (K + V)."""
+    from repro.models.common import dtype_of
+    itemsize = jnp.dtype(dtype_of(cfg.compute_dtype)).itemsize
+    return 2 * cfg.num_layers * cfg.num_kv_heads * cfg.resolved_head_dim() * itemsize
+
+
+def _run_level(model, params, sparse: str, n_requests: int) -> Dict:
+    trace = synthetic_trace(n_requests, rate=0.0, vocab=model.cfg.vocab,
+                            prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
+                            seed=7)
+    batcher = ContinuousBatcher(model, params,
+                                dataclasses.replace(BATCH, sparse=sparse))
+    t0 = time.perf_counter()
+    results = batcher.run(trace)
+    wall = time.perf_counter() - t0
+
+    st = batcher.stats
+    tokens = int(sum(len(r.tokens) for r in results))
+    weight_bytes = _tree_bytes(batcher.params)
+    tok_kv = _kv_token_bytes(model.cfg)
+    step_s = (weight_bytes + tok_kv * st["context_tokens"]
+              / max(st["steps"], 1)) / HBM_BW
+    prefill_s = (st["prefills"] * weight_bytes
+                 + st["prefill_tokens"] * tok_kv) / HBM_BW
+    modeled_total = st["steps"] * step_s + prefill_s
+    # latency is modeled from *arrival* (t=0 in the closed-loop trace), so
+    # queueing delay — the thing pressure buys — is included: a request
+    # admitted late finishes at a later step and pays for it here
+    lat = np.asarray([r.finished_step * step_s
+                      + (weight_bytes + r.prompt_len * tok_kv) / HBM_BW
+                      for r in results])
+    return {
+        "mode": batcher.sparse_stats["mode"], "requests": n_requests,
+        "tokens": tokens, "steps": st["steps"],
+        "mean_occupancy": st["active_slot_steps"] / max(st["steps"], 1),
+        "weight_bytes": weight_bytes,
+        "cpu_wall_s": wall, "cpu_tok_s": tokens / max(wall, 1e-9),
+        "modeled_step_us": step_s * 1e6,
+        "modeled_tok_s": tokens / max(modeled_total, 1e-12),
+        "modeled_p50_ms": float(np.percentile(lat, 50)) * 1e3,
+        "modeled_p99_ms": float(np.percentile(lat, 99)) * 1e3,
+        "token_ids": [r.tokens.tolist() for r in results],
+    }
+
+
+def bench_serve_matrix() -> List[Dict]:
+    model, params = _sparse_model()
+    rows = []
+    for level, n in PRESSURES.items():
+        per_mode = {}
+        for sparse in ("dense", "packed"):
+            row = _run_level(model, params, sparse, n)
+            toks = row.pop("token_ids")
+            row["pressure"] = level
+            per_mode[row["mode"]] = (row, toks)
+            rows.append(row)
+            print(f"{level:>5} {row['mode']:>6}: modeled "
+                  f"{row['modeled_tok_s']:9.0f} tok/s "
+                  f"(p50 {row['modeled_p50_ms']:.3f} ms, "
+                  f"p99 {row['modeled_p99_ms']:.3f} ms, occupancy "
+                  f"{row['mean_occupancy']:.2f}); cpu {row['cpu_tok_s']:.1f} tok/s")
+        # packed serving is bitwise token-identical to dense, so both modes
+        # schedule identically and the modeled comparison is apples-to-apples
+        assert per_mode["packed"][1] == per_mode["dense"][1], \
+            f"packed tokens diverged from dense at pressure {level}"
+    return rows
+
+
+def check_regression(rows: List[Dict], baseline_path: str = BASELINE_PATH
+                     ) -> Tuple[bool, str]:
+    """Gate: packed modeled throughput within tolerance of the committed
+    baseline at every pressure level.  Missing or protocol-mismatched
+    baseline => informational pass."""
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f)
+    except FileNotFoundError:
+        return True, f"no baseline at {baseline_path} (gate skipped)"
+    if base.get("protocol") != _protocol():
+        return True, "baseline protocol differs (gate skipped; not comparable)"
+    tol = float(base.get("tolerance", 0.05))
+    msgs, ok = [], True
+    for level in PRESSURES:
+        row = next(r for r in rows
+                   if r["pressure"] == level and r["mode"] == "packed")
+        limit = float(base["levels"][level]) * (1.0 - tol)
+        good = row["modeled_tok_s"] >= limit
+        ok &= good
+        msgs.append(f"{level} {row['modeled_tok_s']:.0f}>= {limit:.0f} "
+                    f"{'PASS' if good else 'FAIL'}")
+    return ok, f"packed modeled tok/s vs baseline (-{tol:.0%}): " + "; ".join(msgs)
+
+
+def _protocol() -> Dict:
+    return {"batch": dataclasses.asdict(BATCH), "prompt_len": list(PROMPT_LEN),
+            "max_new": MAX_NEW, "pressures": dict(PRESSURES)}
+
+
+def write_baseline(rows: List[Dict], path: str = BASELINE_PATH,
+                   tolerance: float = 0.05) -> None:
+    levels = {r["pressure"]: r["modeled_tok_s"] for r in rows
+              if r["mode"] == "packed"}
+    with open(path, "w") as f:
+        json.dump({"levels": levels, "tolerance": tolerance,
+                   "protocol": _protocol()}, f, indent=1)
+        f.write("\n")
+
+
+def run_all(out_path: str = OUT_PATH, baseline_path: str = BASELINE_PATH,
+            update_baseline: bool = False) -> Dict:
+    print("\n== Continuous-batching serve (modeled TPU roofline, "
+          "dense vs packed 2:4) ==")
+    rows = bench_serve_matrix()
+    packed_ge_dense = all(
+        next(r for r in rows if r["pressure"] == lv and r["mode"] == "packed")
+        ["modeled_tok_s"] >=
+        next(r for r in rows if r["pressure"] == lv and r["mode"] == "dense")
+        ["modeled_tok_s"] for lv in PRESSURES)
+    ok, msg = check_regression(rows, baseline_path)
+    payload = {"rows": rows, "protocol": _protocol(), "hbm_bw": HBM_BW,
+               "packed_ge_dense": packed_ge_dense,
+               "gate_ok": ok and packed_ge_dense, "regression_gate": msg,
+               "backend": jax.default_backend()}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    common.write_result("serve_bench", payload)
+    if update_baseline:
+        write_baseline(rows, baseline_path)
+        print(f"baseline updated: {baseline_path}")
+    print(f"\nwrote {out_path}; packed>=dense: {packed_ge_dense}; {msg}")
+    return payload
+
+
+if __name__ == "__main__":
+    payload = run_all(update_baseline="--update-baseline" in sys.argv)
+    sys.exit(0 if payload["gate_ok"] else 1)

@@ -165,3 +165,32 @@ def satisfies(w: jnp.ndarray, spec: SparsitySpec, tol: float = 1e-6) -> bool:
     want = spec.ratio
     got = float((wn == 0).mean())
     return got >= want - tol
+
+
+def round_tree_nm(params, n: int = 2, m: int = 4):
+    """Round every eligible linear in a param tree to exact n:m (in paper
+    layout, i.e. along each weight's input dim).
+
+    Eligible: 2-D ``(in, out)`` weights and layer-stacked 3-D
+    ``(L, in, out)`` weights with whole input groups and both dims >= 8;
+    embeddings, norms and bias/scale vectors are left dense — the same
+    eligibility rules ``serve/packed.pack_tree`` applies when packing.
+    Used to build synthetic 2:4 checkpoints (serving benchmarks/tests)
+    without running a pruner.
+    """
+    from repro.utils.tree import tree_map_with_path
+
+    def visit(path, w):
+        if "embed" in path or "norm" in path or "conv" in path \
+                or path.endswith(("scale", "bias")):
+            return w
+        if getattr(w, "ndim", 0) == 2 and w.shape[0] % m == 0 \
+                and min(w.shape) >= 8:
+            return round_nm(w.T.astype(jnp.float32), n, m).T.astype(w.dtype)
+        if getattr(w, "ndim", 0) == 3 and w.shape[1] % m == 0 \
+                and min(w.shape[1:]) >= 8:
+            sl = jax.vmap(lambda x: round_nm(x.T.astype(jnp.float32), n, m).T)(w)
+            return sl.astype(w.dtype)
+        return w
+
+    return tree_map_with_path(visit, params)

@@ -1,0 +1,155 @@
+"""Continuous-batching serving driver over a synthetic Poisson trace.
+
+    # smoke drive on a random-init tiny model
+    python -m repro.launch.serve --arch opt125m-proxy --smoke \
+        --requests 8 --rate 4 --max-new-tokens 12
+
+    # serve a pruned run (2:4 checkpoints auto-pack onto spmm24)
+    python -m repro.launch.serve --checkpoint /tmp/run --requests 32 --rate 8
+
+Builds a Poisson(``--rate``) arrival trace of random-token prompts,
+replays it through the continuous batcher (``serve/batcher.py``:
+paged KV pool + one jitted decode step with active-slot masking), and
+reports throughput and latency percentiles.  ``--checkpoint`` loads a
+``launch/prune.py`` run dir (its ``pruned_model``, falling back to
+``dense_model`` + unit checkpoints or the latest trainer step, exactly
+like ``launch/evaluate.py``); otherwise ``--arch`` is random-initialized
+for a scheduling smoke drive.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro import api
+from repro.checkpoint import store
+from repro.serve import (BatchConfig, ContinuousBatcher, PoolExhausted,
+                         synthetic_trace)
+from repro.utils import get_logger
+
+log = get_logger("launch.serve")
+
+
+def load_serving_model(args: argparse.Namespace):
+    """Returns (model, params, source string)."""
+    if args.checkpoint:
+        from repro.launch import evaluate as eval_cli
+        run = eval_cli.resolve_run(args.checkpoint)
+        model = run["recipe"].load_model(smoke=run["smoke"])
+        like = model.init(jax.random.PRNGKey(0))
+        if run["kind"] == "prune":
+            params, _ = eval_cli._load_params(args.checkpoint,
+                                              eval_cli.PRUNED_MODEL, like)
+            source = f"{args.checkpoint}:{eval_cli.PRUNED_MODEL}"
+        elif run["kind"] == "units":
+            dense0, _ = eval_cli._load_params(args.checkpoint,
+                                              eval_cli.DENSE_MODEL, like)
+            params, _ = eval_cli._assemble_from_units(model, dense0,
+                                                      args.checkpoint)
+            source = f"{args.checkpoint}:dense_model+unit_*"
+        else:
+            step = store.latest_step(args.checkpoint)
+            params, _ = eval_cli._load_params(args.checkpoint,
+                                              store.step_name(step), like)
+            source = f"{args.checkpoint}:{store.step_name(step)}"
+        return model, params, source
+    model = api.load_model(args.arch, smoke=args.smoke)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    return model, params, f"random-init {args.arch}"
+
+
+def serve_trace(model, params, args: argparse.Namespace) -> dict:
+    if args.requests < 1:
+        raise ValueError(f"--requests must be >= 1, got {args.requests}")
+    cfg = BatchConfig(slots=args.slots, block_size=args.block_size,
+                      max_blocks_per_request=args.max_blocks_per_request,
+                      num_blocks=args.blocks, seed=args.seed,
+                      sparse=args.sparse)
+    pmax = min(args.prompt_len_max,
+               cfg.context_len - args.max_new_tokens,
+               model.cfg.max_seq - args.max_new_tokens)
+    if pmax < args.prompt_len_min:
+        raise ValueError(
+            f"prompt lengths [{args.prompt_len_min}, {args.prompt_len_max}] "
+            f"don't fit the serving context ({cfg.context_len}) or max_seq "
+            f"({model.cfg.max_seq}) with max_new_tokens={args.max_new_tokens}")
+    trace = synthetic_trace(args.requests, args.rate, model.cfg.vocab,
+                            prompt_len=(args.prompt_len_min, pmax),
+                            max_new_tokens=args.max_new_tokens,
+                            temperature=args.temperature, seed=args.seed)
+    batcher = ContinuousBatcher(model, params, cfg)
+    results = batcher.run(trace)
+
+    lat = np.asarray([r.latency for r in results])
+    tokens = int(sum(len(r.tokens) for r in results))
+    wall = max(r.finished for r in results)
+    return {
+        "sparse_mode": batcher.sparse_stats["mode"],
+        "requests": len(results), "tokens": tokens,
+        "wall_s": wall, "tok_s": tokens / max(wall, 1e-9),
+        "steps": batcher.stats["steps"],
+        "mean_occupancy": batcher.stats["active_slot_steps"]
+                          / max(batcher.stats["steps"], 1),
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+        "config": {"slots": cfg.slots, "block_size": cfg.block_size,
+                   "num_blocks": cfg.num_blocks,
+                   "context_len": cfg.context_len, "rate": args.rate},
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="opt125m-proxy",
+                    choices=list(api.ARCH_CHOICES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke-size config for --arch (random init)")
+    ap.add_argument("--checkpoint", default=None,
+                    help="checkpoint-store run dir (launch/prune.py "
+                         "--ckpt-dir); serves its pruned_model")
+    ap.add_argument("--sparse", default="auto",
+                    choices=("auto", "packed", "dense"))
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="Poisson arrival rate (req/s); <=0: all at t=0")
+    ap.add_argument("--prompt-len-min", type=int, default=8)
+    ap.add_argument("--prompt-len-max", type=int, default=16)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--max-blocks-per-request", type=int, default=4)
+    ap.add_argument("--blocks", type=int, default=64,
+                    help="KV pool size in blocks (incl. reserved trash)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write the JSON report here")
+    args = ap.parse_args(argv)
+
+    try:
+        model, params, source = load_serving_model(args)
+        report = serve_trace(model, params, args)
+    except (FileNotFoundError, ValueError, PoolExhausted) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    report["source"] = source
+    print(f"served {report['requests']} requests from {source} "
+          f"(sparse={report['sparse_mode']})")
+    print(f"throughput {report['tok_s']:.1f} tok/s over {report['wall_s']:.2f}s "
+          f"({report['steps']} decode steps, mean occupancy "
+          f"{report['mean_occupancy']:.2f}/{args.slots})")
+    print(f"latency p50 {report['latency_p50_s']*1e3:.0f} ms, "
+          f"p99 {report['latency_p99_s']*1e3:.0f} ms")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

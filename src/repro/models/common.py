@@ -318,6 +318,11 @@ def mha_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray, pos: jnp.ndarray,
             valid = (idx <= slot) | (pos >= cache_len)
         else:
             valid = idx <= slot
+            if window is not None:
+                # non-ring cache wider than the window: still mask to the
+                # window, matching the windowed full forward (and the paged
+                # decode path) — slot == absolute position here
+                valid &= idx > pos - window
     qg = q.reshape(q.shape[0], 1, nkv, g, hd)
     scores = jnp.einsum("bqngh,bknh->bngqk", qg, k).astype(jnp.float32) / np.sqrt(hd)
     if cfg.attn_logit_softcap > 0:
@@ -326,6 +331,62 @@ def mha_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray, pos: jnp.ndarray,
     scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = jnp.einsum("bngqk,bknh->bqngh", probs, v)
+    out = out.reshape(out.shape[0], 1, nq * hd)
+    return dense(out, p["wo"]), new_cache
+
+
+def mha_decode_paged(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                     pos: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+                     write_idx: jnp.ndarray, gather_idx: jnp.ndarray,
+                     active: jnp.ndarray, window: Optional[int] = None,
+                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode against a paged (block-pooled) KV cache.
+
+    x: (S, 1, D) one token per serving slot; pos: (S,) per-slot absolute
+    positions (unlike :func:`mha_decode`, slots decode at independent
+    positions); cache: ``{"k", "v"}`` flat block pool for this layer,
+    shape (T, nkv, hd) with T = num_blocks * block_size; write_idx: (S,)
+    flat pool slot receiving this token's K/V; gather_idx: (S, W) flat
+    pool slots of each slot's context *in position order*; active: (S,)
+    bool — inactive slots write to the trash block and attend to
+    nothing (their output is garbage the caller discards).
+
+    The attention math is element-for-element that of :func:`mha_decode`
+    on a contiguous (B, W, nkv, hd) cache: the paged read gathers the
+    pages into position order first, masked tail entries underflow to
+    exactly 0 after softmax, and the reductions run over the same axis
+    widths — so the outputs are bitwise-equal to the contiguous path
+    (pinned in tests/test_kv_pool.py).
+    """
+    hd = cfg.resolved_head_dim()
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    g = nq // nkv
+    q = dense(x, p["wq"], bias=p.get("bq"))
+    q = _split_heads(q, nq, hd)                                   # (S,1,nq,hd)
+    k_new = _split_heads(dense(x, p["wk"], bias=p.get("bk")), nkv, hd)
+    v_new = _split_heads(dense(x, p["wv"], bias=p.get("bv")), nkv, hd)
+    inv = rope_freqs(hd, cfg.partial_rotary, cfg.rope_theta)
+    pos_b = pos[:, None]                                          # (S,1)
+    if cfg.partial_rotary > 0:
+        q = apply_rope(q, pos_b, inv)
+        k_new = apply_rope(k_new, pos_b, inv)
+    k = cache["k"].at[write_idx].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[write_idx].set(v_new[:, 0].astype(cache["v"].dtype))
+    new_cache = {"k": k, "v": v}
+    kg = jnp.take(k, gather_idx, axis=0)                          # (S,W,nkv,hd)
+    vg = jnp.take(v, gather_idx, axis=0)
+    idx = jnp.arange(gather_idx.shape[1], dtype=jnp.int32)
+    valid = (idx[None, :] <= pos[:, None]) & active[:, None]
+    if window is not None:
+        valid &= idx[None, :] > pos[:, None] - window
+    qg = q.reshape(q.shape[0], 1, nkv, g, hd)
+    scores = jnp.einsum("bqngh,bknh->bngqk", qg, kg).astype(jnp.float32) / np.sqrt(hd)
+    if cfg.attn_logit_softcap > 0:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bngqk,bknh->bqngh", probs, vg)
     out = out.reshape(out.shape[0], 1, nq * hd)
     return dense(out, p["wo"]), new_cache
 

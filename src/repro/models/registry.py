@@ -39,6 +39,12 @@ class ModelDef:
     prefill: Optional[Callable]    # (params, tokens, cache_len, extras) -> (logits, state)
     make_batch: Callable           # (key, batch, seq) -> host batch dict
     batch_specs: Callable          # (shape: ShapeSpec) -> dict of ShapeDtypeStruct
+    # paged serving (continuous batcher, serve/batcher.py); None for
+    # families without a paged decode path (ssm / hybrid / encdec)
+    init_paged_state: Optional[Callable] = None  # (num_blocks, block_size) -> pool
+    paged_step: Optional[Callable] = None        # (params, pool, tables, token,
+                                                 #  pos, active, block_size)
+                                                 # -> (logits, pool)
 
 
 def _identity_post_unit(params, i, state):
@@ -81,6 +87,11 @@ def _transformer_def(cfg: ModelConfig) -> ModelDef:
                                 last_only=last_only),
         make_batch=lambda key, b, s: _token_batch(cfg, key, b, s),
         batch_specs=lambda shape: _token_specs(cfg, shape),
+        init_paged_state=lambda num_blocks, block_size:
+            transformer.init_paged_caches(cfg, num_blocks, block_size),
+        paged_step=lambda p, pool, tables, token, pos, active, block_size:
+            transformer.paged_serve_step(cfg, p, pool, tables, token, pos,
+                                         active, block_size),
     )
 
 

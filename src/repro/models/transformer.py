@@ -267,6 +267,78 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# paged serving path: slot-batched decode against a block-pooled KV cache
+# ---------------------------------------------------------------------------
+def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int
+                      ) -> Dict[str, jnp.ndarray]:
+    """Paged KV pool: one flat (L, num_blocks*block_size, nkv, hd) tensor
+    per K/V.  Block ``b``, offset ``s`` lives at flat slot
+    ``b*block_size + s``; block 0 is the serving stack's reserved trash
+    block (``serve/kv_cache.py``) — inactive slots write there."""
+    hd = cfg.resolved_head_dim()
+    shape = (cfg.num_layers, num_blocks * block_size, cfg.num_kv_heads, hd)
+    dt = dtype_of(cfg.compute_dtype)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def paged_serve_step(cfg: ModelConfig, params: Params,
+                     caches: Dict[str, jnp.ndarray], tables: jnp.ndarray,
+                     token: jnp.ndarray, pos: jnp.ndarray,
+                     active: jnp.ndarray, block_size: int
+                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decode step over the serving slots, slot-indexed into the
+    paged KV pool.  token (S,1) int32; pos (S,) per-slot absolute
+    positions; tables (S, MB) int32 block tables; active (S,) bool.
+    Returns (logits (S,1,V), new caches).
+
+    The step is shape-stable in everything but the params: the
+    continuous batcher jits it once per slot count, and requests join or
+    retire by flipping ``active`` / rewriting table rows — never by
+    reshaping.  Inactive slots compute masked garbage (writes land in
+    the trash block, reads attend to nothing) that the caller discards.
+    """
+    S, MB = tables.shape
+    j = jnp.arange(MB * block_size, dtype=jnp.int32)
+    write_block = jnp.take_along_axis(tables, pos[:, None] // block_size,
+                                      axis=1)[:, 0]
+    write_idx = write_block * block_size + pos % block_size          # (S,)
+    gather_blocks = jnp.take_along_axis(
+        tables, jnp.broadcast_to(j[None, :] // block_size, (S, j.shape[0])),
+        axis=1)
+    gather_idx = gather_blocks * block_size + (j % block_size)[None, :]
+
+    x = params["embed"][token] * cfg.emb_scale
+
+    def body(h, xs):
+        lp, cache = xs
+        rs = cfg.residual_scale
+        hn = norm_apply(cfg, lp["ln1"], h)
+        a, new_cache = common.mha_decode_paged(
+            cfg, lp["attn"], hn, pos, cache, write_idx, gather_idx, active,
+            window=cfg.window)
+        h = h + a.astype(h.dtype) * rs
+        hn = norm_apply(cfg, lp["ln2"], h)
+        if cfg.moe is not None:
+            f, _ = moe_lib.moe_apply(cfg, lp["moe"], hn)
+        else:
+            f = mlp(cfg, lp["mlp"], hn)
+        return h + f.astype(h.dtype) * rs, new_cache
+
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    else:
+        outs = []
+        for i in range(cfg.num_layers):
+            lp = tree_lib.tree_index(params["layers"], i)
+            ci = jax.tree_util.tree_map(lambda c: c[i], caches)
+            x, co = body(x, (lp, ci))
+            outs.append(co)
+        new_caches = tree_lib.tree_stack(outs)
+    h = norm_apply(cfg, params["final_norm"], x)
+    return unembed(cfg, params, h), new_caches
+
+
+# ---------------------------------------------------------------------------
 # unit path (pruning relay)
 # ---------------------------------------------------------------------------
 def attn_groups(cfg: ModelConfig) -> List[List[str]]:

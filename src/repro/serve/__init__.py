@@ -1,5 +1,11 @@
-"""Serving: batched decode engine + packed-2:4 weight store."""
-from repro.serve.engine import Engine, ServeConfig
+"""Serving: batched decode engine, continuous batcher + paged KV pool,
+packed-2:4 weight store."""
+from repro.serve.batcher import (BatchConfig, ContinuousBatcher, Request,
+                                 RequestResult, synthetic_trace)
+from repro.serve.engine import Engine, ServeConfig, prepare_serving_params
+from repro.serve.kv_cache import BlockPool, PoolExhausted
 from repro.serve.packed import pack_tree, unpack_tree
 
-__all__ = ["Engine", "ServeConfig", "pack_tree", "unpack_tree"]
+__all__ = ["Engine", "ServeConfig", "prepare_serving_params", "pack_tree",
+           "unpack_tree", "ContinuousBatcher", "BatchConfig", "Request",
+           "RequestResult", "synthetic_trace", "BlockPool", "PoolExhausted"]

@@ -1,0 +1,343 @@
+"""Continuous-batching request scheduler over the paged KV pool.
+
+The batcher turns the single-shot ``Engine`` into a request-level
+serving loop: an admission queue of :class:`Request`, a fixed number of
+serving *slots*, and **one** jitted decode step
+(``ModelDef.paged_step``) over those slots.  Requests join mid-flight —
+a solo eager prefill writes their K/V into freshly allocated blocks and
+their slot goes active — and retire on EOS or length by flipping the
+active mask and freeing their blocks.  The decode step never
+re-specializes: slot count, block-table width, and pool shape are fixed
+at construction, so joining/retiring costs zero recompilation
+(tests pin ``_step_fn._cache_size() == 1``).
+
+Correctness anchor: every request's output is **token-identical** to a
+solo ``Engine.generate(prompt, request_ids=[id])`` with
+``cache_len == BatchConfig.context_len`` — on dense and 2:4-packed
+checkpoints, greedy and temperature sampling (see DESIGN.md §9 for why
+the paged read and the per-request PRNG folding make this exact).
+
+Block accounting: blocks are allocated lazily as a request's context
+grows, but admission *reserves* the request's worst-case block count
+(``ceil((P + max_new) / block_size)``) against the pool, so an active
+request can never hit ``PoolExhausted`` mid-flight — pressure shows up
+as queueing delay, never as a mid-generation failure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelDef
+from repro.serve import kv_cache, sampling
+from repro.serve.engine import prepare_serving_params
+from repro.utils import get_logger
+
+log = get_logger("serve.batcher")
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    prompt: np.ndarray                 # (P,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    eos_id: Optional[int] = None       # None: run to max_new_tokens
+    arrival: float = 0.0               # seconds from trace start
+
+
+@dataclasses.dataclass
+class RequestResult:
+    id: int
+    tokens: np.ndarray                 # generated tokens (includes EOS if hit)
+    reason: str                        # "length" | "eos"
+    prompt_len: int
+    arrival: float                     # seconds from run start
+    admitted: float
+    first_token: float
+    finished: float
+    admitted_step: int                 # decode-step counter at admission
+    finished_step: int
+
+    @property
+    def latency(self) -> float:
+        return self.finished - self.arrival
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchConfig:
+    slots: int = 4
+    block_size: int = 16
+    max_blocks_per_request: int = 4    # context width = block_size * this
+    num_blocks: int = 64               # pool size incl. reserved trash block
+    seed: int = 0                      # sampling PRNG seed (Engine's cfg.seed)
+    sparse: str = "auto"               # auto | packed | dense
+    max_prefills_per_tick: int = 1     # admission rate per scheduler tick
+
+    @property
+    def context_len(self) -> int:
+        """Per-request context capacity (== the solo engine ``cache_len``
+        that the token-identity anchor compares against)."""
+        return self.block_size * self.max_blocks_per_request
+
+
+class ContinuousBatcher:
+    def __init__(self, model: ModelDef, params: Any,
+                 cfg: BatchConfig = BatchConfig()):
+        if model.paged_step is None or model.prefill is None:
+            raise ValueError(
+                f"family {model.cfg.family!r} has no paged serving path "
+                f"(paged_step/prefill); the continuous batcher covers the "
+                f"transformer families")
+        if model.cfg.family == "vlm":
+            raise ValueError(
+                "vlm prefill needs per-request patch embeddings and Request "
+                "carries none — serve VLMs through Engine.generate(extras=...)")
+        if cfg.num_blocks < 2:
+            raise ValueError("num_blocks must be >= 2 (block 0 is trash)")
+        self.model, self.cfg = model, cfg
+        self.params, self.sparse_stats = prepare_serving_params(params, cfg.sparse)
+        self.pool = kv_cache.BlockPool(cfg.num_blocks, cfg.block_size)
+        self.pool_state = model.init_paged_state(cfg.num_blocks, cfg.block_size)
+
+        S = cfg.slots
+        self._tables = np.zeros((S, cfg.max_blocks_per_request), np.int32)
+        self._pos = np.zeros((S,), np.int32)       # next write position
+        self._token = np.zeros((S, 1), np.int32)   # last sampled token
+        self._req_ids = np.zeros((S,), np.int32)
+        self._tok_idx = np.zeros((S,), np.int32)   # sample index of next token
+        self._temps = np.zeros((S,), np.float32)
+        self._active = np.zeros((S,), bool)
+        self._slot_req: List[Optional[Request]] = [None] * S
+        self._emitted: List[List[int]] = [[] for _ in range(S)]
+        self._meta: List[Dict[str, Any]] = [{} for _ in range(S)]
+        self._reserved = 0                         # promised, unallocated blocks
+
+        self.queue: Deque[Request] = deque()
+        self.results: Dict[int, RequestResult] = {}
+        self.stats = {"steps": 0, "prefills": 0, "prefill_tokens": 0,
+                      "active_slot_steps": 0, "context_tokens": 0}
+
+        def step(params, pool, tables, pos, token, req_ids, tok_idx, active,
+                 temps):
+            logits, pool = model.paged_step(params, pool, tables, token, pos,
+                                            active, cfg.block_size)
+            logits = logits[:, -1, :].astype(jnp.float32)
+            keys = sampling.step_keys(sampling.request_keys(cfg.seed, req_ids),
+                                      tok_idx)
+            return sampling.sample(logits, keys, temps)[:, None], pool
+
+        self._step_fn = jax.jit(step, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    # submission / admission
+    # ------------------------------------------------------------------
+    def _blocks_needed(self, r: Request) -> int:
+        return -(-(len(r.prompt) + r.max_new_tokens) // self.cfg.block_size)
+
+    def submit(self, request: Request) -> None:
+        P, n = len(request.prompt), request.max_new_tokens
+        if P < 1:
+            raise ValueError(f"request {request.id}: empty prompt")
+        if n < 1:
+            raise ValueError(f"request {request.id}: max_new_tokens must be "
+                             f">= 1, got {n}")
+        limit = min(self.cfg.context_len, self.model.cfg.max_seq)
+        if P + n > limit:
+            raise ValueError(
+                f"request {request.id}: prompt_len + max_new_tokens = {P + n} "
+                f"exceeds the serving context ({self.cfg.context_len}) or the "
+                f"model's max_seq ({self.model.cfg.max_seq})")
+        if self._blocks_needed(request) > self.cfg.num_blocks - 1:
+            raise kv_cache.PoolExhausted(
+                f"request {request.id} needs {self._blocks_needed(request)} "
+                f"blocks; the pool only has {self.cfg.num_blocks - 1}")
+        if request.id in self.results or any(
+                q.id == request.id for q in self.queue) or any(
+                r is not None and r.id == request.id for r in self._slot_req):
+            raise ValueError(f"duplicate request id {request.id}")
+        self.queue.append(request)
+
+    def _free_slot(self) -> Optional[int]:
+        for s in range(self.cfg.slots):
+            if not self._active[s]:
+                return s
+        return None
+
+    def _admit(self, now: float) -> int:
+        """FIFO admission: prefill queued+arrived requests into free slots
+        while the pool can reserve their worst case."""
+        admitted = 0
+        while self.queue and admitted < self.cfg.max_prefills_per_tick:
+            r = self.queue[0]
+            if r.arrival > now:
+                break
+            slot = self._free_slot()
+            if slot is None:
+                break
+            need = self._blocks_needed(r)
+            if self.pool.num_free - self._reserved < need:
+                break                      # head-of-line waits for blocks
+            self.queue.popleft()
+            self._prefill_into(slot, r, need, now)
+            admitted += 1
+        return admitted
+
+    def _prefill_into(self, slot: int, r: Request, need: int, now: float) -> None:
+        cfg, P = self.cfg, len(r.prompt)
+        n0 = max(1, -(-P // cfg.block_size))
+        blocks = self.pool.alloc(r.id, n0)
+        self._reserved += need - n0
+        prompt = jnp.asarray(np.asarray(r.prompt, np.int32)[None, :])
+        # eager, exact-length prefill: identical values to the solo
+        # engine's (prefill K/V and logits do not depend on cache width)
+        logits, kv = self.model.prefill(self.params, prompt, P, None)
+        flat = kv_cache.flat_slots(blocks, P, cfg.block_size)
+        self.pool_state = kv_cache.scatter_prefill(
+            self.pool_state, {k: v[:, 0] for k, v in kv.items()}, flat)
+        keys0 = sampling.step_keys(
+            sampling.request_keys(cfg.seed, jnp.asarray([r.id], jnp.int32)), 0)
+        first = sampling.sample(logits[:, -1, :].astype(jnp.float32), keys0,
+                                r.temperature)
+        self.stats["prefills"] += 1
+        self.stats["prefill_tokens"] += P
+
+        self._tables[slot] = kv_cache.table_row(blocks,
+                                                cfg.max_blocks_per_request)
+        self._pos[slot] = P
+        self._token[slot, 0] = int(first[0])
+        self._req_ids[slot] = r.id
+        self._tok_idx[slot] = 1
+        self._temps[slot] = r.temperature
+        self._active[slot] = True
+        self._slot_req[slot] = r
+        self._emitted[slot] = [int(first[0])]
+        self._meta[slot] = {"admitted": now, "first_token": now,
+                            "admitted_step": self.stats["steps"],
+                            "need": need}
+        self._maybe_finish(slot, now)
+
+    # ------------------------------------------------------------------
+    # decode loop
+    # ------------------------------------------------------------------
+    def _grow_blocks(self) -> None:
+        """Lazy allocation: a slot about to write position ``pos`` needs
+        block ``pos // block_size``; admission reserved it, so this alloc
+        cannot fail."""
+        for slot in range(self.cfg.slots):
+            if not self._active[slot]:
+                continue
+            r = self._slot_req[slot]
+            need_idx = int(self._pos[slot]) // self.cfg.block_size
+            have = len(self.pool.blocks_of(r.id))
+            if need_idx >= have:
+                new = self.pool.alloc(r.id, need_idx - have + 1)
+                self._reserved -= len(new)
+                self._tables[slot, have:have + len(new)] = new
+
+    def _tick(self, now: float) -> None:
+        """One jitted decode step over all slots + host-side bookkeeping."""
+        self._grow_blocks()
+        token, self.pool_state = self._step_fn(
+            self.params, self.pool_state, jnp.asarray(self._tables),
+            jnp.asarray(self._pos), jnp.asarray(self._token),
+            jnp.asarray(self._req_ids), jnp.asarray(self._tok_idx),
+            jnp.asarray(self._active), jnp.asarray(self._temps))
+        token = np.asarray(token)
+        self.stats["steps"] += 1
+        self.stats["active_slot_steps"] += int(self._active.sum())
+        self.stats["context_tokens"] += int((self._pos[self._active] + 1).sum())
+        for slot in range(self.cfg.slots):
+            if not self._active[slot]:
+                continue
+            self._emitted[slot].append(int(token[slot, 0]))
+            self._token[slot] = token[slot]
+            self._pos[slot] += 1
+            self._tok_idx[slot] += 1
+            self._maybe_finish(slot, now)
+
+    def _maybe_finish(self, slot: int, now: float) -> None:
+        r = self._slot_req[slot]
+        toks = self._emitted[slot]
+        reason = None
+        if r.eos_id is not None and toks and toks[-1] == r.eos_id:
+            reason = "eos"
+        elif len(toks) >= r.max_new_tokens:
+            reason = "length"
+        if reason is None:
+            return
+        meta = self._meta[slot]
+        self._reserved -= meta["need"] - len(self.pool.blocks_of(r.id))
+        self.pool.free_request(r.id)
+        self._active[slot] = False
+        self._tables[slot] = kv_cache.TRASH_BLOCK
+        self._pos[slot] = 0
+        self._slot_req[slot] = None
+        self.results[r.id] = RequestResult(
+            id=r.id, tokens=np.asarray(toks, np.int32), reason=reason,
+            prompt_len=len(r.prompt), arrival=r.arrival,
+            admitted=meta["admitted"], first_token=meta["first_token"],
+            finished=now, admitted_step=meta["admitted_step"],
+            finished_step=self.stats["steps"])
+
+    # ------------------------------------------------------------------
+    # driver
+    # ------------------------------------------------------------------
+    def run(self, requests: Optional[List[Request]] = None
+            ) -> List[RequestResult]:
+        """Serve every submitted request to completion (trace-driven: a
+        request with ``arrival > now`` waits).  Returns results by id."""
+        for r in requests or ():
+            self.submit(r)
+        t0 = time.monotonic()
+        while self.queue or self._active.any():
+            now = time.monotonic() - t0
+            if not self._active.any() and self.queue and \
+                    self.queue[0].arrival > now:
+                time.sleep(min(self.queue[0].arrival - now, 0.05))
+                continue
+            self._admit(now)
+            if self._active.any():
+                self._tick(time.monotonic() - t0)
+        return [self.results[i] for i in sorted(self.results)]
+
+    def defrag(self) -> int:
+        """Compact live blocks to the low end of the pool; returns the
+        number of blocks moved.  Safe between ticks: tables of active
+        slots are rewritten from the allocator's remapped state."""
+        remap = self.pool.defrag()
+        if not remap:
+            return 0
+        self.pool_state = kv_cache.apply_defrag(
+            self.pool_state, remap, self.cfg.num_blocks, self.cfg.block_size)
+        for slot, r in enumerate(self._slot_req):
+            if r is not None:
+                self._tables[slot] = kv_cache.table_row(
+                    self.pool.blocks_of(r.id), self.cfg.max_blocks_per_request)
+        return len(remap)
+
+
+def synthetic_trace(num_requests: int, rate: float, vocab: int,
+                    prompt_len: tuple = (8, 16), max_new_tokens: int = 16,
+                    temperature: float = 0.0, eos_id: Optional[int] = None,
+                    seed: int = 0) -> List[Request]:
+    """Poisson(rate) arrival trace with uniform prompt lengths — the
+    synthetic load for ``launch/serve.py`` and ``benchmarks/serve_bench``.
+    ``rate <= 0`` means every request arrives at t=0 (closed-loop
+    pressure)."""
+    rng = np.random.default_rng(seed)
+    t, reqs = 0.0, []
+    for i in range(num_requests):
+        if rate > 0:
+            t += float(rng.exponential(1.0 / rate))
+        P = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
+        prompt = rng.integers(0, vocab, size=P).astype(np.int32)
+        reqs.append(Request(id=i, prompt=prompt, max_new_tokens=max_new_tokens,
+                            temperature=temperature, eos_id=eos_id, arrival=t))
+    return reqs

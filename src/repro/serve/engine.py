@@ -4,6 +4,13 @@ Drives any ModelDef through its ``prefill``/``init_serve_state``/
 ``serve_step`` protocol; greedy or temperature sampling; the decode loop
 is jitted once per (batch, cache) shape.
 
+**Sampling determinism**: the PRNG is folded per *request id* and
+generated-token index (``serve/sampling.py``), never per engine call —
+a temperature-sampled request decodes identically regardless of batch
+composition, which is what lets the continuous batcher
+(``serve/batcher.py``) pin token identity against this engine.
+``request_ids`` defaults to ``arange(B)``.
+
 **Sparse fast path** (``ServeConfig.sparse``): a 2:4-pruned checkpoint
 is detected at engine construction and its eligible weights are packed
 into the compressed ``{"vals", "meta"}`` form, so every decode matmul of
@@ -25,6 +32,7 @@ import numpy as np
 
 from repro.models.registry import ModelDef
 from repro.serve import packed as packed_lib
+from repro.serve import sampling
 from repro.utils import get_logger
 
 log = get_logger("serve")
@@ -41,82 +49,122 @@ class ServeConfig:
     sparse: str = "auto"           # auto | packed | dense (fallback flag)
 
 
+def prepare_serving_params(params: Any, sparse: str
+                           ) -> Tuple[Any, Dict[str, Any]]:
+    """Route params onto the requested weight representation.
+
+    auto   — pack when the checkpoint's weights satisfy 2:4 (lossless,
+             weight dtype kept); otherwise serve dense.
+    packed — require a 2:4 checkpoint (already packed or packable).
+    dense  — force dense matmuls (unpacks a packed checkpoint).
+
+    Shared by :class:`Engine` and the continuous batcher so both serving
+    surfaces make identical packing decisions.
+    """
+    if sparse not in _SPARSE_MODES:
+        raise ValueError(f"unknown sparse mode {sparse!r}; "
+                         f"choices: {_SPARSE_MODES}")
+    pre_packed = packed_lib.count_packed(params)
+    if sparse == "dense":
+        if pre_packed:
+            log.info("sparse=dense: unpacking %d packed operators", pre_packed)
+            params = packed_lib.unpack_tree(params)
+        return params, {"mode": "dense", "packed_ops": 0}
+    if pre_packed:      # caller packed explicitly (e.g. bf16 storage)
+        return params, {"mode": "packed", "packed_ops": pre_packed}
+    packed, stats = packed_lib.pack_tree(params, dtype=None)
+    if stats["packed_ops"] == 0:
+        if sparse == "packed":
+            raise ValueError(
+                "sparse='packed' but no operator satisfies 2:4 — prune "
+                "the checkpoint to 2:4 first, or serve with sparse='auto'")
+        return params, {"mode": "dense", "packed_ops": 0}
+    log.info("2:4 checkpoint detected: packed %d operators "
+             "(%.2f MB -> %.2f MB weight traffic)", stats["packed_ops"],
+             stats["dense_bytes"] / 1e6, stats["packed_bytes"] / 1e6)
+    return packed, {"mode": "packed", **stats}
+
+
 class Engine:
     def __init__(self, model: ModelDef, params: Any, cfg: ServeConfig = ServeConfig()):
-        if cfg.sparse not in _SPARSE_MODES:
-            raise ValueError(f"unknown sparse mode {cfg.sparse!r}; "
-                             f"choices: {_SPARSE_MODES}")
         self.model, self.cfg = model, cfg
-        self.params, self.sparse_stats = self._prepare_params(params)
+        self.params, self.sparse_stats = prepare_serving_params(params, cfg.sparse)
         self._decode_fn = jax.jit(self._decode_step)
 
-    def _prepare_params(self, params: Any) -> Tuple[Any, Dict[str, Any]]:
-        """Route params onto the requested weight representation.
-
-        auto   — pack when the checkpoint's weights satisfy 2:4 (lossless,
-                 weight dtype kept); otherwise serve dense.
-        packed — require a 2:4 checkpoint (already packed or packable).
-        dense  — force dense matmuls (unpacks a packed checkpoint).
-        """
-        pre_packed = packed_lib.count_packed(params)
-        if self.cfg.sparse == "dense":
-            if pre_packed:
-                log.info("sparse=dense: unpacking %d packed operators",
-                         pre_packed)
-                params = packed_lib.unpack_tree(params)
-            return params, {"mode": "dense", "packed_ops": 0}
-        if pre_packed:      # caller packed explicitly (e.g. bf16 storage)
-            return params, {"mode": "packed", "packed_ops": pre_packed}
-        packed, stats = packed_lib.pack_tree(params, dtype=None)
-        if stats["packed_ops"] == 0:
-            if self.cfg.sparse == "packed":
-                raise ValueError(
-                    "sparse='packed' but no operator satisfies 2:4 — prune "
-                    "the checkpoint to 2:4 first, or serve with sparse='auto'")
-            return params, {"mode": "dense", "packed_ops": 0}
-        log.info("2:4 checkpoint detected: packed %d operators "
-                 "(%.2f MB -> %.2f MB weight traffic)", stats["packed_ops"],
-                 stats["dense_bytes"] / 1e6, stats["packed_bytes"] / 1e6)
-        return packed, {"mode": "packed", **stats}
-
-    def _decode_step(self, params, state, token, pos, key):
+    def _decode_step(self, params, state, token, pos, keys):
         logits, state = self.model.serve_step(params, state, token, pos)
         logits = logits[:, -1, :].astype(jnp.float32)
-        if self.cfg.temperature > 0:
-            nxt = jax.random.categorical(key, logits / self.cfg.temperature, axis=-1)
-        else:
-            nxt = jnp.argmax(logits, axis=-1)
-        return nxt.astype(jnp.int32)[:, None], state
+        nxt = sampling.sample(logits, keys, self.cfg.temperature)
+        return nxt[:, None], state
+
+    def _check_capacity(self, prompt_len: int, n_new: int) -> None:
+        """Positions ``0..prompt_len+n_new-1`` must exist for the model.
+
+        Without this check the engine silently wrapped or overran
+        positions past the model's trained range (whisper's learned
+        ``pos_embed`` lookup clamps out-of-range indices; RoPE models
+        run past ``max_seq``) and decoded garbage.
+        """
+        if n_new < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {n_new}")
+        if prompt_len < 1:
+            raise ValueError("prompt must hold at least one token")
+        total, limit = prompt_len + n_new, self.model.cfg.max_seq
+        if total > limit:
+            raise ValueError(
+                f"prompt_len + max_new_tokens = {total} exceeds the model's "
+                f"max_seq ({limit}): positions would silently wrap or "
+                f"overrun the cache — shorten the prompt or lower "
+                f"max_new_tokens")
 
     def generate(self, prompt: jnp.ndarray,
                  extras: Optional[Dict[str, jnp.ndarray]] = None,
-                 max_new_tokens: Optional[int] = None) -> np.ndarray:
-        """prompt (B, P) int32 -> generated tokens (B, new)."""
+                 max_new_tokens: Optional[int] = None,
+                 request_ids: Optional[Any] = None) -> np.ndarray:
+        """prompt (B, P) int32 -> generated tokens (B, new).
+
+        ``request_ids`` (B,) int seeds the per-request sampling PRNG
+        (default ``arange(B)``); pass each request's stable id to make
+        temperature-sampled outputs independent of batch composition.
+        """
         cfg = self.cfg
         B, P = prompt.shape
-        n_new = max_new_tokens or cfg.max_new_tokens
-        cache_len = max(cfg.cache_len, P + n_new)
+        n_new = cfg.max_new_tokens if max_new_tokens is None else max_new_tokens
+        # VLM prefill prepends patch embeddings: they occupy positions too
+        n_extra = 0
+        if extras is not None and extras.get("patches") is not None:
+            n_extra = extras["patches"].shape[1]
+        p_eff = P + n_extra
+        self._check_capacity(p_eff, n_new)
+        cache_len = max(cfg.cache_len, p_eff + n_new)
+        if request_ids is None:
+            request_ids = np.arange(B)
+        req_keys = sampling.request_keys(cfg.seed,
+                                         jnp.asarray(request_ids, jnp.int32))
 
         if self.model.prefill is not None:
             logits, state = self.model.prefill(self.params, prompt, cache_len, extras)
-            last = jnp.argmax(logits[:, -1, :].astype(jnp.float32), axis=-1)
-            token = last.astype(jnp.int32)[:, None]
-            pos0 = P
+            token = sampling.sample(logits[:, -1, :].astype(jnp.float32),
+                                    sampling.step_keys(req_keys, 0),
+                                    cfg.temperature)[:, None]
+            pos0 = p_eff
         else:
-            # recurrent families: feed the prompt token-by-token
+            # recurrent families: feed the prompt token-by-token (sampled
+            # outputs are discarded until the last prompt token, whose
+            # sample is generated-token 0 — hence the index-0 keys)
             state = self.model.init_serve_state(self.params, B, cache_len, extras)
-            token = prompt[:, :1]
+            keys0 = sampling.step_keys(req_keys, 0)
             for t in range(P):
-                key = jax.random.PRNGKey(cfg.seed + t)
                 nxt, state = self._decode_fn(self.params, state,
-                                             prompt[:, t:t + 1], jnp.int32(t), key)
+                                             prompt[:, t:t + 1], jnp.int32(t),
+                                             keys0)
             token = nxt
             pos0 = P
 
         out = [np.asarray(token)]
         for t in range(n_new - 1):
-            key = jax.random.PRNGKey(cfg.seed + 10_000 + t)
+            keys = sampling.step_keys(req_keys, t + 1)
             token, state = self._decode_fn(self.params, state, token,
-                                           jnp.int32(pos0 + t), key)
+                                           jnp.int32(pos0 + t), keys)
             out.append(np.asarray(token))
         return np.concatenate(out, axis=1)

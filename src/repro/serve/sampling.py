@@ -1,0 +1,51 @@
+"""Per-request sampling state for serving.
+
+The sampling PRNG is folded per **request id**, not per engine call or
+batch slot:
+
+    key(request, i) = fold_in(fold_in(PRNGKey(seed), request_id), i)
+
+where ``i`` is the index of the generated token within the request.  A
+temperature-sampled request therefore decodes identically no matter
+which batch it shares, which slot of the continuous batcher it lands in,
+or when it joins mid-flight — the property behind the serving stack's
+token-identity anchor (tests/test_serve_stack.py): continuous-batched
+output == solo static ``Engine.generate`` of the same prompt.
+
+Every function is shape-polymorphic jnp and traceable, so the batcher
+folds keys *inside* its jitted step while the engine folds them eagerly
+— same ops, same keys, same tokens.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def request_keys(seed: int, request_ids: jnp.ndarray) -> jnp.ndarray:
+    """(S,) int32 request ids -> (S, ...) per-request base PRNG keys."""
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(lambda r: jax.random.fold_in(base, r))(
+        jnp.asarray(request_ids, jnp.int32))
+
+
+def step_keys(req_keys: jnp.ndarray, index: jnp.ndarray) -> jnp.ndarray:
+    """Fold per-request keys with the sample index (scalar or (S,))."""
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32),
+                           (req_keys.shape[0],))
+    return jax.vmap(jax.random.fold_in)(req_keys, idx)
+
+
+def sample(logits: jnp.ndarray, keys: jnp.ndarray,
+           temperature) -> jnp.ndarray:
+    """Per-row next-token sampling.  logits (S, V) float32; keys (S, ...);
+    ``temperature`` scalar or (S,) — 0 means greedy argmax, otherwise a
+    categorical draw at that temperature with the row's own key, so a
+    row's token never depends on what else shares the batch."""
+    temps = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32),
+                             (logits.shape[0],))
+    greedy = jnp.argmax(logits, axis=-1)
+    safe = jnp.where(temps > 0, temps, 1.0)
+    drawn = jax.vmap(lambda k, row: jax.random.categorical(k, row))(
+        keys, logits / safe[:, None])
+    return jnp.where(temps > 0, drawn, greedy).astype(jnp.int32)

@@ -59,6 +59,20 @@ def test_windowed_attention_ring_buffer():
     np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
 
 
+def test_windowed_attention_wide_cache():
+    """A cache *wider* than the window must still mask attention to the
+    window: decode == windowed full forward.  (The non-ring decode branch
+    used to skip the window cut and attend to everything <= pos.)"""
+    d = load_arch("mixtral-8x7b", smoke=True)   # window=16 in smoke config
+    params = d.init(jax.random.PRNGKey(0))
+    S = 24  # > window
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (1, S), 0,
+                                d.cfg.vocab, jnp.int32)
+    got = _stepwise_logits(d, params, tokens, cache_len=2 * d.cfg.window)
+    want = np.asarray(d.forward_logits(params, {"tokens": tokens}), np.float32)
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
 def test_flash_attention_matches_xla_forward():
     """attn_impl='flash' == 'xla' on the same params (S >= 128 kernel path)."""
     from repro.models.registry import model_def

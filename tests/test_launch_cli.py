@@ -89,3 +89,28 @@ def test_evaluate_cli_missing_run_errors(tmp_path):
                str(tmp_path / "nowhere"))
     assert out.returncode == 2
     assert "not found" in out.stderr
+
+
+def test_serve_cli_smoke(tmp_path):
+    """Continuous-batching serve driver over a Poisson trace (random-init
+    smoke model): must report throughput/latency and write the JSON."""
+    report = tmp_path / "serve.json"
+    out = _run("repro.launch.serve", "--arch", "opt125m-proxy", "--smoke",
+               "--requests", "5", "--rate", "16", "--max-new-tokens", "6",
+               "--slots", "2", "--out", str(report))
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "tok/s" in out.stdout and "latency" in out.stdout
+    rec = json.loads(report.read_text())
+    assert rec["requests"] == 5 and rec["tokens"] == 30
+    assert rec["steps"] > 0 and rec["latency_p99_s"] >= rec["latency_p50_s"]
+
+
+def test_serve_cli_rejects_oversized_trace():
+    """Prompt lengths that cannot fit the serving context must die with a
+    clear error instead of wrapping the KV pool."""
+    out = _run("repro.launch.serve", "--arch", "opt125m-proxy", "--smoke",
+               "--requests", "2", "--prompt-len-min", "60",
+               "--prompt-len-max", "64", "--max-new-tokens", "16",
+               "--max-blocks-per-request", "4", "--block-size", "16")
+    assert out.returncode == 2
+    assert "context" in out.stderr
