@@ -23,6 +23,9 @@ Writes ``BENCH_prune.json`` at the repo root (and a copy under
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 import time
 from typing import Dict, List
 
@@ -34,6 +37,7 @@ from repro.data import CalibConfig, CorpusConfig, MarkovCorpus, calibration_batc
 from repro.models.registry import model_def
 
 OUT_PATH = "BENCH_prune.json"
+MESH_OUT_PATH = "BENCH_prune_mesh.json"
 
 SPARSITIES = ("50%", "2:4")
 MATRIX = ("fista", "admm", "wanda", "sparsegpt")
@@ -151,14 +155,102 @@ def _summarize(rows: List[Dict]) -> Dict[str, float]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# mesh-native Gram accumulation: 1-device vs 8-fake-device dispatch row
+# ---------------------------------------------------------------------------
+def _mesh_gram_child(devices: int) -> Dict:
+    """Runs INSIDE a subprocess whose XLA_FLAGS already forces ``devices``
+    fake host devices: prune one unit with the calibration batches
+    data-sharded over the mesh and count Gram-accumulation dispatches."""
+    from repro.core import sequential as seq_lib
+
+    model, params, _ = _unit_problem()
+    # 8 calibration micro-batches so every probed mesh divides them (one
+    # batch per shard at 8 devices — the bitwise-parity regime)
+    corpus = MarkovCorpus(CorpusConfig(vocab=model.cfg.vocab, seed=7))
+    calib = calibration_batches(corpus, CalibConfig(num_sequences=32,
+                                                    seq_len=32, batch_size=4))
+    counts = {"dispatches": 0, "stacked_batches": 0}
+    orig = seq_lib._group_stats_scan
+
+    def counting(init, current, ws, caps, ps, **kw):
+        counts["dispatches"] += 1
+        counts["stacked_batches"] += int(
+            jax.tree_util.tree_leaves(caps)[0].shape[0])
+        return orig(init, current, ws, caps, ps, **kw)
+
+    seq_lib._group_stats_scan = counting
+    try:
+        mesh = ({"devices": devices, "data_parallel": devices,
+                 "model_parallel": 1} if devices > 1 else {})
+        recipe = PruneRecipe(sparsity="2:4", mesh=mesh,
+                             solver=dict(_FISTA_KW, max_outer=4,
+                                         fista_iters=5))
+        from repro import api
+        t0 = time.perf_counter()
+        _, reports, _ = api.prune(model, params, calib, recipe)
+        wall = time.perf_counter() - t0
+    finally:
+        seq_lib._group_stats_scan = orig
+    # under the mesh the counting wrapper runs inside shard_map, so the
+    # stacked length it sees is already the per-device slice
+    per_device = counts["stacked_batches"] // max(counts["dispatches"], 1)
+    return {
+        "devices": devices,
+        "data_parallel": devices,
+        "gram_dispatches": counts["dispatches"],
+        "calib_batches": len(calib),
+        # scan trip count each device executes per dispatch — the thing
+        # data parallelism divides (the dispatch count itself is mesh-
+        # independent: one sharded scan replaces one serial scan)
+        "scan_steps_per_device": per_device,
+        "operators": len(reports),
+        "wall_s": wall,
+    }
+
+
+def bench_mesh_gram(device_counts=(1, 8)) -> Dict:
+    """Parent-side: spawn one child per device count (XLA fake-device
+    flags must be set before jax initializes, hence subprocesses) and
+    assemble the comparison row for BENCH_prune.json."""
+    from repro.utils.compat import force_host_devices_flags
+
+    rows = []
+    for n in device_counts:
+        env = dict(os.environ)
+        # replace (not prepend to) any inherited device-count flag — the
+        # last duplicated XLA flag wins, so an exported =8 would
+        # override the child's count
+        env["XLA_FLAGS"] = force_host_devices_flags(n)
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.prune_bench",
+             "--mesh-gram-child", str(n)],
+            env=env, capture_output=True, text=True, timeout=900)
+        if out.returncode != 0:
+            raise RuntimeError(f"mesh-gram child ({n} devices) failed:\n"
+                               f"{out.stdout}\n{out.stderr}")
+        row = json.loads(out.stdout.splitlines()[-1])
+        rows.append(row)
+        print(f"{n:>2} device(s): {row['gram_dispatches']} Gram dispatches, "
+              f"{row['scan_steps_per_device']} scan step(s)/device "
+              f"({row['calib_batches']} calib batches)")
+    base = rows[0]
+    return {"rows": rows,
+            "scan_step_ratio": base["scan_steps_per_device"]
+            / max(rows[-1]["scan_steps_per_device"], 1)}
+
+
 def run_all(out_path: str = OUT_PATH) -> List[Dict]:
     print("\n== Prune solver bench (host vs fused vs group-batched) ==")
     rows = bench_prune_impls()
     print("\n== Per-solver matrix (fista / admm / wanda / sparsegpt) ==")
     matrix = bench_solver_matrix()
+    print("\n== Mesh-native Gram accumulation (1 vs 8 fake devices) ==")
+    mesh_gram = bench_mesh_gram()
     summary = _summarize(rows)
     payload = {"rows": rows, "solver_matrix": matrix, "summary": summary,
-               "backend": jax.default_backend()}
+               "mesh_gram": mesh_gram, "backend": jax.default_backend()}
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)
     from benchmarks import common
@@ -166,3 +258,23 @@ def run_all(out_path: str = OUT_PATH) -> List[Dict]:
     print(f"\nwrote {out_path}; speedup vs host-loop: "
           + "  ".join(f"{k}={v:.2f}x" for k, v in sorted(summary.items())))
     return rows
+
+
+def main(argv: List[str]) -> int:
+    if "--mesh-gram-child" in argv:
+        n = int(argv[argv.index("--mesh-gram-child") + 1])
+        print(json.dumps(_mesh_gram_child(n)))
+        return 0
+    if "--mesh-only" in argv:
+        # the CI distributed job's cheap entry: just the mesh comparison
+        payload = bench_mesh_gram()
+        with open(MESH_OUT_PATH, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {MESH_OUT_PATH}")
+        return 0
+    run_all()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -49,6 +49,15 @@ BATCH = BatchConfig(slots=4, block_size=16, max_blocks_per_request=2,
 PROMPT_LEN, MAX_NEW = (8, 14), 16
 PRESSURES = {"low": 4, "mid": 8, "high": 16}     # requests per trace
 
+#: model-parallel degree of the extra TP roofline row: params shard per
+#: the Megatron column/row rules and the paged KV pool heads-shards
+#: (distributed/executor.py), so each device reads weight_bytes/TP and
+#: kv_bytes/TP per step — the per-step roofline divides by TP.  The TP
+#: scheduler behavior (steps, occupancy, tokens) is identical to the
+#: single-device packed run: TP decode is pinned token-identical in
+#: tests/distributed_cases.py::case_batcher_tp_parity.
+TP_DEGREE = 4
+
 
 def _sparse_model() -> Tuple[object, object]:
     """Tiny opt-family model with every linear rounded to exact 2:4 —
@@ -70,6 +79,30 @@ def _kv_token_bytes(cfg) -> int:
     return 2 * cfg.num_layers * cfg.num_kv_heads * cfg.resolved_head_dim() * itemsize
 
 
+def _modeled(st: Dict, results, weight_bytes: int, tok_kv: int,
+             tp: int = 1) -> Dict:
+    """Roofline numbers from the measured scheduler counters.  ``tp``
+    divides the per-device weight and KV traffic (Megatron col/row
+    sharding + heads-sharded paged pool): each model shard reads 1/tp of
+    the weights and of the cached tokens per step."""
+    wb, kb = weight_bytes / tp, tok_kv / tp
+    step_s = (wb + kb * st["context_tokens"] / max(st["steps"], 1)) / HBM_BW
+    prefill_s = (st["prefills"] * wb + st["prefill_tokens"] * kb) / HBM_BW
+    modeled_total = st["steps"] * step_s + prefill_s
+    tokens = int(sum(len(r.tokens) for r in results))
+    # latency is modeled from *arrival* (t=0 in the closed-loop trace), so
+    # queueing delay — the thing pressure buys — is included: a request
+    # admitted late finishes at a later step and pays for it here
+    lat = np.asarray([r.finished_step * step_s + (wb + r.prompt_len * kb) / HBM_BW
+                      for r in results])
+    return {
+        "modeled_step_us": step_s * 1e6,
+        "modeled_tok_s": tokens / max(modeled_total, 1e-12),
+        "modeled_p50_ms": float(np.percentile(lat, 50)) * 1e3,
+        "modeled_p99_ms": float(np.percentile(lat, 99)) * 1e3,
+    }
+
+
 def _run_level(model, params, sparse: str, n_requests: int) -> Dict:
     trace = synthetic_trace(n_requests, rate=0.0, vocab=model.cfg.vocab,
                             prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
@@ -84,28 +117,15 @@ def _run_level(model, params, sparse: str, n_requests: int) -> Dict:
     tokens = int(sum(len(r.tokens) for r in results))
     weight_bytes = _tree_bytes(batcher.params)
     tok_kv = _kv_token_bytes(model.cfg)
-    step_s = (weight_bytes + tok_kv * st["context_tokens"]
-              / max(st["steps"], 1)) / HBM_BW
-    prefill_s = (st["prefills"] * weight_bytes
-                 + st["prefill_tokens"] * tok_kv) / HBM_BW
-    modeled_total = st["steps"] * step_s + prefill_s
-    # latency is modeled from *arrival* (t=0 in the closed-loop trace), so
-    # queueing delay — the thing pressure buys — is included: a request
-    # admitted late finishes at a later step and pays for it here
-    lat = np.asarray([r.finished_step * step_s
-                      + (weight_bytes + r.prompt_len * tok_kv) / HBM_BW
-                      for r in results])
     return {
         "mode": batcher.sparse_stats["mode"], "requests": n_requests,
         "tokens": tokens, "steps": st["steps"],
         "mean_occupancy": st["active_slot_steps"] / max(st["steps"], 1),
         "weight_bytes": weight_bytes,
         "cpu_wall_s": wall, "cpu_tok_s": tokens / max(wall, 1e-9),
-        "modeled_step_us": step_s * 1e6,
-        "modeled_tok_s": tokens / max(modeled_total, 1e-12),
-        "modeled_p50_ms": float(np.percentile(lat, 50)) * 1e3,
-        "modeled_p99_ms": float(np.percentile(lat, 99)) * 1e3,
+        **_modeled(st, results, weight_bytes, tok_kv),
         "token_ids": [r.tokens.tolist() for r in results],
+        "_counters": (dict(st), results, weight_bytes, tok_kv),
     }
 
 
@@ -116,6 +136,7 @@ def bench_serve_matrix() -> List[Dict]:
         per_mode = {}
         for sparse in ("dense", "packed"):
             row = _run_level(model, params, sparse, n)
+            st, results, weight_bytes, tok_kv = row.pop("_counters")
             toks = row.pop("token_ids")
             row["pressure"] = level
             per_mode[row["mode"]] = (row, toks)
@@ -125,6 +146,29 @@ def bench_serve_matrix() -> List[Dict]:
                   f"(p50 {row['modeled_p50_ms']:.3f} ms, "
                   f"p99 {row['modeled_p99_ms']:.3f} ms, occupancy "
                   f"{row['mean_occupancy']:.2f}); cpu {row['cpu_tok_s']:.1f} tok/s")
+            if sparse == "packed":
+                # TP row: same measured schedule (TP decode is pinned
+                # token-identical), per-device traffic divided by the
+                # model-parallel degree.  Only schedule-derived and
+                # modeled fields appear — no cpu_wall/cpu_tok_s, since
+                # no TP run was executed here, and weight_bytes is the
+                # PER-DEVICE read the roofline actually charges.
+                tp_row = dict(
+                    mode=f"packed-tp{TP_DEGREE}", tp=TP_DEGREE,
+                    requests=row["requests"], tokens=row["tokens"],
+                    steps=row["steps"],
+                    mean_occupancy=row["mean_occupancy"],
+                    weight_bytes=weight_bytes // TP_DEGREE,
+                    pressure=level,
+                    **_modeled(st, results, weight_bytes, tok_kv,
+                               tp=TP_DEGREE))
+                rows.append(tp_row)
+                print(f"{level:>5} {tp_row['mode']:>6}: modeled "
+                      f"{tp_row['modeled_tok_s']:9.0f} tok/s "
+                      f"(p50 {tp_row['modeled_p50_ms']:.3f} ms, "
+                      f"p99 {tp_row['modeled_p99_ms']:.3f} ms)")
+                assert tp_row["modeled_tok_s"] >= row["modeled_tok_s"], \
+                    f"TP roofline regressed below packed at {level}"
         # packed serving is bitwise token-identical to dense, so both modes
         # schedule identically and the modeled comparison is apples-to-apples
         assert per_mode["packed"][1] == per_mode["dense"][1], \

@@ -33,6 +33,7 @@ from repro.core.sequential import OperatorReport, SequentialConfig
 from repro.core.solvers import LayerSolver
 from repro.core.sparsity import SparsitySpec
 from repro.data import CalibConfig, calibration_batches
+from repro.distributed.executor import MeshConfig, MeshExecutor
 from repro.eval.perplexity import EvalConfig
 from repro.models.registry import ModelDef, load_arch
 
@@ -85,6 +86,10 @@ class PruneRecipe:
     calibration: Dict[str, Any] = dataclasses.field(default_factory=dict)
     scheduler: Dict[str, Any] = dataclasses.field(default_factory=dict)
     eval: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: mesh section ({devices, data_parallel, model_parallel} ->
+    #: distributed.executor.MeshConfig): how every pipeline of this run
+    #: places work on the device mesh.  Empty/1x1 = single device.
+    mesh: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self) -> None:
         if self.correction not in _CORRECTIONS:
@@ -94,6 +99,7 @@ class PruneRecipe:
         self.scheduler_config()                    # ... bad kwargs
         self.calib_config()
         self.eval_config()
+        self.mesh_config()
         self.build_solver()                        # ... and bad solvers —
         # a typo'd --recipe must die at load time, not after the dense
         # model has been trained
@@ -132,6 +138,17 @@ class PruneRecipe:
     def eval_config(self) -> EvalConfig:
         return EvalConfig(**_checked_kwargs(self.eval, EvalConfig, "eval"))
 
+    def mesh_config(self) -> MeshConfig:
+        return MeshConfig(**_checked_kwargs(self.mesh, MeshConfig, "mesh"))
+
+    def build_executor(self) -> Optional[MeshExecutor]:
+        """The run's MeshExecutor, or None for a single-device recipe.
+        Device availability is checked HERE (not at recipe load), so a
+        recipe authored for an 8-device pod still round-trips on a
+        laptop — it just cannot execute there."""
+        cfg = self.mesh_config()
+        return None if cfg.is_single else MeshExecutor(cfg)
+
     def load_model(self, smoke: bool = False) -> ModelDef:
         return load_model(self.arch, smoke=smoke)
 
@@ -165,13 +182,23 @@ class PruneRecipe:
 
 def prune(model: ModelDef, params: Any, calib: Sequence[Dict],
           recipe: PruneRecipe,
-          sched: Optional[SchedulerConfig] = None
+          sched: Optional[SchedulerConfig] = None,
+          executor: Optional[MeshExecutor] = None
           ) -> Tuple[Any, List[OperatorReport], Dict]:
     """Prune ``params`` per the recipe.  Returns (pruned params, per-operator
-    reports, scheduler stats) — the single entry point every launcher uses."""
-    return parallel_prune(model, params, calib, recipe.sequential_config(),
+    reports, scheduler stats) — the single entry point every launcher uses.
+
+    ``executor`` overrides the recipe's ``mesh`` section (the launchers
+    build one executor per process and thread it through every stage)."""
+    if executor is None:
+        executor = recipe.build_executor()
+    seq_cfg = recipe.sequential_config()
+    if executor is not None:
+        seq_cfg = dataclasses.replace(seq_cfg, executor=executor)
+    return parallel_prune(model, params, calib, seq_cfg,
                           sched if sched is not None
-                          else recipe.scheduler_config())
+                          else recipe.scheduler_config(),
+                          executor=executor)
 
 
 def calibration_for(recipe: PruneRecipe, corpus) -> List[Dict]:

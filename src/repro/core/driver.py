@@ -48,12 +48,18 @@ def _dense_unit_inputs(model: ModelDef, params: Any, calib_batches: Sequence[Dic
 
 def parallel_prune(model: ModelDef, params: Any, calib_batches: Sequence[Dict],
                    cfg: SequentialConfig,
-                   sched: SchedulerConfig = SchedulerConfig()
+                   sched: SchedulerConfig = SchedulerConfig(),
+                   executor: Optional[Any] = None
                    ) -> Tuple[Any, List[OperatorReport], Dict]:
     cfg = cfg.with_solver()   # resolve the legacy (method, pruner) pair once
+    if executor is not None and cfg.executor is None:
+        cfg = dataclasses.replace(cfg, executor=executor)
+    executor = cfg.executor
+    mesh_info = executor.describe() if executor is not None \
+        else {"data": 1, "model": 1, "devices": 1}
     if cfg.error_correction == "full":
         new_params, reports = seq_lib.prune_model(model, params, calib_batches, cfg)
-        return new_params, reports, {"mode": "serial-full"}
+        return new_params, reports, {"mode": "serial-full", "mesh": mesh_info}
 
     units = {spec.name: spec for spec in model.units()}
     unit_inputs = _dense_unit_inputs(model, params, calib_batches,
@@ -72,11 +78,16 @@ def parallel_prune(model: ModelDef, params: Any, calib_batches: Sequence[Dict],
                 "reports": [dataclasses.asdict(r) for r in reports],
                 "solver": telemetry}
 
-    def save_payload(name: str, payload: Dict) -> None:
+    def save_payload(name: str, payload: Dict,
+                     meta: Optional[Dict] = None) -> None:
+        # telemetry rides with the unit checkpoint: which worker pruned
+        # this unit, on what mesh, and how long it took — multi-worker
+        # runs stay attributable from the run dir alone
         store.save(sched.checkpoint_dir, f"unit_{name}",
                    {"unit_params": payload["unit_params"]},
                    extra={"reports": payload["reports"],
-                          "solver": payload.get("solver", {})})
+                          "solver": payload.get("solver", {}),
+                          "telemetry": dict(meta or {}, mesh=mesh_info)})
 
     def load_payload(name: str) -> Dict:
         spec = units[name]
@@ -99,4 +110,4 @@ def parallel_prune(model: ModelDef, params: Any, calib_batches: Sequence[Dict],
         new_params = seq_lib._write_unit_params(new_params, spec,
                                                 res.payload["unit_params"])
         reports.extend(OperatorReport(**r) for r in res.payload["reports"])
-    return new_params, reports, scheduler.stats
+    return new_params, reports, dict(scheduler.stats, mesh=mesh_info)

@@ -66,6 +66,11 @@ class PrunerConfig:
     step_impl: str = "jnp"         # jnp | pallas
     outer_impl: str = "fused"      # fused (device-resident) | host (reference)
     group_batch: bool = True       # vmap same-shape operators of a group
+    # shard the m rows of each inner FISTA solve over the mesh "model"
+    # axis (distributed/rowfista.py).  Only takes effect when a
+    # MeshExecutor with model_parallel > 1 is bound to the solver
+    # (SequentialConfig.executor / PruneRecipe.mesh); otherwise ignored.
+    row_shard: bool = False
 
 
 @dataclasses.dataclass
@@ -284,7 +289,12 @@ def prune_group(ws: Union[jnp.ndarray, Sequence[jnp.ndarray]],
 # ---------------------------------------------------------------------------
 def _prune_operator_host(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
                          cfg: PrunerConfig,
-                         warm: Optional[Union[str, jnp.ndarray]] = None) -> PruneResult:
+                         warm: Optional[Union[str, jnp.ndarray]] = None,
+                         inner_solve: Optional[callable] = None) -> PruneResult:
+    """``inner_solve`` (same signature/return as ``fista_lib.solve``)
+    swaps the per-lambda FISTA solve — the hook the row-sharded path
+    (``MeshExecutor.row_fista_solve`` via ``distributed/rowfista``)
+    plugs into while the Algorithm-1 outer loop stays on the host."""
     w = jnp.asarray(w, jnp.float32)
     B = gram_lib.target_correlation(stats, w)
     L = gram_lib.max_eigval(stats.G) * 1.01
@@ -303,8 +313,9 @@ def _prune_operator_host(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
     total_inner = 0
     outer = 0
 
+    solve = fista_lib.solve if inner_solve is None else inner_solve
     for outer in range(1, cfg.max_outer + 1):
-        w_k, iters = fista_lib.solve(
+        w_k, iters = solve(
             stats.G, B, w_best, lam, L=L, max_iters=cfg.fista_iters,
             tol=cfg.fista_tol, momentum=cfg.momentum, step_impl=cfg.step_impl)
         total_inner += int(iters)

@@ -18,6 +18,7 @@ same math.  Production behaviors implemented and tested:
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import queue
 import threading
 import time
@@ -64,6 +65,17 @@ class PruneScheduler:
         self.cfg = cfg
         self.save_payload = save_payload
         self.load_payload = load_payload
+        # telemetry-aware persistence: a 3-arg save_payload additionally
+        # receives {"worker", "seconds", "attempts"} so multi-worker runs
+        # are attributable post-hoc from the checkpoints alone; 2-arg
+        # callbacks keep working unchanged
+        self._save_wants_meta = False
+        if save_payload is not None:
+            try:
+                self._save_wants_meta = (
+                    len(inspect.signature(save_payload).parameters) >= 3)
+            except (TypeError, ValueError):
+                pass
         self._results: Dict[str, UnitResult] = {}
         self._attempts: Dict[str, int] = {u: 0 for u in self.units}
         self._lock = threading.Lock()
@@ -91,9 +103,16 @@ class PruneScheduler:
         self._results[unit] = UnitResult(unit, payload, 0.0, 0, -1)
         return True
 
-    def _persist(self, unit: str, payload: Any) -> None:
+    def _persist(self, unit: str, payload: Any,
+                 result: Optional["UnitResult"] = None) -> None:
         if self.cfg.checkpoint_dir and self.save_payload is not None:
-            self.save_payload(unit, payload)
+            if self._save_wants_meta and result is not None:
+                self.save_payload(unit, payload,
+                                  {"worker": result.worker,
+                                   "seconds": result.seconds,
+                                   "attempts": result.attempts})
+            else:
+                self.save_payload(unit, payload)
 
     # -- worker loop -----------------------------------------------------------
     def _worker(self, wid: int) -> None:
@@ -138,7 +157,8 @@ class PruneScheduler:
             with self._lock:
                 self._inflight.pop(unit, None)
                 if unit not in self._results:      # first completion wins
-                    self._results[unit] = UnitResult(unit, payload, dt, attempt, wid)
+                    result = UnitResult(unit, payload, dt, attempt, wid)
+                    self._results[unit] = result
                     first = True
                     # reserve the persist before releasing the lock so run()
                     # cannot observe "all done" with this checkpoint still
@@ -146,7 +166,7 @@ class PruneScheduler:
                     self._pending_persist += 1
             if first:
                 try:
-                    self._persist(unit, payload)
+                    self._persist(unit, payload, result)
                 except Exception as exc:  # noqa: BLE001 — a checkpoint
                     # failure must not kill the worker (the result is already
                     # recorded); a resumed job just recomputes this unit
@@ -222,6 +242,7 @@ class PruneScheduler:
             "duplicated": sorted(self._duplicated),
             "attempts": dict(self._attempts),
             "durations": durations,
+            "workers": {u: r.worker for u, r in self._results.items()},
             "total_unit_seconds": sum(fresh),
             "median_unit_seconds": (sorted(fresh)[len(fresh) // 2]
                                     if fresh else 0.0),

@@ -58,6 +58,11 @@ class SequentialConfig:
     # resolved through the registry with a DeprecationWarning.  PruneRecipe
     # (repro/api.py) always sets this.
     solver: Optional[LayerSolver] = None
+    # MeshExecutor (distributed/executor.py): when set, Gram accumulation
+    # goes data-parallel over the calibration micro-batches and solvers
+    # that can row-shard do so over "model".  Duck-typed (never imported
+    # here) so core keeps zero dependencies on the distribution layer.
+    executor: Optional[Any] = None
 
     def resolve_solver(self) -> LayerSolver:
         if self.solver is not None:
@@ -234,6 +239,9 @@ def prune_unit(model: ModelDef, spec: UnitSpec, dense_unit: Any,
     """
     cfg = cfg.with_solver()
     solver = cfg.solver
+    executor = cfg.executor
+    if executor is not None and hasattr(solver, "bind_executor"):
+        solver.bind_executor(executor)   # row-sharded solves (rowfista path)
     fwd = _capture_forward(model, spec)
     current = dense_unit  # progressively replaced with pruned weights
     reports: List[OperatorReport] = []
@@ -264,10 +272,18 @@ def prune_unit(model: ModelDef, spec: UnitSpec, dense_unit: Any,
         for idx, pstacked in zip(buckets, pruned_stacked):
             caps_stacked = tree_stack([{k: dense_caps[i][k] for k in group_keys}
                                        for i in idx])
-            stats = _group_stats_scan(
-                stats, current, ws, caps_stacked, pstacked,
-                unit_apply=model.unit_apply, layer_index=spec.layer_index,
-                group_keys=group_keys, ec_none=ec_none)
+            static_kw = dict(unit_apply=model.unit_apply,
+                             layer_index=spec.layer_index,
+                             group_keys=group_keys, ec_none=ec_none)
+            if executor is not None and executor.can_shard_batches(len(idx)):
+                # data-parallel accumulation: per-shard Gram scan + one
+                # psum over "data" (DESIGN.md §10)
+                stats = executor.sharded_group_stats(
+                    _group_stats_scan, stats, current, ws, caps_stacked,
+                    pstacked, **static_kw)
+            else:
+                stats = _group_stats_scan(stats, current, ws, caps_stacked,
+                                          pstacked, **static_kw)
 
         # prune the group's operators against their statistics: same-shape
         # operators are solved in one batched dispatch when the solver can

@@ -62,6 +62,12 @@ class LayerSolver(abc.ABC):
     name: str = "?"              # set by @register_solver
     wants_pruned_gram: bool = True
 
+    def bind_executor(self, executor: Any) -> None:
+        """Attach a MeshExecutor (distributed/executor.py).  Solvers that
+        can exploit the mesh (row-sharded FISTA) override/consume it; the
+        default is a no-op so every solver is executor-bindable."""
+        self._executor = executor
+
     @property
     def supports_group_batch(self) -> bool:
         return False
@@ -153,10 +159,20 @@ class FistaSolver(LayerSolver):
 
     def __init__(self, cfg: Optional[PrunerConfig] = None, **overrides: Any):
         self.cfg = dataclasses.replace(cfg or PrunerConfig(), **overrides)
+        self._executor: Any = None
+
+    def _row_sharded(self, rows: int) -> bool:
+        """Row-shard this solve over the mesh "model" axis?  Requires the
+        recipe to ask (``row_shard``), a bound executor with a model axis,
+        and a row count the axis divides (no padding at CI scale)."""
+        ex = self._executor
+        return (self.cfg.row_shard and ex is not None
+                and ex.can_row_shard(rows))
 
     @property
     def supports_group_batch(self) -> bool:
-        return self.cfg.outer_impl == "fused" and self.cfg.group_batch
+        return (self.cfg.outer_impl == "fused" and self.cfg.group_batch
+                and not self.cfg.row_shard)
 
     @property
     def op_label(self) -> str:
@@ -167,14 +183,23 @@ class FistaSolver(LayerSolver):
         return "fused-group"
 
     def solve(self, w, stats, spec):
+        if self._row_sharded(int(w.shape[0])):
+            # Algorithm-1 outer loop on the host, every inner FISTA solve
+            # row-sharded over "model" (distributed/rowfista.py)
+            return pruner_lib._prune_operator_host(
+                w, stats, spec, self.cfg,
+                inner_solve=self._executor.row_fista_solve)
         return pruner_lib.prune_operator(w, stats, spec, self.cfg)
 
     def solve_group(self, ws, stats, spec):
+        if self.cfg.row_shard:
+            return [self.solve(w, st, spec) for w, st in zip(ws, stats)]
         return pruner_lib.prune_group(list(ws), list(stats), spec, self.cfg)
 
     def describe(self):
         return {"name": self.name, "outer_impl": self.cfg.outer_impl,
-                "group_batch": self.cfg.group_batch}
+                "group_batch": self.cfg.group_batch,
+                "row_shard": self.cfg.row_shard}
 
 
 @register_solver("admm")

@@ -1,6 +1,9 @@
-"""Distribution layer: GSPMD sharding rules, row-parallel FISTA,
-pipeline parallelism over pods, int8 gradient compression."""
+"""Distribution layer: the mesh executor (the one sharded substrate for
+prune/eval/serve), GSPMD sharding rules, row-parallel FISTA, pipeline
+parallelism over pods, int8 gradient compression."""
+from repro.distributed.executor import MeshConfig, MeshExecutor
 from repro.distributed.sharding import (batch_specs, make_shardings,
                                         param_specs, state_specs)
 
-__all__ = ["batch_specs", "make_shardings", "param_specs", "state_specs"]
+__all__ = ["MeshConfig", "MeshExecutor", "batch_specs", "make_shardings",
+           "param_specs", "state_specs"]

@@ -25,7 +25,8 @@ from repro.core.gram import GramStats
 
 def sharded_solve(mesh: Mesh, G: jnp.ndarray, B: jnp.ndarray, y0: jnp.ndarray,
                   lam, L, max_iters: int = 20, tol: float = fista_lib.DEFAULT_TOL,
-                  axis: str = "model") -> jnp.ndarray:
+                  axis: str = "model", momentum: str = "fista",
+                  step_impl: str = "jnp") -> jnp.ndarray:
     """FISTA with rows of B/y0 sharded over ``axis``; G replicated.
 
     The row count m must divide the axis size x ... (padding handled by
@@ -39,7 +40,9 @@ def sharded_solve(mesh: Mesh, G: jnp.ndarray, B: jnp.ndarray, y0: jnp.ndarray,
     L = jnp.float32(L)
 
     def local(g, b, y):
-        out, _ = fista_lib.solve(g, b, y, lam, L=L, max_iters=max_iters, tol=tol)
+        out, _ = fista_lib.solve(g, b, y, lam, L=L, max_iters=max_iters,
+                                 tol=tol, momentum=momentum,
+                                 step_impl=step_impl)
         return out
 
     fn = shard_map(local, mesh=mesh,

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import weakref
-from typing import Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,31 +52,51 @@ def _kl_and_agreement(logits_ref: jnp.ndarray, logits_cmp: jnp.ndarray,
 
 def kl_divergence(model: ModelDef, dense_params, pruned_params,
                   corpus: MarkovCorpus, cfg: EvalConfig = EvalConfig(),
-                  extras: Optional[Dict] = None) -> DivergenceReport:
+                  extras: Optional[Dict] = None,
+                  executor: Optional[Any] = None) -> DivergenceReport:
     """Mean token KL(dense || pruned) + argmax agreement over
-    ``cfg.kl_batches`` held-out batches."""
-    batch_stats = _KL_CACHE.get(model)
-    if batch_stats is None:
-        forward = model.forward_logits
+    ``cfg.kl_batches`` held-out batches.
 
-        @jax.jit
-        def batch_stats(pd, pp, b):
-            lr = forward(pd, b)
-            lc = forward(pp, b)
-            # modality prefixes (VLM patches) lengthen the logit stream;
-            # score the label-aligned tail
-            S = b["labels"].shape[1]
-            return _kl_and_agreement(lr[:, -S:, :], lc[:, -S:, :],
-                                     b["labels"])
+    ``executor`` shards the batches over the mesh "data" axis exactly as
+    :func:`repro.eval.perplexity.evaluate_perplexity` does: whole batches
+    stay device-local and the host accumulates per-batch sums in batch
+    order, so the sharded result matches the serial loop bitwise.
+    """
+    forward = model.forward_logits
 
-        _KL_CACHE[model] = batch_stats
+    def _stats(pd, pp, b):
+        lr = forward(pd, b)
+        lc = forward(pp, b)
+        # modality prefixes (VLM patches) lengthen the logit stream;
+        # score the label-aligned tail
+        S = b["labels"].shape[1]
+        return _kl_and_agreement(lr[:, -S:, :], lc[:, -S:, :], b["labels"])
+
+    if (executor is not None and not extras
+            and executor.can_shard_batches(cfg.kl_batches)):
+        from repro.utils.tree import tree_stack
+        stacked = tree_stack(list(eval_batches(corpus, cfg, n=cfg.kl_batches)))
+        ks, ags, cs = executor.data_map(
+            lambda b, pd, pp: _stats(pd, pp, b), stacked,
+            dense_params, pruned_params, cache_key=(model, "kl"))
+        per_batch = zip(np.asarray(ks), np.asarray(ags), np.asarray(cs))
+    else:
+        batch_stats = _KL_CACHE.get(model)
+        if batch_stats is None:
+            batch_stats = jax.jit(_stats)
+            _KL_CACHE[model] = batch_stats
+
+        def _serial():
+            for b in eval_batches(corpus, cfg, n=cfg.kl_batches):
+                if extras:
+                    b = dict(b, **{k: jnp.asarray(v[:cfg.batch_size])
+                                   for k, v in extras.items()})
+                yield batch_stats(dense_params, pruned_params, b)
+
+        per_batch = _serial()
 
     kl_sum = agree_sum = count = 0.0
-    for b in eval_batches(corpus, cfg, n=cfg.kl_batches):
-        if extras:
-            b = dict(b, **{k: jnp.asarray(v[:cfg.batch_size])
-                           for k, v in extras.items()})
-        k, a, c = batch_stats(dense_params, pruned_params, b)
+    for k, a, c in per_batch:
         kl_sum += float(k)
         agree_sum += float(a)
         count += float(c)

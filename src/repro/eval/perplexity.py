@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import weakref
-from typing import Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -84,20 +84,40 @@ def eval_batches(corpus: MarkovCorpus, cfg: EvalConfig, n: Optional[int] = None)
 
 def evaluate_perplexity(model: ModelDef, params, corpus: MarkovCorpus,
                         cfg: EvalConfig = EvalConfig(),
-                        extras: Optional[Dict] = None) -> PerplexityReport:
+                        extras: Optional[Dict] = None,
+                        executor: Optional[Any] = None) -> PerplexityReport:
     """Teacher-forced perplexity over ``cfg.num_batches`` held-out batches.
 
     Uses the model's own ``loss`` metrics (labels < 0 are masked), so every
     architecture family evaluates through the same path it trains through.
+
+    With a ``executor`` (distributed/executor.py) whose "data" axis
+    divides ``cfg.num_batches``, the batches shard over the mesh: each
+    device scores whole batches locally and the per-batch CE values come
+    back in batch order, so the host-side mean below is bitwise-identical
+    to the serial loop (pinned in tests/distributed_cases.py).
     """
-    ce_of = _ce_fn(model)
-    tot, nb = 0.0, 0
-    for b in eval_batches(corpus, cfg):
-        if extras:
-            b = dict(b, **{k: jnp.asarray(v[:cfg.batch_size])
-                           for k, v in extras.items()})
-        tot += float(ce_of(params, b))
-        nb += 1
+    loss = model.loss
+    if (executor is not None and not extras
+            and executor.can_shard_batches(cfg.num_batches)):
+        from repro.utils.tree import tree_stack
+        stacked = tree_stack(list(eval_batches(corpus, cfg)))
+        ces = np.asarray(
+            executor.data_map(lambda b, p: loss(p, b)[1]["ce"],
+                              stacked, params, cache_key=(model, "ce")))
+        tot, nb = 0.0, 0
+        for c in ces:                      # same reduction order as serial
+            tot += float(c)
+            nb += 1
+    else:
+        ce_of = _ce_fn(model)
+        tot, nb = 0.0, 0
+        for b in eval_batches(corpus, cfg):
+            if extras:
+                b = dict(b, **{k: jnp.asarray(v[:cfg.batch_size])
+                               for k, v in extras.items()})
+            tot += float(ce_of(params, b))
+            nb += 1
     ce = tot / max(nb, 1)
     return PerplexityReport(ppl=float(np.exp(ce)), ce_nats=float(ce),
                             tokens=nb * cfg.batch_size * cfg.seq_len,

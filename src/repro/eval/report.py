@@ -63,7 +63,8 @@ def quality_report(model: ModelDef, params: Any, corpus: MarkovCorpus,
                    reports: Optional[Sequence] = None,
                    extras: Optional[Dict] = None,
                    meta: Optional[Dict[str, Any]] = None,
-                   dense_eval: Optional[PerplexityReport] = None
+                   dense_eval: Optional[PerplexityReport] = None,
+                   executor: Optional[Any] = None
                    ) -> QualityReport:
     """Evaluate ``params``; with ``dense_params`` also KL + error budget.
 
@@ -72,19 +73,26 @@ def quality_report(model: ModelDef, params: Any, corpus: MarkovCorpus,
     short-circuits the dense perplexity pass when the caller already
     evaluated the same dense params under the same config (the quality
     bench scores many pruned checkpoints against one dense reference).
+    ``executor`` (distributed/executor.py) shards the perplexity and KL
+    batches over the mesh "data" axis; the error-budget audit drives the
+    pruning-unit relay and stays serial.
     """
-    ppl = evaluate_perplexity(model, params, corpus, cfg, extras=extras)
+    ppl = evaluate_perplexity(model, params, corpus, cfg, extras=extras,
+                              executor=executor)
     out = QualityReport(ppl=ppl.ppl, ce_nats=ppl.ce_nats, tokens=ppl.tokens,
                         meta=dict(meta or {}, eval=dataclasses.asdict(cfg)))
+    if executor is not None:
+        out.meta["mesh"] = executor.describe()
     if dense_params is None:
         return out
     dense = dense_eval if dense_eval is not None else \
-        evaluate_perplexity(model, dense_params, corpus, cfg, extras=extras)
+        evaluate_perplexity(model, dense_params, corpus, cfg, extras=extras,
+                            executor=executor)
     out.dense_ppl = dense.ppl
     out.ppl_ratio = ppl.ppl / dense.ppl if dense.ppl else float("nan")
     if cfg.kl_batches > 0:
         div = kl_divergence(model, dense_params, params, corpus, cfg,
-                            extras=extras)
+                            extras=extras, executor=executor)
         out.kl, out.top1_agreement = div.kl, div.top1_agreement
     if cfg.budget_batches > 0:
         rows = error_budget_report(model, dense_params, params, corpus, cfg,

@@ -115,10 +115,27 @@ def resolve_run(run_dir: str, recipe_path: Optional[str] = None
 
 
 def evaluate_run(run_dir: str, recipe_path: Optional[str] = None,
-                 against_dense: bool = False, corpus_seed: Optional[int] = None):
-    """Evaluate a checkpoint-store run; returns a QualityReport."""
+                 against_dense: bool = False, corpus_seed: Optional[int] = None,
+                 mesh: Optional[str] = None):
+    """Evaluate a checkpoint-store run; returns a QualityReport.
+
+    ``mesh`` ("DATAxMODEL", e.g. "4x2") shards the perplexity/KL batches
+    over the mesh "data" axis via one MeshExecutor (distributed layer);
+    it overrides the mesh recorded in the run's recipe."""
     run = resolve_run(run_dir, recipe_path)
     recipe, kind = run["recipe"], run["kind"]
+    if mesh is not None:
+        executor = api.MeshExecutor.from_spec(mesh)   # explicit: fail loudly
+    else:
+        try:
+            executor = recipe.build_executor()
+        except ValueError as exc:
+            # the run was pruned on a mesh this machine doesn't have —
+            # a checkpoint must stay evaluable anywhere, so degrade to
+            # the (bitwise-identical) single-device eval path
+            log.warning("recorded mesh unavailable (%s); evaluating "
+                        "single-device", exc)
+            executor = None
     model = recipe.load_model(smoke=run["smoke"])
     like = model.init(jax.random.PRNGKey(0))
     seed = run["corpus_seed"] if corpus_seed is None else corpus_seed
@@ -150,7 +167,8 @@ def evaluate_run(run_dir: str, recipe_path: Optional[str] = None,
         reports=reports,
         meta={"checkpoint": run_dir, "source": source, "kind": kind,
               "arch": recipe.arch, "method": recipe.method,
-              "sparsity": recipe.sparsity})
+              "sparsity": recipe.sparsity},
+        executor=executor)
     return report
 
 
@@ -169,12 +187,16 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "and the per-unit error-budget audit")
     ap.add_argument("--corpus-seed", type=int, default=None,
                     help="override the corpus seed recorded with the run")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="device mesh 'dataxmodel' (e.g. '4x2'): shard the "
+                         "eval batches over the mesh 'data' axis")
     ap.add_argument("--out", default=None, help="write the JSON report here")
     args = ap.parse_args(argv)
 
     try:
         report = evaluate_run(args.checkpoint, args.recipe,
-                              args.against_dense, args.corpus_seed)
+                              args.against_dense, args.corpus_seed,
+                              mesh=args.mesh)
     except (FileNotFoundError, ValueError, KeyError) as exc:
         print(f"error: {exc}", file=sys.stderr)
         return 2

@@ -17,6 +17,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import sys
 
 from repro import api
 from repro.checkpoint import store
@@ -54,8 +55,12 @@ def save_run_models(ckpt_dir: str, recipe: api.PruneRecipe, dense_params,
 
 def recipe_from_args(args: argparse.Namespace) -> api.PruneRecipe:
     """CLI flags -> PruneRecipe (the only place flags map onto config)."""
+    mesh = api.MeshConfig.parse(args.mesh).to_dict() if args.mesh else {}
     if args.recipe:
-        return api.PruneRecipe.from_json(args.recipe)
+        recipe = api.PruneRecipe.from_json(args.recipe)
+        if mesh:      # --mesh overrides the recipe's mesh section only
+            recipe = dataclasses.replace(recipe, mesh=mesh)
+        return recipe
     solver_kwargs = {}
     if args.method == "fista":
         solver_kwargs = {"warm_start": args.warm_start,
@@ -70,10 +75,11 @@ def recipe_from_args(args: argparse.Namespace) -> api.PruneRecipe:
                      "seq_len": args.calib_seq_len, "batch_size": 8,
                      "seed": args.seed},
         scheduler={"workers": args.workers,
-                   "checkpoint_dir": args.ckpt_dir})
+                   "checkpoint_dir": args.ckpt_dir},
+        mesh=mesh)
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="opt125m-proxy",
                     choices=list(api.ARCH_CHOICES))
@@ -92,6 +98,11 @@ def main() -> None:
     ap.add_argument("--recipe", default=None,
                     help="load the full PruneRecipe from this JSON file "
                          "(overrides every other pruning flag)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="device mesh 'dataxmodel' (e.g. '4x2'): Gram "
+                         "accumulation shards calibration batches over "
+                         "'data', solves can row-shard over 'model' "
+                         "(resolved through distributed/executor.py)")
     ap.add_argument("--train-steps", type=int, default=150)
     ap.add_argument("--calib-sequences", type=int, default=32)
     ap.add_argument("--calib-seq-len", type=int, default=64)
@@ -101,7 +112,15 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    recipe = recipe_from_args(args)
+    try:
+        recipe = recipe_from_args(args)
+        # a bad --mesh (unparseable, or more devices than visible) must
+        # die HERE — before the dense model is trained — with the same
+        # clean error/exit-2 contract as the evaluate and serve CLIs
+        executor = recipe.build_executor()
+    except (ValueError, FileNotFoundError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
     model = recipe.load_model(smoke=True)
     corpus = MarkovCorpus(CorpusConfig(vocab=model.cfg.vocab, seed=args.seed))
 
@@ -122,8 +141,11 @@ def main() -> None:
                         corpus_seed=args.seed, smoke=True,
                         dense_ppl=dense_ppl)
 
+    if executor is not None:
+        log.info("mesh-native run: %s", executor.describe())
     calib = api.calibration_for(recipe, corpus)
-    pruned, reports, stats = api.prune(model, tr.params, calib, recipe)
+    pruned, reports, stats = api.prune(model, tr.params, calib, recipe,
+                                       executor=executor)
     pruned_ppl = evaluate_ppl(model, pruned, corpus, 8, seq_len, 4)
 
     if ckpt_dir:
@@ -147,7 +169,8 @@ def main() -> None:
                        "pruned_ppl": pruned_ppl, "mean_rel_err": rel,
                        "group_batched_ops": batched,
                        "recipe": recipe.to_dict()}, f)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

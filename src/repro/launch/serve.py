@@ -82,7 +82,10 @@ def serve_trace(model, params, args: argparse.Namespace) -> dict:
                             prompt_len=(args.prompt_len_min, pmax),
                             max_new_tokens=args.max_new_tokens,
                             temperature=args.temperature, seed=args.seed)
-    batcher = ContinuousBatcher(model, params, cfg)
+    executor = api.MeshExecutor.from_spec(args.mesh) if args.mesh else None
+    if executor is not None:
+        log.info("tensor-parallel serving: %s", executor.describe())
+    batcher = ContinuousBatcher(model, params, cfg, executor=executor)
     results = batcher.run(trace)
 
     lat = np.asarray([r.latency for r in results])
@@ -99,7 +102,9 @@ def serve_trace(model, params, args: argparse.Namespace) -> dict:
         "latency_p99_s": float(np.percentile(lat, 99)),
         "config": {"slots": cfg.slots, "block_size": cfg.block_size,
                    "num_blocks": cfg.num_blocks,
-                   "context_len": cfg.context_len, "rate": args.rate},
+                   "context_len": cfg.context_len, "rate": args.rate,
+                   "mesh": executor.describe() if executor is not None
+                           else {"data": 1, "model": 1, "devices": 1}},
     }
 
 
@@ -127,6 +132,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--blocks", type=int, default=64,
                     help="KV pool size in blocks (incl. reserved trash)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="device mesh 'dataxmodel' (e.g. '1x2'): serve "
+                         "tensor-parallel over the 'model' axis (params "
+                         "per the Megatron rules, paged KV pool "
+                         "heads-sharded); tokens identical to 1-device")
     ap.add_argument("--out", default=None, help="write the JSON report here")
     args = ap.parse_args(argv)
 

@@ -89,7 +89,17 @@ class BatchConfig:
 
 class ContinuousBatcher:
     def __init__(self, model: ModelDef, params: Any,
-                 cfg: BatchConfig = BatchConfig()):
+                 cfg: BatchConfig = BatchConfig(),
+                 executor: Optional[Any] = None):
+        """``executor`` (distributed/executor.py) makes the batcher
+        tensor-parallel: params place per the Megatron column/row rules
+        and the paged KV pool takes its heads-sharded device layout (each
+        "model" shard owns its attention heads' pages; the one all-reduce
+        per block lands after wo/down — GSPMD inserts it from the
+        shardings).  Host-side scheduling (admission, block tables,
+        retirement) is unchanged, and the decoded tokens are pinned
+        token-identical to the single-device batcher in
+        tests/distributed_cases.py."""
         if model.paged_step is None or model.prefill is None:
             raise ValueError(
                 f"family {model.cfg.family!r} has no paged serving path "
@@ -102,9 +112,13 @@ class ContinuousBatcher:
         if cfg.num_blocks < 2:
             raise ValueError("num_blocks must be >= 2 (block 0 is trash)")
         self.model, self.cfg = model, cfg
+        self.executor = executor
         self.params, self.sparse_stats = prepare_serving_params(params, cfg.sparse)
         self.pool = kv_cache.BlockPool(cfg.num_blocks, cfg.block_size)
         self.pool_state = model.init_paged_state(cfg.num_blocks, cfg.block_size)
+        if executor is not None:
+            self.params = executor.shard_params(self.params)
+            self.pool_state = executor.shard_paged_pool(self.pool_state)
 
         S = cfg.slots
         self._tables = np.zeros((S, cfg.max_blocks_per_request), np.int32)
@@ -129,6 +143,11 @@ class ContinuousBatcher:
             logits, pool = model.paged_step(params, pool, tables, token, pos,
                                             active, cfg.block_size)
             logits = logits[:, -1, :].astype(jnp.float32)
+            if executor is not None:
+                # sampling must see replicated logits (see
+                # MeshExecutor.replicate_logits) or TP temperature draws
+                # diverge from the single-device path
+                logits = executor.replicate_logits(logits)
             keys = sampling.step_keys(sampling.request_keys(cfg.seed, req_ids),
                                       tok_idx)
             return sampling.sample(logits, keys, temps)[:, None], pool
@@ -203,8 +222,10 @@ class ContinuousBatcher:
             self.pool_state, {k: v[:, 0] for k, v in kv.items()}, flat)
         keys0 = sampling.step_keys(
             sampling.request_keys(cfg.seed, jnp.asarray([r.id], jnp.int32)), 0)
-        first = sampling.sample(logits[:, -1, :].astype(jnp.float32), keys0,
-                                r.temperature)
+        first_logits = logits[:, -1, :].astype(jnp.float32)
+        if self.executor is not None:
+            first_logits = self.executor.replicate_logits(first_logits)
+        first = sampling.sample(first_logits, keys0, r.temperature)
         self.stats["prefills"] += 1
         self.stats["prefill_tokens"] += P
 

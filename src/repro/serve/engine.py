@@ -86,14 +86,25 @@ def prepare_serving_params(params: Any, sparse: str
 
 
 class Engine:
-    def __init__(self, model: ModelDef, params: Any, cfg: ServeConfig = ServeConfig()):
+    def __init__(self, model: ModelDef, params: Any, cfg: ServeConfig = ServeConfig(),
+                 executor: Optional[Any] = None):
+        """``executor`` (distributed/executor.py) places the serving
+        params on its mesh per the Megatron column/row rules — decode
+        runs tensor-parallel over "model" with one all-reduce per block
+        (GSPMD inserts it), token-identical to the single-device path."""
         self.model, self.cfg = model, cfg
+        self.executor = executor
         self.params, self.sparse_stats = prepare_serving_params(params, cfg.sparse)
+        if executor is not None:
+            self.params = executor.shard_params(self.params)
         self._decode_fn = jax.jit(self._decode_step)
 
     def _decode_step(self, params, state, token, pos, keys):
         logits, state = self.model.serve_step(params, state, token, pos)
         logits = logits[:, -1, :].astype(jnp.float32)
+        if self.executor is not None:
+            # sampling needs replicated logits (MeshExecutor.replicate_logits)
+            logits = self.executor.replicate_logits(logits)
         nxt = sampling.sample(logits, keys, self.cfg.temperature)
         return nxt[:, None], state
 
@@ -144,7 +155,10 @@ class Engine:
 
         if self.model.prefill is not None:
             logits, state = self.model.prefill(self.params, prompt, cache_len, extras)
-            token = sampling.sample(logits[:, -1, :].astype(jnp.float32),
+            first_logits = logits[:, -1, :].astype(jnp.float32)
+            if self.executor is not None:
+                first_logits = self.executor.replicate_logits(first_logits)
+            token = sampling.sample(first_logits,
                                     sampling.step_keys(req_keys, 0),
                                     cfg.temperature)[:, None]
             pos0 = p_eff
@@ -153,6 +167,8 @@ class Engine:
             # outputs are discarded until the last prompt token, whose
             # sample is generated-token 0 — hence the index-0 keys)
             state = self.model.init_serve_state(self.params, B, cache_len, extras)
+            if self.executor is not None:
+                state = self.executor.shard_serve_state(state)
             keys0 = sampling.step_keys(req_keys, 0)
             for t in range(P):
                 nxt, state = self._decode_fn(self.params, state,

@@ -62,6 +62,24 @@ def cost_analysis(compiled) -> dict:
     return ca or {}
 
 
+def force_host_devices_flags(devices: int, base: Optional[str] = None) -> str:
+    """XLA_FLAGS value forcing ``devices`` fake host devices, REPLACING
+    any force-count flag already in ``base`` (default: the current env).
+
+    The last duplicated XLA flag wins, so naively prepending lets an
+    inherited export override the requested count — every subprocess
+    spawner that fakes a device count (distributed test cases, the
+    mesh-gram bench children, CLI tests) must route through this.
+    """
+    import os
+
+    kept = [f for f in (os.environ.get("XLA_FLAGS", "") if base is None
+                        else base).split()
+            if not f.startswith("--xla_force_host_platform_device_count")]
+    return " ".join(
+        [f"--xla_force_host_platform_device_count={devices}"] + kept)
+
+
 def set_mesh(mesh):
     """``jax.sharding.set_mesh(mesh)`` when available, else a no-op context
     (on 0.4.x the enclosing ``with mesh:`` already installs the physical

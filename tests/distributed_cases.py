@@ -1,19 +1,50 @@
-"""Multi-device test cases, run in a subprocess with 8 host devices.
+"""Multi-device test cases, run in a subprocess with forced host devices.
 
 Invoked by tests/test_distributed.py as
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 python distributed_cases.py <case>
-Prints "CASE_OK <case>" on success.
+    python distributed_cases.py <case> [devices]
+which forces ``devices`` (default 8) fake host devices via XLA_FLAGS
+before jax initializes.  Prints "CASE_OK <case>" on success; exits 42
+("CASE_SKIP") when the requested device count is not available — the
+pytest wrapper turns that into a clean skip.
+
+The ``*_parity`` cases are the sharded-vs-single-device acceptance
+anchors of the mesh-native substrate (DESIGN.md §10): one pruning unit's
+Gram+solve, held-out perplexity/KL, and a multi-request continuous-batcher
+run must be bitwise / token-identical between a 1-device run and the
+8-fake-device mesh.
 """
 import os
 import sys
 
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                           + os.environ.get("XLA_FLAGS", ""))
+_DEVICES = int(sys.argv[2]) if len(sys.argv) > 2 else 8
+# replace (not prepend to) any inherited device-count flag — the CI
+# distributed job exports =8 globally, and a duplicated flag would let
+# the job's value override a case asking for a different count (6)
+_flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+          if not f.startswith("--xla_force_host_platform_device_count")]
+os.environ["XLA_FLAGS"] = " ".join(
+    [f"--xla_force_host_platform_device_count={_DEVICES}"] + _flags)
 
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+
+if jax.device_count() < _DEVICES:
+    # the backend ignored the fake-device flag (e.g. a GPU platform):
+    # only 1 device is visible — skip cleanly instead of failing
+    print(f"CASE_SKIP need {_DEVICES} devices, have {jax.device_count()}")
+    sys.exit(42)
+
+
+def _tiny_model(seed: int = 0):
+    from repro.configs.opt125m_proxy import tiny_config
+    from repro.models.registry import model_def
+
+    cfg = tiny_config().replace(num_layers=2, d_model=64, d_ff=128,
+                                num_heads=4, num_kv_heads=4, vocab=128)
+    model = model_def(cfg)
+    return model, model.init(jax.random.PRNGKey(seed))
 
 
 def case_rowfista():
@@ -185,6 +216,196 @@ def case_moe_sharded():
     fn, _ = build(params, opt, batch)
     _, _, metrics = fn(params, opt, batch)
     assert np.isfinite(float(metrics["loss"]))
+
+
+def case_debug_mesh():
+    """Device-backed construction of the debug mesh at the forced count
+    (run at 6 and 8 devices by the wrapper) — every factorization must
+    build and keep data >= model."""
+    from repro.launch.mesh import make_debug_mesh
+
+    n = jax.device_count()
+    mesh = make_debug_mesh(n)
+    assert int(np.prod(list(mesh.shape.values()))) == n, mesh.shape
+    assert mesh.shape["data"] >= mesh.shape["model"] >= 1, mesh.shape
+    if n % 2 == 0:
+        m2 = make_debug_mesh(n, multi_pod=True)
+        assert int(np.prod(list(m2.shape.values()))) == n, m2.shape
+        assert m2.shape["pod"] == 2
+
+
+def case_prune_unit_parity():
+    """Acceptance anchor 1 (prune): Gram accumulation data-parallel over
+    8 calibration micro-batches (one per shard + one psum) + the fused
+    group solves yield BITWISE-identical pruned weights to the serial
+    single-device path, for every unit of the model."""
+    from repro import api
+    from repro.data import CalibConfig, CorpusConfig, MarkovCorpus, \
+        calibration_batches
+
+    model, params = _tiny_model()
+    corpus = MarkovCorpus(CorpusConfig(vocab=model.cfg.vocab, seed=7))
+    calib = calibration_batches(corpus, CalibConfig(num_sequences=32,
+                                                    seq_len=32, batch_size=4))
+    assert len(calib) == 8      # one micro-batch per data shard (bitwise
+    # contract of the psum merge — see distributed/executor.py)
+    solver = {"fista_iters": 5, "max_outer": 4}
+    serial = api.PruneRecipe(sparsity="2:4", solver=solver)
+    mesh = api.PruneRecipe(sparsity="2:4", solver=solver,
+                           mesh={"devices": 8, "data_parallel": 8,
+                                 "model_parallel": 1})
+    p1, _, _ = api.prune(model, params, calib, serial)
+    p8, _, s8 = api.prune(model, params, calib, mesh)
+    assert s8["mesh"] == {"data": 8, "model": 1, "devices": 8}
+    for (path, a), (_, b) in zip(jax.tree_util.tree_leaves_with_path(p1),
+                                 jax.tree_util.tree_leaves_with_path(p8)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            f"{jax.tree_util.keystr(path)} diverged under the 8-device mesh"
+
+
+def case_gram_init_seeding():
+    """sharded_group_stats seeds SHARD 0's scan with the carried-in init
+    (a group spanning several shape buckets), preserving the serial
+    left-fold association ((init+g0)+g1)+... — bitwise, not just close."""
+    from repro.core import gram as gram_lib
+    from repro.distributed.executor import MeshConfig, MeshExecutor
+
+    ex = MeshExecutor(MeshConfig(devices=8, data_parallel=8,
+                                 model_parallel=1))
+    rng = np.random.default_rng(0)
+    n, B = 16, 8
+    xd = jnp.asarray(rng.normal(size=(B, 32, n)).astype(np.float32))
+    xp = xd + 0.1 * jnp.asarray(rng.normal(size=(B, 32, n)).astype(np.float32))
+    wx = jnp.asarray(rng.normal(size=(B, 32, n)).astype(np.float32))
+    # nonzero carried stats, as left by an earlier shape bucket
+    init = {"op": gram_lib.accumulate(
+        gram_lib.init_stats(n), xd[0] * 0.3, xp[0] * 0.3, wx[0] * 0.3)}
+
+    def scan_fn(start, current, ws, caps, ps, **kw):
+        def body(acc, xs):
+            return {"op": gram_lib.accumulate(acc["op"], xs["xd"], xs["xp"],
+                                              xs["wx"])}, None
+        out, _ = jax.lax.scan(body, start, caps)
+        return out
+
+    serial = init
+    for b in range(B):
+        serial = {"op": gram_lib.accumulate(serial["op"], xd[b], xp[b], wx[b])}
+    sharded = ex.sharded_group_stats(
+        scan_fn, init, {}, {}, {"xd": xd, "xp": xp, "wx": wx},
+        jnp.zeros((B,), jnp.float32))
+    for a, b in zip(jax.tree_util.tree_leaves(serial),
+                    jax.tree_util.tree_leaves(sharded)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "carried-init sharded accumulation diverged from serial fold"
+
+
+def case_rowfista_solver_parity():
+    """FISTA with row-sharded inner solves (PruneRecipe mesh.model_parallel
+    + solver.row_shard, the distributed/rowfista path) matches the host
+    Algorithm-1 oracle: identical sparsity supports, weights to fp32
+    round-off."""
+    from repro import api
+    from repro.data import CalibConfig, CorpusConfig, MarkovCorpus, \
+        calibration_batches
+
+    model, params = _tiny_model()
+    corpus = MarkovCorpus(CorpusConfig(vocab=model.cfg.vocab, seed=7))
+    calib = calibration_batches(corpus, CalibConfig(num_sequences=16,
+                                                    seq_len=32, batch_size=4))
+    solver = {"fista_iters": 5, "max_outer": 4, "outer_impl": "host"}
+    host = api.PruneRecipe(sparsity="2:4", solver=solver)
+    row = api.PruneRecipe(sparsity="2:4", solver=dict(solver, row_shard=True),
+                          mesh={"devices": 8, "data_parallel": 2,
+                                "model_parallel": 4})
+    p1, _, _ = api.prune(model, params, calib, host)
+    p2, _, _ = api.prune(model, params, calib, row)
+    for (path, a), (_, b) in zip(jax.tree_util.tree_leaves_with_path(p1),
+                                 jax.tree_util.tree_leaves_with_path(p2)):
+        a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        assert np.array_equal(a == 0, b == 0), \
+            f"{jax.tree_util.keystr(path)}: sparsity support diverged"
+        np.testing.assert_allclose(b, a, rtol=2e-5, atol=2e-5,
+                                   err_msg=jax.tree_util.keystr(path))
+
+
+def case_eval_parity():
+    """Acceptance anchor 2 (eval): held-out perplexity and KL with the
+    batches sharded over "data" are BITWISE-equal to the serial loop
+    (whole batches stay device-local; per-batch scalars reduce on the
+    host in batch order)."""
+    from repro.data import CorpusConfig, MarkovCorpus
+    from repro.distributed.executor import MeshConfig, MeshExecutor
+    from repro.eval import EvalConfig, evaluate_perplexity, kl_divergence
+
+    model, params = _tiny_model()
+    pruned = _tiny_model(seed=1)[1]     # any second params for KL
+    corpus = MarkovCorpus(CorpusConfig(vocab=model.cfg.vocab, seed=7))
+    cfg = EvalConfig(num_batches=8, batch_size=4, seq_len=32, kl_batches=8)
+    for dxm in ((8, 1), (4, 2)):
+        ex = MeshExecutor(MeshConfig(devices=8, data_parallel=dxm[0],
+                                     model_parallel=dxm[1]))
+        serial = evaluate_perplexity(model, params, corpus, cfg)
+        sharded = evaluate_perplexity(model, params, corpus, cfg, executor=ex)
+        assert serial.ce_nats == sharded.ce_nats and serial.ppl == sharded.ppl, \
+            (dxm, serial.ce_nats, sharded.ce_nats)
+        ks = kl_divergence(model, params, pruned, corpus, cfg)
+        kx = kl_divergence(model, params, pruned, corpus, cfg, executor=ex)
+        assert ks.kl == kx.kl and ks.top1_agreement == kx.top1_agreement, dxm
+
+
+def case_batcher_tp_parity():
+    """Acceptance anchor 3 (serve): a multi-request continuous-batcher run
+    with params TP-sharded over "model" (Megatron col/row rules) and the
+    paged KV pool heads-sharded is TOKEN-IDENTICAL to the single-device
+    batcher — dense and packed-2:4, greedy and temperature."""
+    from repro.core.sparsity import round_tree_nm
+    from repro.distributed.executor import MeshConfig, MeshExecutor
+    from repro.serve import BatchConfig, ContinuousBatcher, synthetic_trace
+
+    model, params = _tiny_model()
+    pruned = round_tree_nm(params)
+    bc = BatchConfig(slots=3, block_size=8, max_blocks_per_request=3,
+                     num_blocks=24)
+    ex = MeshExecutor(MeshConfig(devices=8, data_parallel=2, model_parallel=4))
+
+    def run(weights, sparse, temp, executor):
+        trace = synthetic_trace(5, rate=0.0, vocab=model.cfg.vocab,
+                                prompt_len=(4, 10), max_new_tokens=6,
+                                temperature=temp, seed=3)
+        import dataclasses
+        b = ContinuousBatcher(model, weights,
+                              dataclasses.replace(bc, sparse=sparse),
+                              executor=executor)
+        return b, b.run(trace)
+
+    for weights, sparse in ((params, "dense"), (pruned, "packed")):
+        for temp in (0.0, 0.8):
+            _, r1 = run(weights, sparse, temp, None)
+            b2, r2 = run(weights, sparse, temp, ex)
+            if sparse == "packed":
+                assert b2.sparse_stats["mode"] == "packed"
+            for a, b in zip(r1, r2):
+                assert np.array_equal(a.tokens, b.tokens), \
+                    (sparse, temp, a.id, a.tokens, b.tokens)
+
+
+def case_engine_tp_parity():
+    """Engine.generate with TP-sharded params + caches decodes the same
+    tokens as the single-device engine (greedy and temperature)."""
+    from repro.distributed.executor import MeshConfig, MeshExecutor
+    from repro.serve import Engine, ServeConfig
+
+    model, params = _tiny_model()
+    ex = MeshExecutor(MeshConfig(devices=8, data_parallel=2, model_parallel=4))
+    prompt = jnp.asarray(
+        np.random.default_rng(1).integers(0, model.cfg.vocab, size=(2, 6)),
+        jnp.int32)
+    for temp in (0.0, 0.7):
+        cfg = ServeConfig(max_new_tokens=5, temperature=temp, cache_len=32)
+        t1 = Engine(model, params, cfg).generate(prompt)
+        t2 = Engine(model, params, cfg, executor=ex).generate(prompt)
+        assert np.array_equal(t1, t2), (temp, t1, t2)
 
 
 CASES = {k[5:]: v for k, v in list(globals().items()) if k.startswith("case_")}

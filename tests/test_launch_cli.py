@@ -9,9 +9,10 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run(module, *args, timeout=900):
+def _run(module, *args, timeout=900, env_extra=None):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    env.update(env_extra or {})
     return subprocess.run([sys.executable, "-m", module, *args], env=env,
                           capture_output=True, text=True, timeout=timeout,
                           cwd=ROOT)
@@ -114,3 +115,55 @@ def test_serve_cli_rejects_oversized_trace():
                "--max-blocks-per-request", "4", "--block-size", "16")
     assert out.returncode == 2
     assert "context" in out.stderr
+
+
+def test_serve_cli_rejects_bad_mesh():
+    """--mesh must parse as DATAxMODEL and fit the visible devices; a bad
+    spec (or a mesh this machine cannot build) exits 2 with the error."""
+    out = _run("repro.launch.serve", "--arch", "opt125m-proxy", "--smoke",
+               "--requests", "2", "--mesh", "4y2")
+    assert out.returncode == 2
+    assert "mesh" in out.stderr.lower()
+
+
+def test_prune_cli_rejects_bad_mesh():
+    """A bad --mesh must die with a clean error/exit 2 BEFORE any
+    training happens — same contract as the evaluate/serve CLIs."""
+    out = _run("repro.launch.prune", "--arch", "opt125m-proxy",
+               "--train-steps", "9999", "--mesh", "4y2", timeout=120)
+    assert out.returncode == 2, out.stdout + out.stderr
+    assert "mesh" in out.stderr.lower()
+    assert "Traceback" not in out.stderr
+
+
+def test_evaluate_cli_mesh_unavailable_degrades(tmp_path):
+    """A checkpoint whose recipe RECORDS a mesh must still evaluate on a
+    machine without those devices (single-device fallback), while an
+    EXPLICIT --mesh that cannot be built fails loudly."""
+    from repro.utils.compat import force_host_devices_flags
+
+    run_dir = tmp_path / "run"
+    # prune under 8 fake host devices with --mesh 8x1 so the stored
+    # recipe actually records the mesh this machine won't have
+    fake8 = {"XLA_FLAGS": force_host_devices_flags(8)}
+    out = _run("repro.launch.prune", "--arch", "opt125m-proxy",
+               "--method", "wanda", "--sparsity", "2:4",
+               "--train-steps", "6", "--calib-sequences", "8",
+               "--calib-seq-len", "32", "--workers", "1", "--mesh", "8x1",
+               "--ckpt-dir", str(run_dir), env_extra=fake8)
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.loads((run_dir / "pruned_model" / "MANIFEST.json").read_text())
+    assert rec["extra"]["recipe"]["mesh"]["devices"] == 8  # mesh recorded
+    # strip any inherited fake-device flag: these two runs must really
+    # see fewer than 8 devices
+    bare = {"XLA_FLAGS": force_host_devices_flags(1)}
+    # explicit --mesh on this 1-device process must fail loudly
+    out = _run("repro.launch.evaluate", "--checkpoint", str(run_dir),
+               "--mesh", "8x1", env_extra=bare)
+    assert out.returncode == 2 and "devices" in out.stderr
+    # without --mesh the recorded mesh degrades to the single-device
+    # (bitwise-identical) eval path instead of failing
+    out = _run("repro.launch.evaluate", "--checkpoint", str(run_dir),
+               env_extra=bare)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ppl=" in out.stdout

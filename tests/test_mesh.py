@@ -1,0 +1,120 @@
+"""Mesh factorization + MeshConfig parsing (pure — no devices needed).
+
+Pins the debug-mesh factorization for non-power-of-two device counts
+(6, 12) and the degenerate counts the seed implementation mishandled
+(1 -> a (0, 2) shape, 2*odd under multi_pod -> wrong product).  The
+device-backed construction of the same meshes runs in the distributed
+suite (tests/distributed_cases.py::case_debug_mesh at 6 and 8 devices).
+"""
+import pytest
+
+from repro.distributed.executor import MeshConfig
+from repro.launch.mesh import factor_debug_mesh
+
+
+@pytest.mark.parametrize("devices,expected", [
+    (1, (1, 1)),
+    (2, (2, 1)),
+    (3, (3, 1)),       # odd: no model axis
+    (4, (2, 2)),
+    (6, (3, 2)),       # non-power-of-two: model takes the 2
+    (8, (4, 2)),
+    (12, (6, 2)),      # 4 divides 12 but 4^2 > 12 -> model stays 2
+    (16, (4, 4)),
+    (48, (12, 4)),
+    (256, (16, 16)),
+])
+def test_factor_single_pod(devices, expected):
+    shape, axes = factor_debug_mesh(devices)
+    assert axes == ("data", "model")
+    assert shape == expected
+    assert shape[0] * shape[1] == devices
+    assert shape[0] >= shape[1] >= 1     # model never dominates data
+
+
+@pytest.mark.parametrize("devices,expected", [
+    (2, (2, 1, 1)),
+    (6, (2, 3, 1)),    # 2*odd: seed code produced a product-4 "6-device" mesh
+    (12, (2, 3, 2)),
+    (16, (2, 4, 2)),
+    (32, (2, 4, 4)),
+])
+def test_factor_multi_pod(devices, expected):
+    shape, axes = factor_debug_mesh(devices, multi_pod=True)
+    assert axes == ("pod", "data", "model")
+    assert shape == expected
+    assert shape[0] * shape[1] * shape[2] == devices
+
+
+def test_factor_rejects_bad_counts():
+    with pytest.raises(ValueError):
+        factor_debug_mesh(0)
+    with pytest.raises(ValueError):
+        factor_debug_mesh(3, multi_pod=True)   # odd count has no pod axis
+
+
+def test_factor_every_count_builds():
+    """No count up to 64 may produce a zero/degenerate axis (the seed bug
+    class): product exact, every axis >= 1."""
+    for n in range(1, 65):
+        shape, _ = factor_debug_mesh(n)
+        assert all(s >= 1 for s in shape) and shape[0] * shape[1] == n
+        if n % 2 == 0:
+            shape, _ = factor_debug_mesh(n, multi_pod=True)
+            p = shape[0] * shape[1] * shape[2]
+            assert all(s >= 1 for s in shape) and p == n
+
+
+# ---------------------------------------------------------------------------
+# MeshConfig (the strict recipe `mesh` section / --mesh flag)
+# ---------------------------------------------------------------------------
+def test_mesh_config_parse_dxm():
+    cfg = MeshConfig.parse("4x2")
+    assert (cfg.devices, cfg.data_parallel, cfg.model_parallel) == (8, 4, 2)
+    assert cfg.resolve(available=8) == (4, 2)
+    assert not cfg.is_single
+
+
+def test_mesh_config_parse_bare_count():
+    cfg = MeshConfig.parse("8")
+    assert cfg.resolve(available=8) == (8, 1)
+
+
+def test_mesh_config_single_device_forms():
+    assert MeshConfig().is_single
+    assert MeshConfig.parse("1x1").is_single
+    assert not MeshConfig.parse("1x2").is_single   # pure TP is a real mesh
+
+
+def test_mesh_config_rejects_garbage():
+    for bad in ("4y2", "x", "", "2x2x2", "-1x2"):
+        with pytest.raises(ValueError):
+            MeshConfig.parse(bad)
+    with pytest.raises(ValueError):
+        MeshConfig(devices=8, data_parallel=3, model_parallel=2).resolve(8)
+    with pytest.raises(ValueError):
+        MeshConfig(devices=8, data_parallel=8).resolve(available=1)
+
+
+def test_mesh_config_round_trip():
+    cfg = MeshConfig.parse("4x2")
+    assert MeshConfig(**cfg.to_dict()) == cfg
+
+
+def test_recipe_mesh_section_strict():
+    """Unknown mesh keys die at recipe-load time like every section."""
+    from repro.api import PruneRecipe
+
+    with pytest.raises(ValueError, match="mesh"):
+        PruneRecipe(mesh={"devicez": 8})
+    r = PruneRecipe(mesh={"devices": 8, "data_parallel": 4,
+                          "model_parallel": 2})
+    assert r.mesh_config().model_parallel == 2
+    rt = PruneRecipe.from_json(r.to_json())
+    assert rt.mesh_config() == r.mesh_config()
+
+
+def test_recipe_default_mesh_builds_no_executor():
+    from repro.api import PruneRecipe
+
+    assert PruneRecipe().build_executor() is None

@@ -210,6 +210,71 @@ def test_straggler_redispatch_idempotent_payload(tmp_path):
                                   np.asarray(_payload_of("slow")))
 
 
+def test_persisted_telemetry_attributes_workers(tmp_path):
+    """A 3-arg save_payload receives per-unit telemetry (worker id,
+    wall-clock, attempts) with the checkpointed payload, so a
+    multi-worker run is attributable post-hoc from the run dir alone."""
+    import json
+    import os
+
+    import jax.numpy as jnp
+
+    persisted = {}
+    lock = threading.Lock()
+
+    def save(u, payload, meta):
+        store.save(str(tmp_path), f"unit_{u}", {"x": payload},
+                   extra={"telemetry": meta})
+        with lock:
+            persisted[u] = meta
+
+    def load(u):
+        tree, _ = store.load(str(tmp_path), f"unit_{u}",
+                             {"x": jnp.zeros((4,), jnp.float32)})
+        return tree["x"]
+
+    units = [f"u{i}" for i in range(6)]
+    cfg = SchedulerConfig(workers=3, checkpoint_dir=str(tmp_path),
+                          straggler_min_wait=300.0)
+    s = PruneScheduler(units, _payload_of, cfg, save, load)
+    res = s.run()
+
+    assert sorted(persisted) == units
+    for u in units:
+        meta = persisted[u]
+        assert meta["worker"] == res[u].worker >= 0
+        assert meta["seconds"] == res[u].seconds > 0
+        assert meta["attempts"] == res[u].attempts == 1
+        # ... and the telemetry is in the on-disk manifest, not just memory
+        with open(os.path.join(str(tmp_path), f"unit_{u}",
+                               "MANIFEST.json")) as f:
+            extra = json.load(f)["extra"]
+        assert extra["telemetry"]["worker"] == res[u].worker
+    # run-level stats expose the same assignment map
+    assert s.stats["workers"] == {u: res[u].worker for u in units}
+
+
+def test_two_arg_save_payload_still_works(tmp_path):
+    """Legacy 2-arg save_payload callbacks keep working (no meta)."""
+    import jax.numpy as jnp
+
+    calls = []
+
+    def save(u, payload):
+        calls.append(u)
+        store.save(str(tmp_path), f"unit_{u}", {"x": payload})
+
+    def load(u):
+        tree, _ = store.load(str(tmp_path), f"unit_{u}",
+                             {"x": jnp.zeros((4,), jnp.float32)})
+        return tree["x"]
+
+    cfg = SchedulerConfig(workers=2, checkpoint_dir=str(tmp_path),
+                          straggler_min_wait=300.0)
+    res = PruneScheduler(["u0", "u1"], _payload_of, cfg, save, load).run()
+    assert sorted(calls) == ["u0", "u1"] and len(res) == 2
+
+
 def test_elastic_worker_counts_agree():
     def work(u):
         return hash(u) % 97
