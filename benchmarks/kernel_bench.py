@@ -103,9 +103,56 @@ def bench_spmm24(B=8, m=1024, n=4096) -> Dict:
             "tpu_decode_bound_packed_us": packed_bytes / HBM_BW * 1e6}
 
 
+def bench_paged_attention(S=4, nq=32, nkv=8, hd=128, ctx=2048,
+                          block_size=16) -> Dict:
+    """Block-table flash decode (kernels/paged_attention.py) vs the
+    reference gather path, at a serving-sized decode step.
+
+    The derived columns are the point: the reference path materializes
+    the position-ordered ``(S, W, nkv, hd)`` K/V gather in HBM (one
+    write + one re-read of the whole context, per layer, per step); the
+    kernel walks the block table via scalar prefetch and streams each
+    pool block through VMEM exactly once.  The packed o_proj epilogue
+    additionally drops the separate projection dispatch: 0.625x wo
+    traffic and no attention-output round-trip.  CPU wall is the jnp
+    oracle (informational; interpret-mode parity is covered by the
+    ``kernels_interpret`` tests, not timed here).
+    """
+    rng = np.random.default_rng(4)
+    dt = 2                                     # bf16 serving dtype
+    num_blocks = S * ctx // block_size + 1     # + trash block
+    T = num_blocks * block_size
+    q = jnp.asarray(rng.standard_normal((S, nq, hd)), jnp.float32)
+    k_pool = jnp.asarray(rng.standard_normal((T, nkv, hd)), jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((T, nkv, hd)), jnp.float32)
+    tables = jnp.asarray(
+        1 + np.arange(S * (ctx // block_size)).reshape(S, -1), jnp.int32)
+    pos = jnp.full((S,), ctx - 1, jnp.int32)
+    active = jnp.ones((S,), bool)
+    wall = _time(jax.jit(lambda *a: ref.paged_attention(
+        *a, block_size=block_size)), q, k_pool, v_pool, tables, pos, active)
+
+    kv_bytes = 2.0 * S * ctx * nkv * hd * dt         # context K+V read
+    qo_bytes = 2.0 * S * nq * hd * dt                # q in, attn out
+    fused_bytes = kv_bytes + qo_bytes
+    gather_bytes = fused_bytes + 2.0 * kv_bytes      # write + re-read gather
+    d_model = nq * hd
+    wo_dense = float(d_model * nq * hd * dt)         # o_proj weight read
+    # epilogue: packed wo (0.625x) and the attn output never leaves VMEM
+    epilogue_saved = wo_dense * (1 - 0.625) + 2.0 * S * nq * hd * dt
+    return {"name": "paged_attention", "S": S, "nq": nq, "nkv": nkv,
+            "hd": hd, "ctx": ctx, "block_size": block_size,
+            "us_per_call_cpu": wall * 1e6,
+            "bytes_fused": fused_bytes, "bytes_gather": gather_bytes,
+            "gather_traffic_ratio": fused_bytes / gather_bytes,
+            "tpu_memory_us_fused": fused_bytes / HBM_BW * 1e6,
+            "tpu_memory_us_gather": gather_bytes / HBM_BW * 1e6,
+            "o_proj_epilogue_bytes_saved": epilogue_saved}
+
+
 def run_all() -> List[Dict]:
     rows = [bench_fista_step(), bench_fista_step_batched(), bench_round24(),
-            bench_spmm24()]
+            bench_spmm24(), bench_paged_attention()]
     print("\n== Kernel microbench (derived TPU-v5e roofline positions) ==")
     for r in rows:
         extras = {k: v for k, v in r.items()

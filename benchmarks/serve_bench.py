@@ -12,14 +12,27 @@ trace), and each decode step is costed at its HBM traffic
 ``(weight_bytes + kv_bytes) / bw`` — weights are read once per step
 regardless of how many slots are active, which is precisely why
 continuous batching multiplies decode throughput and why the 0.625x
-packed weight traffic lifts it further at every pressure level.  CPU
-wall-clock (which includes the interpret-mode spmm24 unpack) is
-recorded informationally only, the same convention as quality_bench's
-decode row (DESIGN.md §6/§9).
+packed weight traffic lifts it further at every pressure level.
 
-Gate: packed modeled throughput may not regress more than ``tolerance``
-(5%) vs the committed ``benchmarks/serve_baseline.json`` at any
-pressure level; the benchmark also asserts packed >= dense everywhere.
+Alongside the model, every mode row carries MEASURED per-step wall time
+(``measured_step_us``: each level/mode is run ``MEASURE_REPEATS`` times
+with dense and packed repeats interleaved, the compile tick is dropped
+from each run's per-tick walls, and the minimum of the per-run medians
+is reported — the scheduler is deterministic, so repeats only re-sample
+CPU wall noise) and the steady-state throughput it implies
+(``measured_tok_s``).  These are CPU numbers, not TPU predictions — but
+they are exactly what caught the packed-slower-than-dense regression:
+packed serving used to interpret the spmm24 Pallas kernel inside the
+jitted per-token step.  ``serve/packed.decode_view`` now unpacks once
+at construction, so the packed row's measured ratio vs dense
+(``measured_packed_vs_dense``, dense step time / packed step time) must
+sit at ~1.0 on CPU rather than ~0.5.
+
+Gates vs the committed ``benchmarks/serve_baseline.json``: packed
+modeled throughput within ``tolerance`` (5%) at every pressure level
+(the benchmark also asserts modeled packed >= dense everywhere), and
+the measured packed-vs-dense ratio within ``measured_tolerance`` (15%,
+generous — CPU wall noise) of the baselined ratio.
 """
 from __future__ import annotations
 
@@ -103,30 +116,62 @@ def _modeled(st: Dict, results, weight_bytes: int, tok_kv: int,
     }
 
 
-def _run_level(model, params, sparse: str, n_requests: int) -> Dict:
+#: measured-step repeats: the scheduler is deterministic, so re-running a
+#: level only re-samples CPU wall noise — dense and packed alternate
+#: within each repeat (both modes sample the same noise epochs; they run
+#: bitwise-identical compute via decode_view, so any measured gap is
+#: pure wall noise) and min-of-medians over the repeats is the
+#: steady-state step time (the first tick's jit compile is dropped from
+#: each repeat's median)
+MEASURE_REPEATS = 5
+
+
+def _one_run(model, params, sparse: str, n_requests: int):
     trace = synthetic_trace(n_requests, rate=0.0, vocab=model.cfg.vocab,
                             prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
                             seed=7)
-    batcher = ContinuousBatcher(model, params,
-                                dataclasses.replace(BATCH, sparse=sparse))
+    b = ContinuousBatcher(model, params,
+                          dataclasses.replace(BATCH, sparse=sparse))
     t0 = time.perf_counter()
-    results = batcher.run(trace)
-    wall = time.perf_counter() - t0
+    res = b.run(trace)
+    return b, res, time.perf_counter() - t0
 
-    st = batcher.stats
-    tokens = int(sum(len(r.tokens) for r in results))
-    weight_bytes = _tree_bytes(batcher.params)
-    tok_kv = _kv_token_bytes(model.cfg)
-    return {
-        "mode": batcher.sparse_stats["mode"], "requests": n_requests,
-        "tokens": tokens, "steps": st["steps"],
-        "mean_occupancy": st["active_slot_steps"] / max(st["steps"], 1),
-        "weight_bytes": weight_bytes,
-        "cpu_wall_s": wall, "cpu_tok_s": tokens / max(wall, 1e-9),
-        **_modeled(st, results, weight_bytes, tok_kv),
-        "token_ids": [r.tokens.tolist() for r in results],
-        "_counters": (dict(st), results, weight_bytes, tok_kv),
-    }
+
+def _median_step(batcher) -> float:
+    walls = batcher.stats["step_walls"]
+    return float(np.median(np.asarray(walls[1:] or walls)))
+
+
+def _run_level_modes(model, params, n_requests: int) -> Dict[str, Dict]:
+    """One pressure level, both modes, interleaved measured repeats."""
+    first, meds = {}, {"dense": [], "packed": []}
+    for rep in range(MEASURE_REPEATS):
+        for sparse in ("dense", "packed"):
+            b, res, wall = _one_run(model, params, sparse, n_requests)
+            if rep == 0:
+                first[sparse] = (b, res, wall)
+            meds[sparse].append(_median_step(b))
+    out = {}
+    for sparse in ("dense", "packed"):
+        batcher, results, wall = first[sparse]
+        step_s = min(meds[sparse])
+        st = batcher.stats
+        tokens = int(sum(len(r.tokens) for r in results))
+        weight_bytes = _tree_bytes(batcher.params)
+        tok_kv = _kv_token_bytes(model.cfg)
+        out[sparse] = {
+            "mode": batcher.sparse_stats["mode"], "requests": n_requests,
+            "tokens": tokens, "steps": st["steps"],
+            "mean_occupancy": st["active_slot_steps"] / max(st["steps"], 1),
+            "weight_bytes": weight_bytes,
+            "cpu_wall_s": wall, "cpu_tok_s": tokens / max(wall, 1e-9),
+            "measured_step_us": step_s * 1e6,
+            "measured_tok_s": tokens / max(st["steps"] * step_s, 1e-12),
+            **_modeled(st, results, weight_bytes, tok_kv),
+            "token_ids": [r.tokens.tolist() for r in results],
+            "_counters": (dict(st), results, weight_bytes, tok_kv),
+        }
+    return out
 
 
 def bench_serve_matrix() -> List[Dict]:
@@ -134,18 +179,30 @@ def bench_serve_matrix() -> List[Dict]:
     rows = []
     for level, n in PRESSURES.items():
         per_mode = {}
+        level_rows = _run_level_modes(model, params, n)
         for sparse in ("dense", "packed"):
-            row = _run_level(model, params, sparse, n)
+            row = level_rows[sparse]
             st, results, weight_bytes, tok_kv = row.pop("_counters")
             toks = row.pop("token_ids")
             row["pressure"] = level
             per_mode[row["mode"]] = (row, toks)
             rows.append(row)
+            if row["mode"] == "packed":
+                # the regression this PR fixes: packed per-step wall must
+                # not lag dense (same schedule, so step time IS
+                # throughput).  Reported at 2 decimals — the run-to-run
+                # spread of the underlying CPU walls is several percent,
+                # so more digits would be noise printed as signal.
+                row["measured_packed_vs_dense"] = round(
+                    per_mode["dense"][0]["measured_step_us"]
+                    / max(row["measured_step_us"], 1e-9), 2)
             print(f"{level:>5} {row['mode']:>6}: modeled "
                   f"{row['modeled_tok_s']:9.0f} tok/s "
                   f"(p50 {row['modeled_p50_ms']:.3f} ms, "
                   f"p99 {row['modeled_p99_ms']:.3f} ms, occupancy "
-                  f"{row['mean_occupancy']:.2f}); cpu {row['cpu_tok_s']:.1f} tok/s")
+                  f"{row['mean_occupancy']:.2f}); measured "
+                  f"{row['measured_step_us']:.0f} us/step, "
+                  f"{row['measured_tok_s']:.1f} tok/s")
             if sparse == "packed":
                 # TP row: same measured schedule (TP decode is pinned
                 # token-identical), per-device traffic divided by the
@@ -178,9 +235,11 @@ def bench_serve_matrix() -> List[Dict]:
 
 def check_regression(rows: List[Dict], baseline_path: str = BASELINE_PATH
                      ) -> Tuple[bool, str]:
-    """Gate: packed modeled throughput within tolerance of the committed
-    baseline at every pressure level.  Missing or protocol-mismatched
-    baseline => informational pass."""
+    """Gate: packed modeled throughput within ``tolerance`` of the
+    committed baseline at every pressure level, and the MEASURED
+    packed-vs-dense step-time ratio within ``measured_tolerance``
+    (generous; CPU wall noise) of the baselined ratio.  Missing or
+    protocol-mismatched baseline => informational pass."""
     try:
         with open(baseline_path) as f:
             base = json.load(f)
@@ -189,6 +248,8 @@ def check_regression(rows: List[Dict], baseline_path: str = BASELINE_PATH
     if base.get("protocol") != _protocol():
         return True, "baseline protocol differs (gate skipped; not comparable)"
     tol = float(base.get("tolerance", 0.05))
+    mtol = float(base.get("measured_tolerance", 0.15))
+    mbase = base.get("measured_packed_vs_dense", {})
     msgs, ok = [], True
     for level in PRESSURES:
         row = next(r for r in rows
@@ -198,7 +259,18 @@ def check_regression(rows: List[Dict], baseline_path: str = BASELINE_PATH
         ok &= good
         msgs.append(f"{level} {row['modeled_tok_s']:.0f}>= {limit:.0f} "
                     f"{'PASS' if good else 'FAIL'}")
-    return ok, f"packed modeled tok/s vs baseline (-{tol:.0%}): " + "; ".join(msgs)
+        if level in mbase:
+            # the ratio is ~1.0 by construction (decode_view makes both
+            # modes run the same compute on CPU); cap the reference at
+            # 1.0 so a lucky-fast baseline run can't tighten the gate
+            mlimit = min(float(mbase[level]), 1.0) * (1.0 - mtol)
+            mgood = row["measured_packed_vs_dense"] >= mlimit
+            ok &= mgood
+            msgs.append(f"{level} measured-ratio "
+                        f"{row['measured_packed_vs_dense']:.2f}>= "
+                        f"{mlimit:.2f} {'PASS' if mgood else 'FAIL'}")
+    return ok, (f"packed vs baseline (modeled -{tol:.0%}, measured ratio "
+                f"-{mtol:.0%}): " + "; ".join(msgs))
 
 
 def _protocol() -> Dict:
@@ -207,11 +279,17 @@ def _protocol() -> Dict:
 
 
 def write_baseline(rows: List[Dict], path: str = BASELINE_PATH,
-                   tolerance: float = 0.05) -> None:
-    levels = {r["pressure"]: r["modeled_tok_s"] for r in rows
-              if r["mode"] == "packed"}
+                   tolerance: float = 0.05,
+                   measured_tolerance: float = 0.15) -> None:
+    packed = [r for r in rows if r["mode"] == "packed"]
     with open(path, "w") as f:
-        json.dump({"levels": levels, "tolerance": tolerance,
+        json.dump({"levels": {r["pressure"]: r["modeled_tok_s"]
+                              for r in packed},
+                   "tolerance": tolerance,
+                   "measured_packed_vs_dense":
+                       {r["pressure"]: r["measured_packed_vs_dense"]
+                        for r in packed},
+                   "measured_tolerance": measured_tolerance,
                    "protocol": _protocol()}, f, indent=1)
         f.write("\n")
 
@@ -226,9 +304,13 @@ def run_all(out_path: str = OUT_PATH, baseline_path: str = BASELINE_PATH,
         ["modeled_tok_s"] >=
         next(r for r in rows if r["pressure"] == lv and r["mode"] == "dense")
         ["modeled_tok_s"] for lv in PRESSURES)
+    packed_ge_dense_measured = all(
+        next(r for r in rows if r["pressure"] == lv and r["mode"] == "packed")
+        ["measured_packed_vs_dense"] >= 1.0 for lv in PRESSURES)
     ok, msg = check_regression(rows, baseline_path)
     payload = {"rows": rows, "protocol": _protocol(), "hbm_bw": HBM_BW,
                "packed_ge_dense": packed_ge_dense,
+               "packed_ge_dense_measured": packed_ge_dense_measured,
                "gate_ok": ok and packed_ge_dense, "regression_gate": msg,
                "backend": jax.default_backend()}
     with open(out_path, "w") as f:
@@ -237,7 +319,8 @@ def run_all(out_path: str = OUT_PATH, baseline_path: str = BASELINE_PATH,
     if update_baseline:
         write_baseline(rows, baseline_path)
         print(f"baseline updated: {baseline_path}")
-    print(f"\nwrote {out_path}; packed>=dense: {packed_ge_dense}; {msg}")
+    print(f"\nwrote {out_path}; packed>=dense modeled: {packed_ge_dense}, "
+          f"measured: {packed_ge_dense_measured}; {msg}")
     return payload
 
 

@@ -1,9 +1,15 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-On CPU (this container) every kernel runs in ``interpret=True`` mode —
-the kernel body executes as Python/jnp for correctness validation.  On a
-TPU backend the same call sites compile to Mosaic.  Small problems fall
-back to the jnp oracle, where kernel launch overhead would dominate.
+On a TPU backend these call sites compile to Mosaic.  On CPU (this
+container) the *offline* kernels (fista_prox_step, round24, flash
+prefill) still run in ``interpret=True`` mode for correctness coverage,
+but the **decode hot loop** (spmm24, paged_decode_attn, fused_mlp24)
+routes to the jnp oracles in ``ref.py`` instead: interpret-mode Pallas
+inside a jitted per-token step is ~10x slower than the oracle (the
+measured packed-slower-than-dense serve regression), and the
+interpret-mode coverage lives in the dedicated ``kernels_interpret``
+test marker rather than the serving path.  Small problems always fall
+back to the oracle, where kernel launch overhead would dominate.
 """
 from __future__ import annotations
 
@@ -13,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fista_step as _fista_step
+from repro.kernels import paged_attention as _paged
 from repro.kernels import ref
 from repro.kernels import round24 as _round24
 from repro.kernels import spmm24 as _spmm24
@@ -43,13 +50,70 @@ def round24(w: jnp.ndarray) -> jnp.ndarray:
 
 
 def spmm24(x: jnp.ndarray, vals: jnp.ndarray, meta: jnp.ndarray, n: int) -> jnp.ndarray:
-    if vals.shape[0] < _MIN_PALLAS_DIM or n < 2 * _MIN_PALLAS_DIM:
+    if _interpret() or vals.shape[0] < _MIN_PALLAS_DIM or n < 2 * _MIN_PALLAS_DIM:
         return ref.spmm24(x, vals, meta, n)
-    return _spmm24.spmm24(x, vals, meta, n, interpret=_interpret())
+    return _spmm24.spmm24(x, vals, meta, n, interpret=False)
 
 
 pack24 = ref.pack24
 unpack24 = ref.unpack24
+
+
+# ---------------------------------------------------------------------------
+# fused decode fast path (kernels/paged_attention.py)
+# ---------------------------------------------------------------------------
+def use_decode_kernel(head_dim: int, block_size: int) -> bool:
+    """True when the block-table decode kernels compile for these shapes:
+    TPU backend, lane-width head_dim, sublane-aligned block_size.  When
+    False the fused decode path runs the ``ref.py`` oracles — which on
+    CPU is exactly the reference gather math, keeping fused == reference
+    bitwise (DESIGN.md §11 fallback rules)."""
+    return (not _interpret()) and head_dim >= _MIN_PALLAS_DIM \
+        and block_size % 8 == 0
+
+
+def paged_decode_attn(q, k_pool, v_pool, tables, pos, active, *,
+                      block_size: int, window: int = 0, softcap: float = 0.0,
+                      wo_vals=None, wo_meta=None):
+    """Block-table flash decode (+ optional packed o_proj epilogue).
+
+    Kernel on TPU-compilable shapes, ``ref.paged_attention`` otherwise.
+    Without ``wo_vals`` returns (S, nq, hd) in q.dtype; with it, the
+    projected (S, d_model) in float32 (caller casts).
+    """
+    if not use_decode_kernel(q.shape[-1], block_size):
+        out = ref.paged_attention(q, k_pool, v_pool, tables, pos, active,
+                                  block_size=block_size, window=window,
+                                  softcap=softcap)
+        if wo_vals is None:
+            return out
+        S, nq, hd = q.shape
+        return ref.spmm24(out.reshape(S, nq * hd).astype(jnp.float32),
+                          wo_vals.astype(jnp.float32), wo_meta, nq * hd)
+    return _paged.paged_decode_attn(q, k_pool, v_pool, tables, pos, active,
+                                    block_size=block_size, window=window,
+                                    softcap=softcap, wo_vals=wo_vals,
+                                    wo_meta=wo_meta, interpret=False)
+
+
+def use_fused_mlp(d_model: int, d_ff: int) -> bool:
+    """True when ``fused_mlp24`` compiles for these dims (TPU, tiles wide
+    enough for the MXU); same fallback contract as ``use_decode_kernel``."""
+    return (not _interpret()) and d_model >= _MIN_PALLAS_DIM \
+        and d_ff >= 2 * _MIN_PALLAS_DIM
+
+
+def fused_mlp24(x, w1_vals, w1_meta, b1, up_vals, up_meta, w2_vals, w2_meta,
+                b2, *, act: str = "silu"):
+    """Whole decode MLP over packed-2:4 operands in one dispatch; oracle
+    on CPU / small shapes (same fallback contract as above)."""
+    d = w1_vals.shape[1] * 2
+    f = w1_vals.shape[0]
+    if not use_fused_mlp(d, f):
+        return ref.fused_mlp24(x, w1_vals, w1_meta, b1, up_vals, up_meta,
+                               w2_vals, w2_meta, b2, act=act)
+    return _paged.fused_mlp24(x, w1_vals, w1_meta, b1, up_vals, up_meta,
+                              w2_vals, w2_meta, b2, act=act, interpret=False)
 
 
 # ---------------------------------------------------------------------------

@@ -69,7 +69,7 @@ def serve_trace(model, params, args: argparse.Namespace) -> dict:
     cfg = BatchConfig(slots=args.slots, block_size=args.block_size,
                       max_blocks_per_request=args.max_blocks_per_request,
                       num_blocks=args.blocks, seed=args.seed,
-                      sparse=args.sparse)
+                      sparse=args.sparse, decode_impl=args.decode_impl)
     pmax = min(args.prompt_len_max,
                cfg.context_len - args.max_new_tokens,
                model.cfg.max_seq - args.max_new_tokens)
@@ -91,11 +91,15 @@ def serve_trace(model, params, args: argparse.Namespace) -> dict:
     lat = np.asarray([r.latency for r in results])
     tokens = int(sum(len(r.tokens) for r in results))
     wall = max(r.finished for r in results)
+    walls = batcher.stats["step_walls"]
     return {
         "sparse_mode": batcher.sparse_stats["mode"],
+        "decode_impl": cfg.decode_impl,
         "requests": len(results), "tokens": tokens,
         "wall_s": wall, "tok_s": tokens / max(wall, 1e-9),
         "steps": batcher.stats["steps"],
+        "measured_step_us": float(np.median(walls[1:]) * 1e6)
+                            if len(walls) > 1 else None,
         "mean_occupancy": batcher.stats["active_slot_steps"]
                           / max(batcher.stats["steps"], 1),
         "latency_p50_s": float(np.percentile(lat, 50)),
@@ -103,6 +107,7 @@ def serve_trace(model, params, args: argparse.Namespace) -> dict:
         "config": {"slots": cfg.slots, "block_size": cfg.block_size,
                    "num_blocks": cfg.num_blocks,
                    "context_len": cfg.context_len, "rate": args.rate,
+                   "decode_impl": cfg.decode_impl,
                    "mesh": executor.describe() if executor is not None
                            else {"data": 1, "model": 1, "devices": 1}},
     }
@@ -119,6 +124,12 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "--ckpt-dir); serves its pruned_model")
     ap.add_argument("--sparse", default="auto",
                     choices=("auto", "packed", "dense"))
+    ap.add_argument("--decode-impl", default="fused",
+                    choices=("fused", "reference"),
+                    help="decode fast path: 'fused' walks the block table "
+                         "in a flash-decoding Pallas kernel (falls back to "
+                         "the oracle off-TPU); 'reference' is the gather "
+                         "path that anchors it bitwise")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=4.0,
                     help="Poisson arrival rate (req/s); <=0: all at t=0")

@@ -161,6 +161,24 @@ def _causal_window_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, window: Optional
     return mask
 
 
+def decode_window_mask(idx: jnp.ndarray, pos: jnp.ndarray,
+                       window: Optional[int]) -> jnp.ndarray:
+    """Decode-step length + sliding-window validity over cache slots.
+
+    ``idx`` are slot indices in absolute-position order, ``pos`` the
+    decoding position(s) (broadcast against idx): a slot is attendable
+    iff it's filled (``idx <= pos``) and, when windowed, within the
+    trailing window ``(pos - window, pos]``.  Shared by the contiguous
+    (:func:`mha_decode`, non-ring branch) and paged
+    (:func:`mha_decode_paged`) decode paths so the two can't drift —
+    equivalence pinned in tests/test_decode_consistency.py.
+    """
+    valid = idx <= pos
+    if window is not None:
+        valid &= idx > pos - window
+    return valid
+
+
 def _flash_sharded(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                    causal: bool, window: int) -> jnp.ndarray:
     """Flash attention behind an explicit shard_map boundary.
@@ -317,12 +335,10 @@ def mha_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray, pos: jnp.ndarray,
             # ring: every slot valid once pos >= cache_len, else slots <= pos
             valid = (idx <= slot) | (pos >= cache_len)
         else:
-            valid = idx <= slot
-            if window is not None:
-                # non-ring cache wider than the window: still mask to the
-                # window, matching the windowed full forward (and the paged
-                # decode path) — slot == absolute position here
-                valid &= idx > pos - window
+            # non-ring: slot == absolute position, so the shared decode
+            # mask applies directly (window cut matches the windowed full
+            # forward and the paged decode path)
+            valid = decode_window_mask(idx, slot, window)
     qg = q.reshape(q.shape[0], 1, nkv, g, hd)
     scores = jnp.einsum("bqngh,bknh->bngqk", qg, k).astype(jnp.float32) / np.sqrt(hd)
     if cfg.attn_logit_softcap > 0:
@@ -335,10 +351,58 @@ def mha_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray, pos: jnp.ndarray,
     return dense(out, p["wo"]), new_cache
 
 
+def _paged_attn_sharded(q: jnp.ndarray, k_pool: jnp.ndarray,
+                        v_pool: jnp.ndarray, tables: jnp.ndarray,
+                        pos: jnp.ndarray, active: jnp.ndarray,
+                        block_size: int, window: int, softcap: float,
+                        wo: Optional[Params] = None) -> jnp.ndarray:
+    """Block-table decode attention behind an optional shard_map boundary.
+
+    Mirrors :func:`_flash_sharded`: under an ambient mesh the kv-head
+    axis of the pools (and the group-aligned q heads) maps onto "model",
+    so each device runs the kernel grid over its local heads — the head
+    axis IS a grid axis, so sharding it just shrinks the grid.  The
+    scalar-prefetch operands (tables/pos/active) replicate.  The packed
+    o_proj epilogue only fuses unsharded: under TP the projection stays
+    a separate dense() so GSPMD can psum head-partial contributions.
+    Without an ambient mesh this is a plain local dispatch.
+    """
+    from repro.kernels import ops as kops
+    from repro.utils import compat
+
+    def local(q_, k_, v_, tab_, pos_, act_):
+        return kops.paged_decode_attn(
+            q_, k_, v_, tab_, pos_, act_, block_size=block_size,
+            window=window, softcap=softcap,
+            wo_vals=None if wo is None else wo["vals"],
+            wo_meta=None if wo is None else wo["meta"])
+
+    mesh = compat.ambient_mesh()
+    nkv = k_pool.shape[1]
+    if (mesh is None or "model" not in mesh.axis_names or wo is not None
+            or nkv % mesh.shape["model"] != 0):
+        return local(q, k_pool, v_pool, tables, pos, active)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    # q heads shard group-aligned with kv heads: nkv % msize == 0 makes
+    # every "model" shard's contiguous q chunk a whole set of kv groups
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, "model", None), P(None, "model", None),
+                  P(None, "model", None), P(None, None), P(None), P(None)),
+        out_specs=P(None, "model", None),
+        check_rep=False)
+    return fn(q, k_pool, v_pool, tables, pos, active)
+
+
 def mha_decode_paged(cfg: ModelConfig, p: Params, x: jnp.ndarray,
                      pos: jnp.ndarray, cache: Dict[str, jnp.ndarray],
-                     write_idx: jnp.ndarray, gather_idx: jnp.ndarray,
+                     write_idx: jnp.ndarray, gather_idx: Optional[jnp.ndarray],
                      active: jnp.ndarray, window: Optional[int] = None,
+                     *, tables: Optional[jnp.ndarray] = None,
+                     block_size: Optional[int] = None,
+                     impl: str = "reference",
                      ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """One-token decode against a paged (block-pooled) KV cache.
 
@@ -357,6 +421,15 @@ def mha_decode_paged(cfg: ModelConfig, p: Params, x: jnp.ndarray,
     exactly 0 after softmax, and the reductions run over the same axis
     widths — so the outputs are bitwise-equal to the contiguous path
     (pinned in tests/test_kv_pool.py).
+
+    ``impl="fused"`` (with ``tables``/``block_size`` in place of
+    ``gather_idx``) routes the attention through the block-table flash
+    kernel (kernels/paged_attention.py): the kernel walks the table via
+    scalar prefetch instead of materializing the (S, W, nkv, hd) gather,
+    and when ``wo`` is packed the o_proj fuses into the kernel epilogue.
+    On CPU / kernel-unfriendly shapes the fused route falls back to an
+    oracle that repeats this function's exact math, so the two impls
+    stay token-identical (DESIGN.md §11).
     """
     hd = cfg.resolved_head_dim()
     nq, nkv = cfg.num_heads, cfg.num_kv_heads
@@ -373,12 +446,24 @@ def mha_decode_paged(cfg: ModelConfig, p: Params, x: jnp.ndarray,
     k = cache["k"].at[write_idx].set(k_new[:, 0].astype(cache["k"].dtype))
     v = cache["v"].at[write_idx].set(v_new[:, 0].astype(cache["v"].dtype))
     new_cache = {"k": k, "v": v}
+    if impl == "fused" and tables is not None:
+        from repro.kernels import ops as kops
+        wo = p["wo"]
+        fuse_o = (isinstance(wo, dict) and "vals" in wo
+                  and kops.use_decode_kernel(hd, block_size))
+        o = _paged_attn_sharded(q[:, 0], k, v, tables, pos, active,
+                                block_size, int(window or 0),
+                                float(cfg.attn_logit_softcap),
+                                wo if fuse_o else None)
+        if fuse_o:
+            return o.astype(x.dtype)[:, None, :], new_cache
+        out = o.reshape(o.shape[0], 1, nq * hd)
+        return dense(out, p["wo"]), new_cache
     kg = jnp.take(k, gather_idx, axis=0)                          # (S,W,nkv,hd)
     vg = jnp.take(v, gather_idx, axis=0)
     idx = jnp.arange(gather_idx.shape[1], dtype=jnp.int32)
-    valid = (idx[None, :] <= pos[:, None]) & active[:, None]
-    if window is not None:
-        valid &= idx[None, :] > pos[:, None] - window
+    valid = decode_window_mask(idx[None, :], pos[:, None], window) \
+        & active[:, None]
     qg = q.reshape(q.shape[0], 1, nkv, g, hd)
     scores = jnp.einsum("bqngh,bknh->bngqk", qg, kg).astype(jnp.float32) / np.sqrt(hd)
     if cfg.attn_logit_softcap > 0:
@@ -419,6 +504,43 @@ def mlp(cfg: ModelConfig, p: Params, x: jnp.ndarray, cap: Captures = None,
     h = dense(x, p["fc1"], prefix + "fc1", cap, p.get("b1"))
     h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
     return dense(h, p["fc2"], prefix + "fc2", cap, p.get("b2"))
+
+
+def mlp_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+               impl: str = "reference") -> jnp.ndarray:
+    """Decode-step MLP: ONE fused kernel dispatch for the whole layer
+    when ``impl="fused"`` and every matmul operand is 2:4-packed and
+    kernel-compilable (kernels/paged_attention.py ``fused_mlp24`` — the
+    hidden activation never leaves VMEM); otherwise the reference
+    per-matmul :func:`mlp`.  On CPU the fused route always takes the
+    reference path, so the decode impls stay bitwise-identical there.
+    """
+    if impl == "fused":
+        from repro.kernels import ops as kops
+        gated = "gate" in p
+        keys = ("gate", "up", "down") if gated else ("fc1", "fc2")
+        packed = all(isinstance(p.get(kk), dict) and "vals" in p[kk]
+                     for kk in keys)
+        if packed:
+            d = x.shape[-1]
+            f = p[keys[0]]["vals"].shape[0]
+            if kops.use_fused_mlp(d, f):
+                lead = x.shape[:-1]
+                x2 = x.reshape(-1, d)
+                if gated:
+                    y = kops.fused_mlp24(
+                        x2, p["gate"]["vals"], p["gate"]["meta"], None,
+                        p["up"]["vals"], p["up"]["meta"],
+                        p["down"]["vals"], p["down"]["meta"], None,
+                        act=cfg.act)
+                else:
+                    y = kops.fused_mlp24(
+                        x2, p["fc1"]["vals"], p["fc1"]["meta"], p.get("b1"),
+                        None, None,
+                        p["fc2"]["vals"], p["fc2"]["meta"], p.get("b2"),
+                        act="gelu")
+                return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
+    return mlp(cfg, p, x)
 
 
 # ---------------------------------------------------------------------------

@@ -43,7 +43,8 @@ class ModelDef:
     # families without a paged decode path (ssm / hybrid / encdec)
     init_paged_state: Optional[Callable] = None  # (num_blocks, block_size) -> pool
     paged_step: Optional[Callable] = None        # (params, pool, tables, token,
-                                                 #  pos, active, block_size)
+                                                 #  pos, active, block_size,
+                                                 #  impl="reference"|"fused")
                                                  # -> (logits, pool)
 
 
@@ -89,9 +90,10 @@ def _transformer_def(cfg: ModelConfig) -> ModelDef:
         batch_specs=lambda shape: _token_specs(cfg, shape),
         init_paged_state=lambda num_blocks, block_size:
             transformer.init_paged_caches(cfg, num_blocks, block_size),
-        paged_step=lambda p, pool, tables, token, pos, active, block_size:
+        paged_step=lambda p, pool, tables, token, pos, active, block_size,
+                          impl="reference":
             transformer.paged_serve_step(cfg, p, pool, tables, token, pos,
-                                         active, block_size),
+                                         active, block_size, impl=impl),
     )
 
 

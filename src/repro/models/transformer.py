@@ -284,7 +284,8 @@ def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int
 def paged_serve_step(cfg: ModelConfig, params: Params,
                      caches: Dict[str, jnp.ndarray], tables: jnp.ndarray,
                      token: jnp.ndarray, pos: jnp.ndarray,
-                     active: jnp.ndarray, block_size: int
+                     active: jnp.ndarray, block_size: int,
+                     impl: str = "reference"
                      ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """One decode step over the serving slots, slot-indexed into the
     paged KV pool.  token (S,1) int32; pos (S,) per-slot absolute
@@ -296,16 +297,26 @@ def paged_serve_step(cfg: ModelConfig, params: Params,
     retire by flipping ``active`` / rewriting table rows — never by
     reshaping.  Inactive slots compute masked garbage (writes land in
     the trash block, reads attend to nothing) that the caller discards.
+
+    ``impl="fused"`` skips materializing the (S, W) position-order
+    ``gather_idx`` and hands the block tables straight to the fused
+    decode fast path (block-table flash attention + packed-operand
+    epilogues, kernels/paged_attention.py); ``"reference"`` is the
+    gather path that anchors it bitwise.
     """
     S, MB = tables.shape
-    j = jnp.arange(MB * block_size, dtype=jnp.int32)
+    fused = impl == "fused"
     write_block = jnp.take_along_axis(tables, pos[:, None] // block_size,
                                       axis=1)[:, 0]
     write_idx = write_block * block_size + pos % block_size          # (S,)
-    gather_blocks = jnp.take_along_axis(
-        tables, jnp.broadcast_to(j[None, :] // block_size, (S, j.shape[0])),
-        axis=1)
-    gather_idx = gather_blocks * block_size + (j % block_size)[None, :]
+    if fused:
+        gather_idx = None
+    else:
+        j = jnp.arange(MB * block_size, dtype=jnp.int32)
+        gather_blocks = jnp.take_along_axis(
+            tables, jnp.broadcast_to(j[None, :] // block_size,
+                                     (S, j.shape[0])), axis=1)
+        gather_idx = gather_blocks * block_size + (j % block_size)[None, :]
 
     x = params["embed"][token] * cfg.emb_scale
 
@@ -315,13 +326,14 @@ def paged_serve_step(cfg: ModelConfig, params: Params,
         hn = norm_apply(cfg, lp["ln1"], h)
         a, new_cache = common.mha_decode_paged(
             cfg, lp["attn"], hn, pos, cache, write_idx, gather_idx, active,
-            window=cfg.window)
+            window=cfg.window, tables=tables if fused else None,
+            block_size=block_size, impl=impl)
         h = h + a.astype(h.dtype) * rs
         hn = norm_apply(cfg, lp["ln2"], h)
         if cfg.moe is not None:
             f, _ = moe_lib.moe_apply(cfg, lp["moe"], hn)
         else:
-            f = mlp(cfg, lp["mlp"], hn)
+            f = common.mlp_decode(cfg, lp["mlp"], hn, impl=impl)
         return h + f.astype(h.dtype) * rs, new_cache
 
     if cfg.scan_layers:

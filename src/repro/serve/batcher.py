@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.models.registry import ModelDef
 from repro.serve import kv_cache, sampling
+from repro.serve import packed as packed_lib
 from repro.serve.engine import prepare_serving_params
 from repro.utils import get_logger
 
@@ -79,6 +80,9 @@ class BatchConfig:
     seed: int = 0                      # sampling PRNG seed (Engine's cfg.seed)
     sparse: str = "auto"               # auto | packed | dense
     max_prefills_per_tick: int = 1     # admission rate per scheduler tick
+    decode_impl: str = "fused"         # fused (block-table flash kernel)
+                                       # | reference (gather path, the
+                                       #   bitwise oracle — DESIGN.md §11)
 
     @property
     def context_len(self) -> int:
@@ -111,14 +115,26 @@ class ContinuousBatcher:
                 "carries none — serve VLMs through Engine.generate(extras=...)")
         if cfg.num_blocks < 2:
             raise ValueError("num_blocks must be >= 2 (block 0 is trash)")
+        from repro.serve.engine import DECODE_IMPLS
+        if cfg.decode_impl not in DECODE_IMPLS:
+            raise ValueError(f"unknown decode_impl {cfg.decode_impl!r}; "
+                             f"choices: {DECODE_IMPLS}")
         self.model, self.cfg = model, cfg
         self.executor = executor
         self.params, self.sparse_stats = prepare_serving_params(params, cfg.sparse)
+        # accounting tree (self.params, may stay packed — serve_bench
+        # meters its bytes) vs compute tree (packed.decode_view: identity
+        # on TPU, cached dense unpack on CPU)
+        exec_params = packed_lib.decode_view(self.params)
         self.pool = kv_cache.BlockPool(cfg.num_blocks, cfg.block_size)
         self.pool_state = model.init_paged_state(cfg.num_blocks, cfg.block_size)
         if executor is not None:
+            same = exec_params is self.params
             self.params = executor.shard_params(self.params)
+            exec_params = self.params if same else \
+                executor.shard_params(exec_params)
             self.pool_state = executor.shard_paged_pool(self.pool_state)
+        self._exec_params = exec_params
 
         S = cfg.slots
         self._tables = np.zeros((S, cfg.max_blocks_per_request), np.int32)
@@ -136,12 +152,14 @@ class ContinuousBatcher:
         self.queue: Deque[Request] = deque()
         self.results: Dict[int, RequestResult] = {}
         self.stats = {"steps": 0, "prefills": 0, "prefill_tokens": 0,
-                      "active_slot_steps": 0, "context_tokens": 0}
+                      "active_slot_steps": 0, "context_tokens": 0,
+                      "step_walls": []}   # measured per-tick decode seconds
 
         def step(params, pool, tables, pos, token, req_ids, tok_idx, active,
                  temps):
             logits, pool = model.paged_step(params, pool, tables, token, pos,
-                                            active, cfg.block_size)
+                                            active, cfg.block_size,
+                                            impl=cfg.decode_impl)
             logits = logits[:, -1, :].astype(jnp.float32)
             if executor is not None:
                 # sampling must see replicated logits (see
@@ -216,7 +234,7 @@ class ContinuousBatcher:
         prompt = jnp.asarray(np.asarray(r.prompt, np.int32)[None, :])
         # eager, exact-length prefill: identical values to the solo
         # engine's (prefill K/V and logits do not depend on cache width)
-        logits, kv = self.model.prefill(self.params, prompt, P, None)
+        logits, kv = self.model.prefill(self._exec_params, prompt, P, None)
         flat = kv_cache.flat_slots(blocks, P, cfg.block_size)
         self.pool_state = kv_cache.scatter_prefill(
             self.pool_state, {k: v[:, 0] for k, v in kv.items()}, flat)
@@ -265,12 +283,14 @@ class ContinuousBatcher:
     def _tick(self, now: float) -> None:
         """One jitted decode step over all slots + host-side bookkeeping."""
         self._grow_blocks()
+        t0 = time.perf_counter()
         token, self.pool_state = self._step_fn(
-            self.params, self.pool_state, jnp.asarray(self._tables),
+            self._exec_params, self.pool_state, jnp.asarray(self._tables),
             jnp.asarray(self._pos), jnp.asarray(self._token),
             jnp.asarray(self._req_ids), jnp.asarray(self._tok_idx),
             jnp.asarray(self._active), jnp.asarray(self._temps))
-        token = np.asarray(token)
+        token = np.asarray(token)   # device sync: the step really finished
+        self.stats["step_walls"].append(time.perf_counter() - t0)
         self.stats["steps"] += 1
         self.stats["active_slot_steps"] += int(self._active.sum())
         self.stats["context_tokens"] += int((self._pos[self._active] + 1).sum())

@@ -20,6 +20,19 @@ Packing preserves the weight dtype, so packed logits are bitwise-equal
 to the dense matmul of the same masked weights.  ``sparse="dense"`` is
 the fallback flag: packed checkpoints are unpacked and everything runs
 through plain dense matmuls.
+
+The packed tree is what the engine *accounts* with (``self.params``,
+``sparse_stats``); what it *computes* with is ``packed.decode_view`` of
+it — identity on TPU (spmm24 kernel path), the cached bitwise-lossless
+dense view on CPU, where per-step unpacking made packed serving slower
+than dense (see serve/packed.py).
+
+``ServeConfig.decode_impl`` selects the decode fast path ("fused", the
+default: block-table flash attention + fused packed epilogues in the
+*paged* step) vs the reference gather path that anchors it bitwise.
+The contiguous-cache engine here has no paged step, so it serves via
+the reference path either way — the flag is validated and forwarded for
+config symmetry with ``BatchConfig`` (DESIGN.md §11 fallback rules).
 """
 from __future__ import annotations
 
@@ -38,6 +51,7 @@ from repro.utils import get_logger
 log = get_logger("serve")
 
 _SPARSE_MODES = ("auto", "packed", "dense")
+DECODE_IMPLS = ("fused", "reference")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +61,7 @@ class ServeConfig:
     cache_len: int = 256
     seed: int = 0
     sparse: str = "auto"           # auto | packed | dense (fallback flag)
+    decode_impl: str = "fused"     # fused | reference (bitwise oracle)
 
 
 def prepare_serving_params(params: Any, sparse: str
@@ -92,11 +107,24 @@ class Engine:
         params on its mesh per the Megatron column/row rules — decode
         runs tensor-parallel over "model" with one all-reduce per block
         (GSPMD inserts it), token-identical to the single-device path."""
+        if cfg.decode_impl not in DECODE_IMPLS:
+            raise ValueError(f"unknown decode_impl {cfg.decode_impl!r}; "
+                             f"choices: {DECODE_IMPLS}")
         self.model, self.cfg = model, cfg
         self.executor = executor
         self.params, self.sparse_stats = prepare_serving_params(params, cfg.sparse)
+        if cfg.decode_impl == "fused" and model.paged_step is None:
+            log.debug("decode_impl='fused' on a family without a paged "
+                      "step: serving via the reference decode path")
+        # accounting tree (self.params, may stay packed) vs compute tree
+        # (the decode view: identity on TPU, cached dense unpack on CPU)
+        exec_params = packed_lib.decode_view(self.params)
         if executor is not None:
+            same = exec_params is self.params
             self.params = executor.shard_params(self.params)
+            exec_params = self.params if same else \
+                executor.shard_params(exec_params)
+        self._exec_params = exec_params
         self._decode_fn = jax.jit(self._decode_step)
 
     def _decode_step(self, params, state, token, pos, keys):
@@ -154,7 +182,8 @@ class Engine:
                                          jnp.asarray(request_ids, jnp.int32))
 
         if self.model.prefill is not None:
-            logits, state = self.model.prefill(self.params, prompt, cache_len, extras)
+            logits, state = self.model.prefill(self._exec_params, prompt,
+                                               cache_len, extras)
             first_logits = logits[:, -1, :].astype(jnp.float32)
             if self.executor is not None:
                 first_logits = self.executor.replicate_logits(first_logits)
@@ -166,12 +195,13 @@ class Engine:
             # recurrent families: feed the prompt token-by-token (sampled
             # outputs are discarded until the last prompt token, whose
             # sample is generated-token 0 — hence the index-0 keys)
-            state = self.model.init_serve_state(self.params, B, cache_len, extras)
+            state = self.model.init_serve_state(self._exec_params, B,
+                                                cache_len, extras)
             if self.executor is not None:
                 state = self.executor.shard_serve_state(state)
             keys0 = sampling.step_keys(req_keys, 0)
             for t in range(P):
-                nxt, state = self._decode_fn(self.params, state,
+                nxt, state = self._decode_fn(self._exec_params, state,
                                              prompt[:, t:t + 1], jnp.int32(t),
                                              keys0)
             token = nxt
@@ -180,7 +210,7 @@ class Engine:
         out = [np.asarray(token)]
         for t in range(n_new - 1):
             keys = sampling.step_keys(req_keys, t + 1)
-            token, state = self._decode_fn(self.params, state, token,
+            token, state = self._decode_fn(self._exec_params, state, token,
                                            jnp.int32(pos0 + t), keys)
             out.append(np.asarray(token))
         return np.concatenate(out, axis=1)

@@ -100,6 +100,35 @@ def count_packed(params: Any) -> int:
     return rec(params)
 
 
+def decode_view(params: Any) -> Any:
+    """The representation the decode step should *compute* with.
+
+    On TPU: identity — packed leaves feed the spmm24 / fused-epilogue
+    kernels, which is the whole point of packing (0.625x weight traffic).
+
+    On CPU there is no packed-matmul hardware to win on, and unpacking
+    inside the jitted per-token step (or interpreting the Pallas kernel)
+    made packed serving ~2x *slower* than dense — the measured
+    BENCH_serve regression.  So the unpack happens HERE, once, at
+    construction: the returned tree is the bitwise-lossless dense view
+    (pack_tree with ``dtype=None`` keeps values exactly), the caller
+    keeps the packed tree for accounting (``packed_bytes`` in
+    serve_bench's modeled roofline), and the hot loop runs plain dense
+    matmuls.  Identity when nothing is packed.
+    """
+    import jax
+    if jax.default_backend() == "tpu":
+        return params
+    n = count_packed(params)
+    if n == 0:
+        return params
+    from repro.utils import get_logger
+    get_logger("serve").info(
+        "CPU backend: caching dense decode view of %d packed operators "
+        "(packed tree kept for accounting)", n)
+    return unpack_tree(params)
+
+
 def unpack_tree(params: Any) -> Any:
     """Inverse of pack_tree (packed dicts -> dense (in, out))."""
 

@@ -390,6 +390,53 @@ def case_batcher_tp_parity():
                     (sparse, temp, a.id, a.tokens, b.tokens)
 
 
+def case_paged_attn_shardmap():
+    """The fused decode attention's shard_map boundary (models/common.
+    _paged_attn_sharded): with the KV pools heads-sharded over "model"
+    and the block table / positions replicated, the output equals the
+    meshless local dispatch — and a packed o_proj forces the unsharded
+    bypass (the projection must stay a dense() so GSPMD can psum the
+    head-partials), same result either way."""
+    from repro.kernels import ops as kops
+    from repro.models import common
+    from repro.utils import compat
+
+    rng = np.random.default_rng(0)
+    S, nkv, g, hd, NB, BS = 3, 4, 2, 8, 10, 4   # nkv % model_parallel == 0
+    T = NB * BS
+    q = jnp.asarray(rng.standard_normal((S, nkv * g, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((T, nkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((T, nkv, hd)), jnp.float32)
+    lengths = [9, 4, 1]
+    perm = rng.permutation(np.arange(1, NB))
+    tables = np.zeros((S, 3), np.int32)         # trash-padded tails
+    used = 0
+    for s, L in enumerate(lengths):
+        nb = -(-L // BS)
+        tables[s, :nb] = perm[used:used + nb]
+        used += nb
+    tables = jnp.asarray(tables)
+    pos = jnp.asarray(np.asarray(lengths, np.int32) - 1)
+    active = jnp.asarray([True, True, False])
+    args = (q, k, v, tables, pos, active, BS, 3, 0.0)
+
+    wo_dense = rng.standard_normal((16, nkv * g * hd)).astype(np.float32)
+    keep = rng.random((16, nkv * g * hd // 4, 4)).argsort(axis=-1) < 2
+    wv, wm = kops.pack24(jnp.asarray(wo_dense * keep.reshape(wo_dense.shape)))
+    wo = {"vals": wv, "meta": wm}
+
+    want = common._paged_attn_sharded(*args)
+    want_proj = common._paged_attn_sharded(*args, wo=wo)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with mesh, compat.set_mesh(mesh):
+        got = common._paged_attn_sharded(*args)
+        got_proj = common._paged_attn_sharded(*args, wo=wo)
+    act = np.asarray(active)
+    np.testing.assert_array_equal(np.asarray(got)[act], np.asarray(want)[act])
+    np.testing.assert_array_equal(np.asarray(got_proj)[act],
+                                  np.asarray(want_proj)[act])
+
+
 def case_engine_tp_parity():
     """Engine.generate with TP-sharded params + caches decodes the same
     tokens as the single-device engine (greedy and temperature)."""

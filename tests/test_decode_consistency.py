@@ -73,6 +73,57 @@ def test_windowed_attention_wide_cache():
     np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
 
 
+def test_window_mask_helper_shared_by_decode_paths():
+    """``common.decode_window_mask`` is the single source of the decode
+    length + sliding-window cut.  Pin (a) its truth table against the
+    two formulas it replaced (contiguous non-ring branch; paged gather
+    branch), and (b) that the contiguous and paged decode paths agree
+    bitwise through it on a window narrower than the cache."""
+    from repro.models import common
+    from repro.configs.opt125m_proxy import tiny_config
+
+    # (a) truth table, scalar and broadcast pos, window None / narrow
+    idx = jnp.arange(16, dtype=jnp.int32)
+    for pos in (0, 5, 15):
+        for window in (None, 4, 16):
+            got = np.asarray(common.decode_window_mask(idx, jnp.int32(pos),
+                                                       window))
+            want = (np.arange(16) <= pos)
+            if window is not None:
+                want &= np.arange(16) > pos - window
+            np.testing.assert_array_equal(got, want, err_msg=f"{pos},{window}")
+    posb = jnp.asarray([[3], [9]], jnp.int32)
+    got = np.asarray(common.decode_window_mask(idx[None, :], posb, 4))
+    want = (np.arange(16)[None, :] <= np.asarray(posb)) \
+        & (np.arange(16)[None, :] > np.asarray(posb) - 4)
+    np.testing.assert_array_equal(got, want)
+
+    # (b) contiguous mha_decode == paged mha_decode_paged, windowed,
+    # cache wider than the window (both paths route through the helper)
+    cfg = tiny_config().replace(num_layers=1, d_model=16, num_heads=2,
+                                num_kv_heads=2, vocab=32, window=6)
+    p = common.attn_init(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    S, W, nkv, hd = 2, 16, 2, cfg.resolved_head_dim()
+    x = jnp.asarray(rng.standard_normal((S, 1, cfg.d_model)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((S, W, nkv, hd)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((S, W, nkv, hd)), jnp.float32)
+    pos = np.asarray([9, 14], np.int32)
+    # identity paging: slot b's context lives at flat slots b*W + [0, W)
+    flat = {"k": ck.reshape(S * W, nkv, hd), "v": cv.reshape(S * W, nkv, hd)}
+    gather = jnp.asarray(np.arange(S * W).reshape(S, W))
+    paged, _ = common.mha_decode_paged(
+        cfg, p, x, jnp.asarray(pos), flat,
+        jnp.asarray(np.arange(S) * W + pos), gather, jnp.ones((S,), bool),
+        cfg.window)
+    for b in range(S):
+        solo, _ = common.mha_decode(cfg, p, x[b:b + 1], jnp.int32(pos[b]),
+                                    {"k": ck[b:b + 1], "v": cv[b:b + 1]},
+                                    window=cfg.window)
+        np.testing.assert_array_equal(np.asarray(paged[b:b + 1]),
+                                      np.asarray(solo))
+
+
 def test_flash_attention_matches_xla_forward():
     """attn_impl='flash' == 'xla' on the same params (S >= 128 kernel path)."""
     from repro.models.registry import model_def

@@ -38,6 +38,8 @@ CASES = [
     ("eval_parity", 8),
     ("batcher_tp_parity", 8),
     ("engine_tp_parity", 8),
+    # fused decode fast path (block-table flash attention shard_map)
+    ("paged_attn_shardmap", 8),
 ]
 
 SCRIPT = os.path.join(os.path.dirname(__file__), "distributed_cases.py")

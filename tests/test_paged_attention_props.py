@@ -1,0 +1,65 @@
+"""Hypothesis sweeps for the block-table flash-decode path.
+
+Randomized companions to the deterministic pins in
+tests/test_paged_attention.py (same scenario builder): ragged per-slot
+lengths, windows narrower than the context, block tables with holes and
+trash-block-0 tails.  Skips wholesale without hypothesis (optional test
+dep), like tests/test_kv_pool.py.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dep "
+                    "(pip install '.[test]') — see pyproject.toml")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels import paged_attention as pk  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+from test_paged_attention import (BS, build_scenario,  # noqa: E402
+                                  naive_paged_attention)
+
+# <= 3 slots x <= 2 blocks each always fits the 9 allocatable blocks
+scenarios = st.fixed_dictionaries({
+    "seed": st.integers(0, 2**31 - 1),
+    "lengths": st.lists(st.integers(1, 2 * BS), min_size=1, max_size=3),
+    "window": st.sampled_from([0, 2, 3, BS + 1]),
+    "softcap": st.sampled_from([0.0, 5.0]),
+    "inactive": st.integers(-1, 2),     # slot to deactivate (-1: none)
+})
+
+
+def _materialize(sc):
+    q, k, v, tables, pos = build_scenario(sc["seed"], sc["lengths"])
+    active = np.ones(len(sc["lengths"]), bool)
+    if 0 <= sc["inactive"] < active.size:
+        active[sc["inactive"]] = False
+    args = (jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+            jnp.asarray(tables), jnp.asarray(pos), jnp.asarray(active))
+    return (q, k, v, tables, pos, active), args
+
+
+@given(sc=scenarios)
+@settings(max_examples=40, deadline=None)
+def test_oracle_matches_naive(sc):
+    (q, k, v, tables, pos, active), args = _materialize(sc)
+    got = np.asarray(ref.paged_attention(
+        *args, block_size=BS, window=sc["window"], softcap=sc["softcap"]))
+    want = naive_paged_attention(q, k, v, tables, pos, active,
+                                 window=sc["window"], softcap=sc["softcap"])
+    np.testing.assert_allclose(got[active], want[active], rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.kernels_interpret
+@given(sc=scenarios)
+@settings(max_examples=10, deadline=None)   # interpret mode is slow
+def test_kernel_matches_oracle(sc):
+    (_, _, _, _, _, active), args = _materialize(sc)
+    got = np.asarray(pk.paged_decode_attn(
+        *args, block_size=BS, window=sc["window"], softcap=sc["softcap"],
+        interpret=True))
+    want = np.asarray(ref.paged_attention(
+        *args, block_size=BS, window=sc["window"], softcap=sc["softcap"]))
+    np.testing.assert_allclose(got[active], want[active], rtol=1e-5,
+                               atol=1e-6)
