@@ -1,0 +1,93 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Modes:
+  (default)          AST rules (JAX/MESH) over the given paths + the
+                     Pallas kernel checker over the registered kernels.
+  --runtime          trace-budget enforcement: patches jax.jit, runs the
+                     tier-1 entry-point scenarios, checks TRACE_BUDGETS.
+  --no-pallas        skip the kernel checker (pure AST pass).
+
+Findings not present in the baseline (``--baseline``, default
+``analysis_baseline.json``) fail the run with exit code 1.
+``--strict-baseline`` additionally fails on stale baseline entries, so
+fixed violations must be removed from the file.  ``--report`` writes
+every finding (new + suppressed) as JSON for the CI artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+from .core import Finding, apply_baseline, load_baseline
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro's static-analysis pass (DESIGN.md §12)")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files/directories to lint (default: src/)")
+    ap.add_argument("--baseline", default="analysis_baseline.json",
+                    help="accepted-findings file to diff against")
+    ap.add_argument("--report", default=None,
+                    help="write the full finding list as JSON here")
+    ap.add_argument("--runtime", action="store_true",
+                    help="run the trace-budget scenarios (slow; needs a "
+                         "working jax install)")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="skip the Pallas kernel checker")
+    ap.add_argument("--strict-baseline", action="store_true",
+                    help="also fail on stale baseline entries")
+    args = ap.parse_args(argv)
+    paths = args.paths or ["src"]
+
+    findings: List[Finding] = []
+    if args.runtime:
+        # patch-before-import: the recorder must see module-level jits
+        from .trace_budget import run_runtime_check
+        findings += run_runtime_check()
+    else:
+        from . import run_source_rules
+        findings += run_source_rules(paths)
+        if not args.no_pallas:
+            from .rules_pallas import check_kernels
+            findings += check_kernels()
+
+    baseline = load_baseline(args.baseline)
+    new, suppressed, stale = apply_baseline(findings, baseline)
+    if args.runtime:
+        # the baseline holds static findings; a runtime-only run cannot
+        # re-derive them, so stale detection would false-positive
+        stale = []
+
+    if args.report:
+        with open(args.report, "w", encoding="utf-8") as f:
+            json.dump({
+                "new": [x.to_dict() for x in new],
+                "suppressed": [x.to_dict() for x in suppressed],
+                "stale_baseline": stale,
+            }, f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    for f_ in new:
+        print(f_.format())
+    if suppressed:
+        print(f"[baseline] {len(suppressed)} finding(s) suppressed by "
+              f"{args.baseline}")
+    for key in stale:
+        print(f"[stale baseline] {key} no longer fires"
+              + (" (remove it)" if args.strict_baseline else ""))
+
+    failed = bool(new) or (args.strict_baseline and bool(stale))
+    total = len(new) + len(suppressed)
+    mode = "runtime" if args.runtime else "static"
+    print(f"repro.analysis ({mode}): {len(new)} new, "
+          f"{len(suppressed)} baselined, {len(stale)} stale "
+          f"({total} total) -> {'FAIL' if failed else 'OK'}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,168 @@
+"""Shared machinery of the static-analysis pass (DESIGN.md §12).
+
+A *finding* is one rule violation at one source location.  Its identity
+(:attr:`Finding.key`) deliberately excludes the line number — baselines
+must survive unrelated edits above the flagged line — and is instead
+``rule:path:context:detail`` where ``context`` is the enclosing function
+qualname and ``detail`` a short stable token (usually the flagged
+expression's source text).
+
+The committed ``analysis_baseline.json`` maps finding keys to one-line
+justifications.  CI fails on any finding whose key is not in the
+baseline; under ``--strict-baseline`` it also fails on stale entries, so
+the baseline can only shrink unless a justified exception is added in
+the same PR that introduces it.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str        # e.g. "JAX001"
+    path: str        # repo-relative posix path
+    line: int        # 1-based; informational only (not part of the key)
+    context: str     # enclosing function/kernel qualname ("" = module)
+    detail: str      # short stable token naming the violating construct
+    message: str     # human-readable explanation
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}:{self.path}:{self.context}:{self.detail}"
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} "
+                f"[{self.context or '<module>'}] {self.message}")
+
+    def to_dict(self) -> Dict[str, object]:
+        return {**dataclasses.asdict(self), "key": self.key}
+
+
+@dataclasses.dataclass
+class ModuleCtx:
+    """One parsed source module handed to the AST rules."""
+
+    path: str                 # filesystem path as given
+    rel: str                  # repo-relative posix path (finding identity)
+    modname: str              # dotted module name, best effort ("" if n/a)
+    tree: ast.Module
+    source: str
+
+    @classmethod
+    def parse(cls, path: str, root: Optional[str] = None) -> "ModuleCtx":
+        with open(path, "r", encoding="utf-8") as f:
+            source = f.read()
+        rel = relpath(path, root)
+        return cls(path=path, rel=rel, modname=modname_of(rel),
+                   tree=ast.parse(source, filename=path), source=source)
+
+
+def relpath(path: str, root: Optional[str] = None) -> str:
+    root = root or os.getcwd()
+    ap = os.path.abspath(path)
+    try:
+        rel = os.path.relpath(ap, root)
+    except ValueError:          # different drive (windows)
+        rel = ap
+    return rel.replace(os.sep, "/")
+
+
+def modname_of(rel: str) -> str:
+    """``src/repro/serve/engine.py`` -> ``repro.serve.engine`` (best
+    effort; non-package files keep their stem as the module name)."""
+    p = rel[:-3] if rel.endswith(".py") else rel
+    parts = [x for x in p.split("/") if x]
+    if "src" in parts:
+        parts = parts[parts.index("src") + 1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def iter_py_files(paths: Iterable[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+        elif os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d not in ("__pycache__", ".git"))
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        yield os.path.join(dirpath, fn)
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+def load_baseline(path: str) -> Dict[str, str]:
+    """``analysis_baseline.json``: {"findings": {key: justification}}.
+    Missing file = empty baseline."""
+    if not os.path.exists(path):
+        return {}
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    entries = data.get("findings", data) if isinstance(data, dict) else {}
+    if not isinstance(entries, dict) or not all(
+            isinstance(k, str) and isinstance(v, str)
+            for k, v in entries.items()):
+        raise ValueError(f"{path}: baseline must map finding keys to "
+                         f"one-line justification strings")
+    return dict(entries)
+
+
+def apply_baseline(findings: List[Finding], baseline: Dict[str, str]
+                   ) -> Tuple[List[Finding], List[Finding], List[str]]:
+    """Split into (new, suppressed, stale-baseline-keys)."""
+    new: List[Finding] = []
+    suppressed: List[Finding] = []
+    seen = set()
+    for f in findings:
+        if f.key in baseline:
+            suppressed.append(f)
+            seen.add(f.key)
+        else:
+            new.append(f)
+    stale = sorted(set(baseline) - seen)
+    return new, suppressed, stale
+
+
+# ---------------------------------------------------------------------------
+# small AST helpers shared by the rule modules
+# ---------------------------------------------------------------------------
+def dotted_name(node: ast.AST) -> str:
+    """``jax.random.categorical`` for the matching Attribute/Name chain
+    ("" when the expression is not a plain dotted name)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def unparse(node: ast.AST, limit: int = 60) -> str:
+    try:
+        text = ast.unparse(node)
+    except Exception:
+        text = f"<{type(node).__name__}>"
+    return text if len(text) <= limit else text[: limit - 3] + "..."
+
+
+def assigned_names(target: ast.AST) -> List[str]:
+    """Flat list of plain names bound by an assignment target."""
+    out: List[str] = []
+    for n in ast.walk(target):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, (ast.Store,)):
+            out.append(n.id)
+    return out

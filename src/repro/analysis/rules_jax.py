@@ -1,0 +1,589 @@
+"""AST-based JAX lint (rule family JAX, DESIGN.md §12).
+
+JAX001  Python ``if``/``while`` branching on a traced value inside a
+        jitted function.  Tracers have no stable truth value — the
+        branch bakes one arm into the executable (or raises a
+        ConcretizationError).  ``jnp.where`` / ``lax.cond`` instead.
+JAX002  PRNG key reuse: the same key variable feeds two samplers
+        without an intervening ``split``/``fold_in``, or a loop body
+        consumes a key it never advances.  Reused keys silently
+        correlate draws.
+JAX003  Host sync on a device value in a serving hot path: ``.item()``,
+        ``float()``/``int()`` or ``np.asarray`` applied to the result of
+        a jitted step forces a blocking device->host transfer per token
+        (the PR 6 "packed slower than dense" class).
+JAX004  ``jax.jit`` site without a declared cache owner: every jit in
+        the repo must have a trace budget registered in
+        ``trace_budget.TRACE_BUDGETS`` (the PR 6 executable-accumulation
+        segfault class).
+
+All three static rules share one scope walker that assigns qualnames
+(``Cls.meth.<locals>.inner``) matching ``fn.__qualname__`` at runtime,
+so the static jit inventory and the ``--runtime`` recorder key the same
+table.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .core import Finding, ModuleCtx, assigned_names, dotted_name, unparse
+
+# modules whose functions are serving hot paths for JAX003 (prefix match)
+HOT_PATH_PREFIXES: Tuple[str, ...] = ("repro.serve.",)
+
+# jax.random consumers that *advance* a key rather than spend it
+_KEY_MAKERS = {"PRNGKey", "key", "split", "fold_in", "wrap_key_data",
+               "clone", "key_data"}
+_DETAINT_ATTRS = {"shape", "ndim", "dtype", "size"}
+_DETAINT_CALLS = {"len", "isinstance", "hasattr", "getattr", "type"}
+_SYNC_CALLS = {"float", "int", "bool"}
+
+
+def _qualname(stack: Sequence[ast.AST]) -> str:
+    """Runtime-compatible qualname for a nesting stack of class/function
+    nodes (functions nested in functions get ``.<locals>.``)."""
+    parts: List[str] = []
+    prev_fn = False
+    for node in stack:
+        name = getattr(node, "name", "")
+        if prev_fn:
+            parts.append("<locals>")
+        parts.append(name)
+        prev_fn = isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+    return ".".join(parts)
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return dotted_name(node) in ("jax.jit", "jit")
+
+
+def _jit_call_of(node: ast.AST) -> Optional[ast.Call]:
+    """The ``jax.jit(...)`` / ``functools.partial(jax.jit, ...)`` Call if
+    ``node`` is one, else None."""
+    if not isinstance(node, ast.Call):
+        return None
+    if _is_jax_jit(node.func):
+        return node
+    if dotted_name(node.func) in ("functools.partial", "partial"):
+        if node.args and _is_jax_jit(node.args[0]):
+            return node
+    return None
+
+
+def _static_params(jit_call: ast.Call, fn: Optional[ast.AST]) -> Set[str]:
+    """Parameter names excluded from tracing via static_argnames/nums."""
+    out: Set[str] = set()
+    posnums: List[int] = []
+    for kw in jit_call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    posnums.append(n.value)
+    if posnums and isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        names = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        for i in posnums:
+            if 0 <= i < len(names):
+                out.add(names[i])
+    return out
+
+
+class JitSite:
+    """One ``jax.jit`` occurrence: a decorated def, or a call assigned /
+    passed somewhere."""
+
+    def __init__(self, key: str, line: int, context: str,
+                 fn: Optional[ast.FunctionDef], jit_call: ast.Call):
+        self.key = key            # "module:qualname" budget-table key
+        self.line = line
+        self.context = context    # enclosing qualname for reporting
+        self.fn = fn              # the jitted FunctionDef when resolvable
+        self.jit_call = jit_call
+
+
+class _ScopeWalker(ast.NodeVisitor):
+    """Collects jit sites and local function defs with runtime qualnames."""
+
+    def __init__(self, modname: str) -> None:
+        self.modname = modname
+        self.stack: List[ast.AST] = []
+        self.sites: List[JitSite] = []
+        # qualname -> FunctionDef for "jax.jit(name)" resolution,
+        # per enclosing scope (keyed by scope qualname)
+        self.defs_in_scope: Dict[str, Dict[str, ast.FunctionDef]] = {"": {}}
+
+    def _scope(self) -> str:
+        return _qualname(self.stack)
+
+    def _record(self, fn: Optional[ast.FunctionDef], jit_call: ast.Call,
+                line: int, fallback: str) -> None:
+        if fn is not None:
+            qn = fn._analysis_qualname  # type: ignore[attr-defined]
+        else:
+            qn = fallback
+        self.sites.append(JitSite(f"{self.modname}:{qn}", line,
+                                  self._scope(), fn, jit_call))
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.stack.append(node)
+        # pre-register methods so jax.jit(self.method) inside an earlier
+        # method (e.g. __init__) resolves regardless of definition order
+        scope = self._scope()
+        for child in node.body:
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                child._analysis_qualname = _qualname(  # type: ignore[union-attr]
+                    self.stack + [child])
+                self.defs_in_scope.setdefault(scope, {})[child.name] = child
+        self.generic_visit(node)
+        self.stack.pop()
+
+    def _visit_fn(self, node: ast.FunctionDef) -> None:
+        qn = _qualname(self.stack + [node])
+        node._analysis_qualname = qn  # type: ignore[attr-defined]
+        self.defs_in_scope.setdefault(self._scope(), {})[node.name] = node
+        for dec in node.decorator_list:
+            jc = _jit_call_of(dec)
+            if jc is not None:
+                self._record(node, jc, node.lineno, qn)
+            elif _is_jax_jit(dec):
+                # bare @jax.jit decorator (no call)
+                self._record(node, ast.Call(func=dec, args=[], keywords=[]),
+                             node.lineno, qn)
+        self.stack.append(node)
+        self.defs_in_scope.setdefault(self._scope(), {})
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn  # type: ignore[assignment]
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if _is_jax_jit(node.func):
+            fn = self._resolve_fn_arg(node)
+            self._record(fn, node, node.lineno, fallback=self._scope())
+        self.generic_visit(node)
+
+    def _resolve_fn_arg(self, jit_call: ast.Call) -> Optional[ast.FunctionDef]:
+        if not jit_call.args:
+            return None
+        arg = jit_call.args[0]
+        if isinstance(arg, ast.Name):
+            return self.defs_in_scope.get(self._scope(), {}).get(arg.id)
+        if isinstance(arg, ast.Attribute) and \
+                isinstance(arg.value, ast.Name) and arg.value.id == "self":
+            # jax.jit(self.method): resolve against the enclosing class
+            for i in range(len(self.stack) - 1, -1, -1):
+                if isinstance(self.stack[i], ast.ClassDef):
+                    cls_scope = _qualname(self.stack[: i + 1])
+                    return self.defs_in_scope.get(cls_scope, {}).get(arg.attr)
+        return None
+
+
+def collect_jit_sites(ctx: ModuleCtx) -> List[JitSite]:
+    w = _ScopeWalker(ctx.modname)
+    w.visit(ctx.tree)
+    return w.sites
+
+
+# ---------------------------------------------------------------------------
+# JAX001: traced-value control flow in jitted functions
+# ---------------------------------------------------------------------------
+def _expr_tainted(node: ast.AST, tainted: Set[str]) -> bool:
+    """Is this expression data-dependent on a traced value?  Shape/dtype
+    projections, ``is None`` tests and ``len``/``isinstance`` detaint."""
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in _DETAINT_ATTRS:
+            return False
+        return _expr_tainted(node.value, tainted)
+    if isinstance(node, ast.Call):
+        fname = dotted_name(node.func)
+        if fname in _DETAINT_CALLS:
+            return False
+        recv = (isinstance(node.func, ast.Attribute)
+                and _expr_tainted(node.func.value, tainted))
+        return recv or any(
+            _expr_tainted(a, tainted) for a in node.args) or any(
+            _expr_tainted(k.value, tainted) for k in node.keywords)
+    if isinstance(node, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return False
+        return any(_expr_tainted(x, tainted)
+                   for x in [node.left, *node.comparators])
+    if isinstance(node, ast.Subscript):
+        return _expr_tainted(node.value, tainted)
+    return any(_expr_tainted(c, tainted) for c in ast.iter_child_nodes(node))
+
+
+class _TaintChecker(ast.NodeVisitor):
+    def __init__(self, fn: ast.FunctionDef, statics: Set[str],
+                 ctx: ModuleCtx, qualname: str,
+                 findings: List[Finding]) -> None:
+        a = fn.args
+        params = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            params.append(a.vararg.arg)
+        if a.kwarg:
+            params.append(a.kwarg.arg)
+        self.tainted: Set[str] = {p for p in params
+                                  if p not in statics
+                                  and p not in ("self", "cls")}
+        self.ctx = ctx
+        self.qualname = qualname
+        self.findings = findings
+        self.fn = fn
+
+    def run(self) -> None:
+        for stmt in self.fn.body:
+            self.visit(stmt)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if _expr_tainted(node.value, self.tainted):
+            for t in node.targets:
+                self.tainted.update(assigned_names(t))
+        else:
+            for t in node.targets:
+                self.tainted.difference_update(assigned_names(t))
+        self.visit(node.value)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if _expr_tainted(node.value, self.tainted):
+            self.tainted.update(assigned_names(node.target))
+        self.visit(node.value)
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check(node.test, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check(node.test, "while")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        # `a if cond else b` on tracers is the same bug
+        self._check(node.test, "ifexp")
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        # nested defs get their own params; don't conflate scopes
+        return
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def _check(self, test: ast.expr, kind: str) -> None:
+        if _expr_tainted(test, self.tainted):
+            self.findings.append(Finding(
+                rule="JAX001", path=self.ctx.rel, line=test.lineno,
+                context=self.qualname, detail=unparse(test),
+                message=f"Python `{kind}` on traced value "
+                        f"`{unparse(test)}` inside jitted function — "
+                        f"use jnp.where/lax.cond or mark it static"))
+
+
+def check_traced_branching(ctx: ModuleCtx,
+                           sites: Optional[List[JitSite]] = None
+                           ) -> List[Finding]:
+    findings: List[Finding] = []
+    seen: Set[int] = set()
+    for site in (sites if sites is not None else collect_jit_sites(ctx)):
+        if site.fn is None or id(site.fn) in seen:
+            continue
+        seen.add(id(site.fn))
+        statics = _static_params(site.jit_call, site.fn)
+        qn = getattr(site.fn, "_analysis_qualname", site.fn.name)
+        _TaintChecker(site.fn, statics, ctx, qn, findings).run()
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# JAX002: PRNG key reuse
+# ---------------------------------------------------------------------------
+def _key_consumer_and_key(node: ast.Call) -> Optional[str]:
+    """If ``node`` spends a PRNG key, return the key variable name (first
+    positional arg when it is a plain Name)."""
+    fname = dotted_name(node.func)
+    parts = fname.split(".")
+    if len(parts) >= 2 and parts[-2] in ("random", "jrandom") or \
+            fname.startswith("jax.random."):
+        leaf = parts[-1]
+        if leaf not in _KEY_MAKERS and node.args and \
+                isinstance(node.args[0], ast.Name):
+            return node.args[0].id
+    return None
+
+
+def _advances_key(node: ast.Call) -> List[str]:
+    """Key names this call re-derives (split/fold_in arguments)."""
+    fname = dotted_name(node.func)
+    if fname.split(".")[-1] in ("split", "fold_in"):
+        return [a.id for a in node.args if isinstance(a, ast.Name)]
+    return []
+
+
+class _KeyChecker(ast.NodeVisitor):
+    """Linear scan of one function body: a key name is *spent* after a
+    sampler consumes it; spending it again without reassignment/advance
+    is JAX002.  Loops whose bodies consume a key they never rebind are
+    the un-folded-key variant."""
+
+    def __init__(self, ctx: ModuleCtx, qualname: str,
+                 findings: List[Finding]) -> None:
+        self.ctx = ctx
+        self.qualname = qualname
+        self.findings = findings
+        self.spent: Set[str] = set()
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.visit(node.value)
+        for t in node.targets:
+            self.spent.difference_update(assigned_names(t))
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self.generic_visit(node)
+        for name in _advances_key(node):
+            self.spent.discard(name)
+        key = _key_consumer_and_key(node)
+        if key is not None:
+            if key in self.spent:
+                self.findings.append(Finding(
+                    rule="JAX002", path=self.ctx.rel, line=node.lineno,
+                    context=self.qualname, detail=f"reuse:{key}",
+                    message=f"PRNG key `{key}` consumed again without "
+                            f"split/fold_in — correlated draws"))
+            self.spent.add(key)
+
+    def _visit_loop(self, node: ast.AST, body: List[ast.stmt]) -> None:
+        rebound: Set[str] = set()
+        for st in body:
+            if isinstance(st, (ast.Assign, ast.AugAssign)):
+                tgts = st.targets if isinstance(st, ast.Assign) else [st.target]
+                for t in tgts:
+                    rebound.update(assigned_names(t))
+        for st in body:
+            for sub in ast.walk(st):
+                if isinstance(sub, ast.Call):
+                    key = _key_consumer_and_key(sub)
+                    if key is not None and key not in rebound:
+                        self.findings.append(Finding(
+                            rule="JAX002", path=self.ctx.rel,
+                            line=sub.lineno, context=self.qualname,
+                            detail=f"loop:{key}",
+                            message=f"loop body consumes PRNG key `{key}` "
+                                    f"without folding the iteration in — "
+                                    f"same key every iteration"))
+        for st in body:
+            self.visit(st)
+
+    def visit_For(self, node: ast.For) -> None:
+        self._visit_loop(node, node.body)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._visit_loop(node, node.body)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        return  # nested functions are checked as their own scope
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+
+def check_key_reuse(ctx: ModuleCtx) -> List[Finding]:
+    findings: List[Finding] = []
+    stack: List[ast.AST] = []
+
+    def walk(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qn = _qualname(stack + [child])
+                chk = _KeyChecker(ctx, qn, findings)
+                for st in child.body:
+                    chk.visit(st)
+                stack.append(child)
+                walk(child)
+                stack.pop()
+            elif isinstance(child, ast.ClassDef):
+                stack.append(child)
+                walk(child)
+                stack.pop()
+            else:
+                walk(child)
+
+    walk(ctx.tree)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# JAX003: host syncs on device values in hot paths
+# ---------------------------------------------------------------------------
+def _device_fn_names(ctx: ModuleCtx) -> Set[str]:
+    """Attribute/variable names bound to ``jax.jit(...)`` results anywhere
+    in the module — calls through these produce device values."""
+    names: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assign) and _jit_call_of(node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Attribute):
+                    names.add(t.attr)
+                elif isinstance(t, ast.Name):
+                    names.add(t.id)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_jit_call_of(d) or _is_jax_jit(d)
+                   for d in node.decorator_list):
+                names.add(node.name)
+    return names
+
+
+class _SyncChecker(ast.NodeVisitor):
+    """Per-iteration host syncs only: a sync inside a ``for``/``while``
+    body blocks the dispatch pipeline every step; a single transfer
+    after the loop is the idiomatic fix and is not flagged."""
+
+    def __init__(self, ctx: ModuleCtx, qualname: str, device_fns: Set[str],
+                 findings: List[Finding]) -> None:
+        self.ctx = ctx
+        self.qualname = qualname
+        self.device_fns = device_fns
+        self.findings = findings
+        self.device_vars: Set[str] = set()
+        self.loop_depth = 0
+
+    def visit_For(self, node: ast.For) -> None:
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    def visit_While(self, node: ast.While) -> None:
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    def _is_device_call(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Call):
+            f = node.func
+            leaf = f.attr if isinstance(f, ast.Attribute) else (
+                f.id if isinstance(f, ast.Name) else "")
+            return leaf in self.device_fns
+        return False
+
+    def _is_device_expr(self, node: ast.AST) -> bool:
+        if self._is_device_call(node):
+            return True
+        if isinstance(node, ast.Name):
+            return node.id in self.device_vars
+        if isinstance(node, ast.Subscript):
+            return self._is_device_expr(node.value)
+        if isinstance(node, (ast.Attribute,)):
+            return False
+        return any(self._is_device_expr(c) for c in ast.iter_child_nodes(node))
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.visit(node.value)
+        if self._is_device_expr(node.value):
+            for t in node.targets:
+                self.device_vars.update(assigned_names(t))
+                if isinstance(t, ast.Tuple):
+                    for el in t.elts:
+                        self.device_vars.update(assigned_names(el))
+        else:
+            for t in node.targets:
+                self.device_vars.difference_update(assigned_names(t))
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self.generic_visit(node)
+        fname = dotted_name(node.func)
+        leaf = fname.split(".")[-1] if fname else ""
+        is_sync = (
+            (isinstance(node.func, ast.Attribute) and node.func.attr == "item"
+             and not node.args)
+            or (leaf in _SYNC_CALLS and fname == leaf and node.args)
+            or fname in ("np.asarray", "numpy.asarray", "np.array",
+                         "numpy.array"))
+        if not is_sync or self.loop_depth == 0:
+            return
+        target = (node.func.value if isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "item" else
+                  (node.args[0] if node.args else None))
+        if target is not None and self._is_device_expr(target):
+            self.findings.append(Finding(
+                rule="JAX003", path=self.ctx.rel, line=node.lineno,
+                context=self.qualname, detail=unparse(node),
+                message=f"host sync `{unparse(node)}` on a device value "
+                        f"in a serving hot path — blocks the dispatch "
+                        f"pipeline every step"))
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        return
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+
+def check_host_syncs(ctx: ModuleCtx,
+                     hot: Optional[Iterable[str]] = None) -> List[Finding]:
+    prefixes = tuple(hot) if hot is not None else HOT_PATH_PREFIXES
+    if not any(ctx.modname.startswith(p) or ctx.modname == p.rstrip(".")
+               for p in prefixes):
+        return []
+    device_fns = _device_fn_names(ctx)
+    if not device_fns:
+        return []
+    findings: List[Finding] = []
+    stack: List[ast.AST] = []
+
+    def walk(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qn = _qualname(stack + [child])
+                chk = _SyncChecker(ctx, qn, device_fns, findings)
+                for st in child.body:
+                    chk.visit(st)
+                stack.append(child)
+                walk(child)
+                stack.pop()
+            elif isinstance(child, ast.ClassDef):
+                stack.append(child)
+                walk(child)
+                stack.pop()
+            else:
+                walk(child)
+
+    walk(ctx.tree)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# JAX004: jit sites must have a declared cache owner (trace budget)
+# ---------------------------------------------------------------------------
+def check_jit_declared(ctx: ModuleCtx,
+                       budgets: Optional[Dict[str, int]] = None,
+                       sites: Optional[List[JitSite]] = None
+                       ) -> List[Finding]:
+    if budgets is None:
+        from .trace_budget import TRACE_BUDGETS
+        budgets = TRACE_BUDGETS
+    findings: List[Finding] = []
+    for site in (sites if sites is not None else collect_jit_sites(ctx)):
+        if site.key not in budgets:
+            findings.append(Finding(
+                rule="JAX004", path=ctx.rel, line=site.line,
+                context=site.context, detail=site.key,
+                message=f"jax.jit site `{site.key}` has no trace budget in "
+                        f"repro.analysis.trace_budget.TRACE_BUDGETS — "
+                        f"declare its cache owner and retrace budget"))
+    return findings
+
+
+def check_module(ctx: ModuleCtx,
+                 hot: Optional[Iterable[str]] = None,
+                 budgets: Optional[Dict[str, int]] = None) -> List[Finding]:
+    """All JAX rules for one module."""
+    sites = collect_jit_sites(ctx)
+    out: List[Finding] = []
+    out += check_traced_branching(ctx, sites)
+    out += check_key_reuse(ctx)
+    out += check_host_syncs(ctx, hot)
+    out += check_jit_declared(ctx, budgets, sites)
+    return out

@@ -55,7 +55,8 @@ def load_model(arch: str, smoke: bool = False) -> ModelDef:
     return load_arch(arch, smoke=smoke)
 
 
-def _checked_kwargs(kwargs: Dict[str, Any], cls, what: str) -> Dict[str, Any]:
+def _checked_kwargs(kwargs: Dict[str, Any], cls: type,
+                    what: str) -> Dict[str, Any]:
     """Reject keys that are not fields of the target config dataclass —
     the recipe must fail loudly instead of silently dropping a knob."""
     fields = {f.name for f in dataclasses.fields(cls)}
@@ -180,11 +181,11 @@ class PruneRecipe:
             return cls.from_dict(json.load(f))
 
 
-def prune(model: ModelDef, params: Any, calib: Sequence[Dict],
+def prune(model: ModelDef, params: Any, calib: Sequence[Dict[str, Any]],
           recipe: PruneRecipe,
           sched: Optional[SchedulerConfig] = None,
           executor: Optional[MeshExecutor] = None
-          ) -> Tuple[Any, List[OperatorReport], Dict]:
+          ) -> Tuple[Any, List[OperatorReport], Dict[str, Any]]:
     """Prune ``params`` per the recipe.  Returns (pruned params, per-operator
     reports, scheduler stats) — the single entry point every launcher uses.
 
@@ -201,6 +202,6 @@ def prune(model: ModelDef, params: Any, calib: Sequence[Dict],
                           executor=executor)
 
 
-def calibration_for(recipe: PruneRecipe, corpus) -> List[Dict]:
+def calibration_for(recipe: PruneRecipe, corpus: Any) -> List[Dict[str, Any]]:
     """Sample the recipe's calibration batches from a corpus."""
     return calibration_batches(corpus, recipe.calib_config())

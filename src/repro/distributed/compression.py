@@ -68,7 +68,8 @@ def compressed_allreduce(mesh: Mesh, grads: Any, residuals: Any,
 
         fn = shard_map(local, mesh=mesh,
                        in_specs=(P(data_axis), P(data_axis)),
-                       out_specs=(P(data_axis), P(data_axis)))
+                       out_specs=(P(data_axis), P(data_axis)),
+                       check_rep=True)  # MESH001: explicit contract
         mean, new_r = fn(g, r)
         return mean, new_r
 

@@ -83,7 +83,8 @@ def pipeline_apply(mesh: Mesh, stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarra
         return jax.lax.psum(outputs * mask, axis)
 
     in_specs = (tree_map_with_path(lambda p, l: P(axis), stage_params), P())
-    fn = shard_map(per_stage, mesh=mesh, in_specs=in_specs, out_specs=P())
+    fn = shard_map(per_stage, mesh=mesh, in_specs=in_specs, out_specs=P(),
+                   check_rep=True)  # MESH001: explicit contract
     return fn(stage_params, xs)
 
 

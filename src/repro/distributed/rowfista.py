@@ -74,7 +74,8 @@ def sharded_accumulate(mesh: Mesh, stats: GramStats, x_dense: jnp.ndarray,
         local, mesh=mesh,
         in_specs=(P(None, None), P(None, None), P(None, None), P(), P(),
                   P(data_axis), P(data_axis), P(data_axis)),
-        out_specs=(P(None, None), P(None, None), P(None, None), P(), P()))
+        out_specs=(P(None, None), P(None, None), P(None, None), P(), P()),
+        check_rep=True)  # MESH001: explicit contract
     G, C, H, h, cnt = fn(stats.G, stats.C, stats.H, stats.h, stats.count,
                          x_dense, x_pruned, wx_dense)
     return GramStats(G=G, C=C, H=H, h=h, count=cnt)

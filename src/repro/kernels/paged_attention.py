@@ -247,7 +247,7 @@ def _mlp_kernel(x_ref, *rest, act: str, gated: bool):
 
 @functools.partial(jax.jit, static_argnames=("act", "bf", "interpret"))
 def fused_mlp24(x: jnp.ndarray, w1_vals, w1_meta, b1, up_vals, up_meta,
-                w2_vals, w2_meta, b2, *, act: str = "silu", bf: int = 256,
+                w2_vals, w2_meta, b2, *, act: str = "silu", bf: int = 512,
                 interpret: bool = False) -> jnp.ndarray:
     """Whole decode MLP in one pallas_call over packed-2:4 operands.
 
@@ -255,7 +255,9 @@ def fused_mlp24(x: jnp.ndarray, w1_vals, w1_meta, b1, up_vals, up_meta,
     packed (f, d) (pass None for the fc1/fc2 form); ``w2`` (down or fc2)
     packed (d_out, f).  ``b1`` (f,) / ``b2`` (d_out,) may be None.
     Grid over d_ff tiles of ``bf``; the hidden activation tile lives and
-    dies in VMEM — HBM traffic is x + packed weights + out.
+    dies in VMEM — HBM traffic is x + packed weights + out.  ``bf``
+    defaults to 512 so the quarter-width w2 meta tile (d_out, bf/4)
+    stays 128-lane aligned (PAL003).
     """
     B, d = x.shape
     f = w1_vals.shape[0]

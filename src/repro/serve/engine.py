@@ -207,10 +207,13 @@ class Engine:
             token = nxt
             pos0 = P
 
-        out = [np.asarray(token)]
+        # tokens stay on device through the decode loop — a per-step
+        # np.asarray would block the dispatch pipeline every token
+        # (JAX003); one transfer after the loop
+        out = [token]
         for t in range(n_new - 1):
             keys = sampling.step_keys(req_keys, t + 1)
             token, state = self._decode_fn(self._exec_params, state, token,
                                            jnp.int32(pos0 + t), keys)
-            out.append(np.asarray(token))
-        return np.concatenate(out, axis=1)
+            out.append(token)
+        return np.asarray(jnp.concatenate(out, axis=1))

@@ -81,11 +81,11 @@ def evaluate_ppl(model: ModelDef, params, corpus: MarkovCorpus, batch: int,
     """Held-out perplexity (teacher-forced CE on the valid split)."""
     tot, cnt = 0.0, 0
     it = corpus.batches(batch, seq, split="valid")
-
-    @jax.jit
-    def ce(params, b):
-        l, m = model.loss(params, b)
-        return m["ce"]
+    # reuse the eval subsystem's weak-keyed per-model CE closure: a fresh
+    # @jax.jit here would re-trace on every evaluate_ppl call (JAX004 /
+    # the PR 6 executable-accumulation class)
+    from repro.eval.perplexity import _ce_fn
+    ce = _ce_fn(model)
 
     for _ in range(n_batches):
         _, toks = next(it)

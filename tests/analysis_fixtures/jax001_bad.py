@@ -1,0 +1,21 @@
+"""JAX001 true-positive: Python control flow on traced values inside
+jitted functions (this file is parsed by the analyzer, never imported)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branch_on_tracer(x):
+    if x > 0:                       # JAX001: traced `if`
+        return x
+    return -x
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def loop_on_tracer(x, iters):
+    r = x * 2
+    while r.sum() > 1.0:            # JAX001: traced `while` (derived value)
+        r = r * 0.5
+    return r

@@ -1,0 +1,23 @@
+"""JAX001 true-negatives: static/detainted branching a jitted function
+may legitimately do (parsed by the analyzer, never imported)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+executor = None
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def fine(x, L, causal):
+    if causal:                      # static arg
+        x = x * 2
+    if L is None:                   # `is None` detaints
+        L = jnp.float32(1.0)
+    if x.shape[0] > 4:              # shape projection detaints
+        x = x[:4]
+    n = x.shape[-1]
+    assert n % 4 == 0               # static int derived from shape
+    if executor is not None:        # closure/global, not a param
+        x = x + 1
+    return jnp.where(x > 0, x, -x) / L

@@ -1,0 +1,15 @@
+"""JAX002 true-positives: PRNG key reuse (parsed, never imported)."""
+import jax
+
+
+def double_spend(key, shape):
+    a = jax.random.normal(key, shape)     # spends `key`
+    b = jax.random.normal(key, shape)     # JAX002: reuse without split
+    return a + b
+
+
+def unfolded_loop(key, n):
+    out = []
+    for i in range(n):
+        out.append(jax.random.uniform(key))   # JAX002: same key each iter
+    return out

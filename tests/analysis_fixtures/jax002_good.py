@@ -1,0 +1,24 @@
+"""JAX002 true-negatives: disciplined key handling (parsed only)."""
+import jax
+
+
+def split_spend(key, shape):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, shape)
+    b = jax.random.normal(k2, shape)
+    return a + b
+
+
+def folded_loop(key, n):
+    out = []
+    for i in range(n):
+        ki = jax.random.fold_in(key, i)       # key advanced per iteration
+        out.append(jax.random.uniform(ki))
+    return out
+
+
+def resplit_between_uses(key, shape):
+    a = jax.random.normal(key, shape)
+    key, sub = jax.random.split(key)          # rebound: fresh key
+    b = jax.random.normal(key, shape)
+    return a + b + jax.random.normal(sub, shape)

@@ -1,0 +1,20 @@
+"""JAX003 true-positive: per-iteration host sync on a device value in a
+hot path (parsed with hot=("tests.analysis_fixtures",), never imported)."""
+import jax
+import numpy as np
+
+
+def _step(params, token):
+    return token + 1
+
+
+_step_fn = jax.jit(_step)
+
+
+def decode_loop(params, token, n):
+    out = []
+    for t in range(n):
+        token = _step_fn(params, token)
+        out.append(np.asarray(token))       # JAX003: sync every token
+        last = float(token)                 # JAX003: and again
+    return out, last

@@ -1,0 +1,21 @@
+"""JAX003 true-negatives: device values stay on device through the
+loop; host conversion happens once, after (parsed only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _step(params, token):
+    return token + 1
+
+
+_step_fn = jax.jit(_step)
+
+
+def decode_loop(params, token, n, prompts):
+    out = [token]
+    for t in range(n):
+        token = _step_fn(params, token)
+        out.append(token)                    # stays on device
+        host = np.asarray(prompts[t])        # host data, not a device sync
+    return np.asarray(jnp.concatenate(out)), host  # one post-loop transfer

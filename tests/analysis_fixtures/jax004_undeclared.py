@@ -1,0 +1,13 @@
+"""JAX004 fixture: jit sites with and without declared budgets (the test
+passes a budgets table containing only `declared_fn`)."""
+import jax
+
+
+@jax.jit
+def declared_fn(x):
+    return x * 2
+
+
+@jax.jit
+def undeclared_fn(x):                        # JAX004 under the test table
+    return x + 1

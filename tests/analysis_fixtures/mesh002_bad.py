@@ -1,0 +1,13 @@
+"""MESH002 true-positive: sampling from possibly-sharded logits without
+replicate_logits domination (parsed only, never imported)."""
+import jax
+
+from repro.serve import sampling
+
+
+def bad_categorical(key, logits):
+    return jax.random.categorical(key, logits)        # MESH002
+
+
+def bad_sample(logits, keys, temperature):
+    return sampling.sample(logits, keys, temperature)  # MESH002

@@ -1,0 +1,15 @@
+"""MESH002 true-negatives: logits replicated before sampling."""
+import jax
+
+from repro.serve import sampling
+
+
+def good_categorical(executor, key, logits):
+    logits = executor.replicate_logits(logits)
+    return jax.random.categorical(key, logits)
+
+
+def good_sample(executor, logits, keys, temperature):
+    full = executor.replicate_logits(logits)
+    scaled = full / 2.0                       # projections stay replicated
+    return sampling.sample(scaled, keys, temperature)
