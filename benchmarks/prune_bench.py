@@ -7,10 +7,11 @@ groups of a decoder layer), both configured through ``PruneRecipe``:
 * ``rows`` — Algorithm 1 under its three outer-loop implementations
   (``host`` reference / ``fused`` device-resident / ``fused-group``
   vmap-batched), the PR-1 speedup trajectory;
-* ``solver_matrix`` — one row per registered solver (fista, admm, wanda,
-  sparsegpt) per sparsity: wall-clock, mean relative error, batched-op
-  share.  This is the extensibility surface made measurable — a newly
-  registered solver shows up here by adding its name to ``MATRIX``.
+* ``solver_matrix`` — one row per registered solver (fista, admm,
+  frankwolfe, wanda, sparsegpt) per sparsity: wall-clock, mean relative
+  error, batched-op share.  This is the extensibility surface made
+  measurable — a newly registered solver shows up here by adding its
+  name to ``MATRIX``.
 
 Unlike the kernel microbenchmarks, wall-clock is meaningful here on any
 backend: the fused paths remove host<->device round trips, which cost on
@@ -40,7 +41,7 @@ OUT_PATH = "BENCH_prune.json"
 MESH_OUT_PATH = "BENCH_prune_mesh.json"
 
 SPARSITIES = ("50%", "2:4")
-MATRIX = ("fista", "admm", "wanda", "sparsegpt")
+MATRIX = ("fista", "admm", "frankwolfe", "wanda", "sparsegpt")
 
 # paper-default solver depth (K=20), deep enough that the solve dominates
 # the unit wall-clock; shared by every fista-family recipe below
@@ -244,7 +245,8 @@ def bench_mesh_gram(device_counts=(1, 8)) -> Dict:
 def run_all(out_path: str = OUT_PATH) -> List[Dict]:
     print("\n== Prune solver bench (host vs fused vs group-batched) ==")
     rows = bench_prune_impls()
-    print("\n== Per-solver matrix (fista / admm / wanda / sparsegpt) ==")
+    print("\n== Per-solver matrix (fista / admm / frankwolfe / wanda /"
+          " sparsegpt) ==")
     matrix = bench_solver_matrix()
     print("\n== Mesh-native Gram accumulation (1 vs 8 fake devices) ==")
     mesh_gram = bench_mesh_gram()

@@ -52,6 +52,8 @@ TRACE_BUDGETS: Dict[str, int] = {
     "repro.core.fista:kkt_residual": 8,
     "repro.core.admm:_admm_single": 8,
     "repro.core.admm:_admm_group": 8,
+    "repro.core.frankwolfe:_fw_single": 8,
+    "repro.core.frankwolfe:_fw_group": 8,
     "repro.core.baselines:_sparsegpt_block": 8,
     "repro.core.gram:accumulate": 8,
     "repro.core.gram:target_correlation": 8,

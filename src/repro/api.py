@@ -44,7 +44,9 @@ ARCH_CHOICES: Tuple[str, ...] = tuple(ALL_ARCHS) + ("opt125m-proxy",)
 #: launch/prune.py, consumed by launch/evaluate.py and the serve path)
 DENSE_MODEL, PRUNED_MODEL = "dense_model", "pruned_model"
 
-_CORRECTIONS = ("intra", "none", "full")
+#: error-correction modes (core/sequential.py): "intra" is the paper's
+#: layer-local correction; "full"/"cross" relay across units (serial)
+_CORRECTIONS = ("intra", "none", "full", "cross")
 
 
 def load_model(arch: str, smoke: bool = False) -> ModelDef:

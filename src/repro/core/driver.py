@@ -11,8 +11,9 @@ unit boundary), the driver:
    checkpoint/resume;
 3. merges the per-unit pruned weights back into the model params.
 
-``error_correction="full"`` is inherently serial (unit k+1 consumes unit
-k's pruned output) and falls back to the serial path in sequential.py.
+``error_correction="full"`` and ``"cross"`` are inherently serial (unit
+k+1 consumes unit k's pruned output) and fall back to the serial path in
+sequential.py.
 """
 from __future__ import annotations
 
@@ -57,9 +58,10 @@ def parallel_prune(model: ModelDef, params: Any, calib_batches: Sequence[Dict],
     executor = cfg.executor
     mesh_info = executor.describe() if executor is not None \
         else {"data": 1, "model": 1, "devices": 1}
-    if cfg.error_correction == "full":
+    if cfg.error_correction in ("full", "cross"):
         new_params, reports = seq_lib.prune_model(model, params, calib_batches, cfg)
-        return new_params, reports, {"mode": "serial-full", "mesh": mesh_info}
+        return new_params, reports, {"mode": f"serial-{cfg.error_correction}",
+                                     "mesh": mesh_info}
 
     units = {spec.name: spec for spec in model.units()}
     unit_inputs = _dense_unit_inputs(model, params, calib_batches,

@@ -1,0 +1,217 @@
+"""Projection-free Frank-Wolfe backend for the layer-wise pruning objective.
+
+Solves the same Gram-form problem as FISTAPruner (core/gram.py)
+
+    min_Y  1/2 ||Y X* - W X||_F^2   s.t.  Y in S(spec)
+
+by relaxing S to the convex hull of a k-sparse L2 ball ("Don't Be Greedy,
+Just Relax!", arXiv:2510.13713): atoms are tau-radius matrices supported
+on the top-k entries of the gradient, so the linear minimization oracle
+is a single top-k — no projection, no factorization:
+
+    grad  = Y G - B
+    s     = -tau * P_k(grad) / ||P_k(grad)||_F     # LMO: top-k of |grad|
+    gamma = clip(<grad, Y - s> / <(s-Y) G, s-Y>, 0, 1)   # exact line search
+    Y    <- Y + gamma (s - Y)
+
+P_k keeps the spec's own pattern (global top-k for unstructured, per-group
+top-n for n:m), every iterate stays in the hull, and the quadratic's exact
+line search makes the objective monotone non-increasing.  Each iterate is
+rounded (core/sparsity.round_to) into a feasible candidate; the best
+candidate by exact Gram-form error is tracked (strict improvement only,
+so re-solving an already-optimal feasible point is a bitwise no-op), then
+polished with support-restricted projected-gradient steps — the same
+cheap back-solve analog the ADMM backend uses.
+
+Like the fused FISTA outer loop (core/pruner.py) and ADMM (core/admm.py),
+the whole solve is one ``lax.while_loop`` inside a single jitted
+computation — zero per-iteration host syncs — and ``vmap``s across stacked
+same-shape operators for the group-batched path.  Registered as solver
+"frankwolfe" in core/solvers.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as baselines_lib
+from repro.core import gram as gram_lib
+from repro.core.gram import GramStats
+from repro.core.pruner import PruneResult, _make_result
+from repro.core.sparsity import SparsitySpec, mask_nm_by_score, round_to
+
+
+@dataclasses.dataclass(frozen=True)
+class FrankWolfeConfig:
+    """Defaults tuned for parity with the FISTA/ADMM paths at golden-test
+    scale (tests/test_golden_solvers.py)."""
+
+    max_iters: int = 64           # FW iterations (while_loop bound)
+    tol: float = 1e-6             # stop when dual gap <= tol * h
+    radius_rel: float = 1.25      # atom L2 radius relative to ||warm||_F
+    polish_iters: int = 16        # masked projected-gradient steps at the end
+    warm_start: str = "wanda"     # wanda | sparsegpt | magnitude | dense
+
+
+def keep_count(shape: Sequence[int], spec: SparsitySpec) -> int:
+    """Entries the spec keeps nonzero (the LMO's k / the support budget)."""
+    size = int(np.prod(shape))
+    if spec.kind == "nm":
+        return size * spec.n // spec.m
+    return size - int(round(spec.ratio * size))
+
+
+def lmo_atom(grad: jnp.ndarray, spec: SparsitySpec,
+             tau: jnp.ndarray) -> jnp.ndarray:
+    """argmin_{s in tau-radius k-sparse L2 ball} <grad, s>.
+
+    The minimizer is supported on the spec-pattern top-k of |grad| and
+    points along -grad there, scaled to the ball radius.
+    """
+    if spec.kind == "nm":
+        mask = mask_nm_by_score(jnp.abs(grad), spec.n, spec.m)
+    else:
+        size = grad.size
+        k = keep_count(grad.shape, spec)
+        if k <= 0:
+            mask = jnp.zeros(grad.shape, bool)
+        elif k >= size:
+            mask = jnp.ones(grad.shape, bool)
+        else:
+            _, idx = jax.lax.top_k(jnp.abs(grad).reshape(-1), k)
+            mask = (jnp.zeros((size,), bool).at[idx].set(True)
+                    .reshape(grad.shape))
+    g = jnp.where(mask, grad, 0.0)
+    return -tau * g / (jnp.linalg.norm(g) + 1e-12)
+
+
+def fw_step(y: jnp.ndarray, G: jnp.ndarray, B: jnp.ndarray,
+            spec: SparsitySpec, tau: jnp.ndarray) -> tuple:
+    """One Frank-Wolfe iteration with exact line search on the quadratic.
+
+    Returns ``(y_next, gap)`` where ``gap = <grad, y - s> >= f(y) - f*``
+    is the Frank-Wolfe dual gap (nonnegative whenever y is in the hull).
+    Exact line search guarantees f(y_next) <= f(y).
+    """
+    grad = y @ G - B
+    s = lmo_atom(grad, spec, tau)
+    d = s - y
+    gap = -jnp.sum(grad * d)
+    curv = jnp.sum((d @ G) * d)
+    gamma = jnp.clip(gap / jnp.maximum(curv, 1e-12), 0.0, 1.0)
+    return y + gamma * d, gap
+
+
+class FwState(NamedTuple):
+    """while_loop carry (all device arrays)."""
+
+    y: jnp.ndarray        # current hull iterate (not necessarily feasible)
+    z_best: jnp.ndarray   # best ROUNDED (feasible) candidate so far
+    e_best: jnp.ndarray   # its exact error ||Z X* - W X||_F
+    gap: jnp.ndarray      # dual gap of the last step
+    k: jnp.ndarray        # int32 iterations executed
+
+
+def _fused_fw(G: jnp.ndarray, B: jnp.ndarray, h: jnp.ndarray,
+              w0: jnp.ndarray, spec: SparsitySpec,
+              cfg: FrankWolfeConfig) -> tuple:
+    """One XLA computation: FW loop + per-iterate rounding + support polish.
+
+    Returns (z_best, e_best, iters, warm_error, tau).
+    """
+    z0 = round_to(w0.astype(jnp.float32), spec)
+    e0 = gram_lib.frob_error_gh(G, h, z0, B)
+    tau = cfg.radius_rel * jnp.linalg.norm(z0) + 1e-8
+    gap_floor = cfg.tol * (h + 1e-8)
+    state = FwState(y=z0, z_best=z0, e_best=e0,
+                    gap=jnp.float32(jnp.inf), k=jnp.int32(0))
+
+    def cond(s: FwState):
+        return (s.k < cfg.max_iters) & (s.gap >= gap_floor)
+
+    def body(s: FwState) -> FwState:
+        y, gap = fw_step(s.y, G, B, spec, tau)
+        z = round_to(y, spec)
+        e = gram_lib.frob_error_gh(G, h, z, B)
+        better = e < s.e_best      # strict: ties keep the earlier candidate
+        z_best = jnp.where(better, z, s.z_best)
+        e_best = jnp.where(better, e, s.e_best)
+        return FwState(y, z_best, e_best, gap, s.k + 1)
+
+    out = jax.lax.while_loop(cond, body, state)
+
+    # polish: projected gradient restricted to the winning support (keeps
+    # feasibility — zeros stay zero, so the spec is still satisfied exactly)
+    mask = out.z_best != 0
+    inv_l = 1.0 / jnp.maximum(gram_lib.max_eigval(G) * 1.01, 1e-12)
+
+    def pbody(_, z):
+        return jnp.where(mask, z - inv_l * (z @ G - B), 0.0)
+
+    z_pol = jax.lax.fori_loop(0, cfg.polish_iters, pbody, out.z_best)
+    e_pol = gram_lib.frob_error_gh(G, h, z_pol, B)
+    z_fin = jnp.where(e_pol < out.e_best, z_pol, out.z_best)
+    e_fin = jnp.minimum(e_pol, out.e_best)
+    return z_fin, e_fin, out.k, e0, tau
+
+
+def _solve_one(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
+               cfg: FrankWolfeConfig, warm: str) -> tuple:
+    w = w.astype(jnp.float32)
+    B = gram_lib.target_correlation(stats, w)
+    w0 = baselines_lib.warm_start(warm, w, stats, spec)
+    return _fused_fw(stats.G, B, stats.h, w0, spec, cfg)
+
+
+@partial(jax.jit, static_argnames=("spec", "cfg", "warm"))
+def _fw_single(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
+               cfg: FrankWolfeConfig, warm: str) -> tuple:
+    return _solve_one(w, stats, spec, cfg, warm)
+
+
+@partial(jax.jit, static_argnames=("spec", "cfg", "warm"))
+def _fw_group(ws: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
+              cfg: FrankWolfeConfig, warm: str) -> tuple:
+    return jax.vmap(lambda w, st: _solve_one(w, st, spec, cfg, warm))(ws, stats)
+
+
+def prune_operator_fw(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
+                      cfg: FrankWolfeConfig = FrankWolfeConfig(),
+                      warm: Optional[str] = None) -> PruneResult:
+    """Prune one operator ``w`` (paper layout (out, in)) with Frank-Wolfe."""
+    w = jnp.asarray(w, jnp.float32)
+    z, e, k, e0, tau = _fw_single(w, stats, spec, cfg,
+                                  cfg.warm_start if warm is None else warm)
+    return _make_result(z.astype(w.dtype), float(e), float(tau), int(k), 0,
+                        float(e0), float(stats.h))
+
+
+def prune_group_fw(ws: Union[jnp.ndarray, Sequence[jnp.ndarray]],
+                   stats: Union[GramStats, Sequence[GramStats]],
+                   spec: SparsitySpec,
+                   cfg: FrankWolfeConfig = FrankWolfeConfig(),
+                   warm: Optional[str] = None) -> List[PruneResult]:
+    """vmap-batched FW over stacked same-shape operators (one dispatch)."""
+    if isinstance(ws, (list, tuple)):
+        shapes = {tuple(jnp.asarray(w).shape) for w in ws}
+        if len(shapes) != 1:
+            raise ValueError(f"prune_group_fw needs same-shape operators, "
+                             f"got {shapes}")
+        ws = jnp.stack([jnp.asarray(w, jnp.float32) for w in ws])
+    else:
+        ws = jnp.asarray(ws, jnp.float32)
+    if isinstance(stats, (list, tuple)):
+        stats = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stats)
+    z, e, k, e0, tau = _fw_group(ws, stats, spec, cfg,
+                                 cfg.warm_start if warm is None else warm)
+    h_np = np.asarray(stats.h, np.float32)
+    e_np, k_np = np.asarray(e, np.float32), np.asarray(k, np.int32)
+    e0_np, tau_np = np.asarray(e0, np.float32), np.asarray(tau, np.float32)
+    return [_make_result(z[i], float(e_np[i]), float(tau_np[i]), int(k_np[i]),
+                         0, float(e0_np[i]), float(h_np[i]))
+            for i in range(ws.shape[0])]

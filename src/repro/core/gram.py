@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +55,11 @@ class GramStats:
     Shapes: ``G, C, H`` are (n, n) fp32, ``h`` scalar fp32, ``count`` the
     number of accumulated columns (tokens) — used for diagnostics only,
     the objective is scale-covariant.
+
+    ``extras`` carries the accumulators of NOVEL registered statistics
+    (core/solvers.py ``StatSpec.init``/``update``), keyed by stat name.
+    It is part of the pytree, so extras shard, psum and stack exactly
+    like the built-in Grams; empty for every built-in solver.
     """
 
     G: jnp.ndarray
@@ -62,9 +67,10 @@ class GramStats:
     H: jnp.ndarray
     h: jnp.ndarray
     count: jnp.ndarray
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def tree_flatten(self):
-        return (self.G, self.C, self.H, self.h, self.count), None
+        return (self.G, self.C, self.H, self.h, self.count, self.extras), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -80,9 +86,10 @@ class GramStats:
         return jnp.diag(self.H)
 
 
-def init_stats(n: int) -> GramStats:
+def init_stats(n: int, extras: Optional[Dict[str, Any]] = None) -> GramStats:
     z = jnp.zeros((n, n), jnp.float32)
-    return GramStats(G=z, C=z, H=z, h=jnp.float32(0.0), count=jnp.float32(0.0))
+    return GramStats(G=z, C=z, H=z, h=jnp.float32(0.0), count=jnp.float32(0.0),
+                     extras=dict(extras or {}))
 
 
 @jax.jit
@@ -105,14 +112,19 @@ def accumulate(stats: GramStats, x_dense: jnp.ndarray, x_pruned: jnp.ndarray,
         H=stats.H + xd.T @ xd,
         h=stats.h + jnp.sum(wx * wx),
         count=stats.count + jnp.float32(xd.shape[0]),
+        extras=stats.extras,       # novel stats update via their own hooks
     )
 
 
 def merge(a: GramStats, b: GramStats) -> GramStats:
     """Merge statistics accumulated on different shards (after psum this is
-    what the all-reduce computes; kept for host-side tree-reduction)."""
+    what the all-reduce computes; kept for host-side tree-reduction).
+    Extras merge additively — the contract every registered accumulator
+    must satisfy to be shardable."""
     return GramStats(G=a.G + b.G, C=a.C + b.C, H=a.H + b.H, h=a.h + b.h,
-                     count=a.count + b.count)
+                     count=a.count + b.count,
+                     extras=jax.tree_util.tree_map(
+                         lambda x, y: x + y, a.extras, b.extras))
 
 
 @jax.jit

@@ -15,6 +15,17 @@ paper's full pipeline (Sec. 3.1, Fig. 2):
     - "none"  (ablation): X* = X everywhere (Fig. 4a baseline)
     - "full"  (beyond-paper): X* relayed ACROSS units too — potentially
       more accurate, but serializes layers (noted in DESIGN.md)
+    - "cross" (beyond-paper): downstream units calibrate from the
+      REALIZED pruned activations of upstream units — both X and X*
+      start from the pruned relay at each unit input (the LLM-Surgeon
+      view: minimize ||Y X~ - W X~|| at the input the pruned net really
+      sees), with X* still relayed within the unit.  Serial, like "full".
+
+Which calibration statistics a unit accumulates is driven by the
+solver's DECLARED stat dependencies (core/solvers.py ``stat_deps``):
+the pruned-path forward runs only when a declared stat needs it, and
+novel registered stats are provisioned generically into
+``GramStats.extras`` — zero per-solver edits here.
 
 Memory: the relay keeps one unit's activations for the current
 calibration set (the group-stats scan stacks the micro-batches of that
@@ -53,7 +64,7 @@ class SequentialConfig:
     spec: SparsitySpec = SparsitySpec(ratio=0.5)
     pruner: PrunerConfig = PrunerConfig()    # legacy fista knobs (see below)
     method: str = "fista"            # registry name (core/solvers.py)
-    error_correction: str = "intra"  # intra | none | full
+    error_correction: str = "intra"  # intra | none | full | cross
     # canonical solver handle; when None the legacy (method, pruner) pair is
     # resolved through the registry with a DeprecationWarning.  PruneRecipe
     # (repro/api.py) always sets this.
@@ -171,13 +182,15 @@ def _capture_forward(model: ModelDef, spec: UnitSpec):
 
 
 @functools.partial(jax.jit, static_argnames=("unit_apply", "layer_index",
-                                             "group_keys", "ec_none"))
+                                             "group_keys", "ec_none",
+                                             "extra_specs"))
 def _group_stats_scan(init: Dict[str, GramStats], current: Any,
                       ws: Dict[str, jnp.ndarray],
                       dense_caps: Dict[str, jnp.ndarray],
                       pruned_states: Dict[str, jnp.ndarray], *,
                       unit_apply, layer_index: int,
-                      group_keys: Tuple[str, ...], ec_none: bool
+                      group_keys: Tuple[str, ...], ec_none: bool,
+                      extra_specs: Tuple[Any, ...] = ()
                       ) -> Dict[str, GramStats]:
     """Accumulate a whole group's GramStats in ONE jitted scan over the
     calibration micro-batches, continuing from ``init``.
@@ -187,8 +200,13 @@ def _group_stats_scan(init: Dict[str, GramStats], current: Any,
     ``current`` and every operator's G/C/H/h update run inside the scan
     body, so there is a single dispatch per same-shape run of batches
     instead of the seed's per-batch x per-key Python loops.  With
-    ``ec_none`` the pruned path is skipped entirely (X* = X, the Fig. 4a
-    ablation).
+    ``ec_none`` the pruned path is skipped entirely (X* = X: the Fig. 4a
+    ablation, and every solver whose declared stats are dense-path only).
+
+    ``extra_specs`` (StatSpec tuple, core/solvers.py) are the NOVEL
+    declared stats; their ``update`` hooks run in the same scan body and
+    their accumulators live in ``GramStats.extras`` — statically keyed,
+    so a re-registered hook re-traces instead of reusing a stale cache.
     """
 
     def body(acc, xs):
@@ -201,7 +219,16 @@ def _group_stats_scan(init: Dict[str, GramStats], current: Any,
         new = {}
         for key in group_keys:
             xd, xp = cap_d[key], cap_p[key]
-            new[key] = gram_lib.accumulate(acc[key], xd, xp, xd @ ws[key])
+            wx = xd @ ws[key]
+            st = gram_lib.accumulate(acc[key], xd, xp, wx)
+            if extra_specs:
+                flat = lambda a: a.reshape(-1, a.shape[-1])
+                extras = dict(st.extras)
+                for sp in extra_specs:
+                    extras[sp.name] = sp.update(extras[sp.name], flat(xd),
+                                                flat(xp), flat(wx))
+                st = dataclasses.replace(st, extras=extras)
+            new[key] = st
         return new, None
 
     out, _ = jax.lax.scan(body, init, (dense_caps, pruned_states))
@@ -247,14 +274,19 @@ def prune_unit(model: ModelDef, spec: UnitSpec, dense_unit: Any,
     reports: List[OperatorReport] = []
     # dense-path captures don't change while the unit is pruned: one pass
     dense_caps = [fwd(dense_unit, s)[1] for s in dense_states]
-    # the pruned-path forward is skipped in the "none" ablation AND for
-    # solvers that only read dense-path statistics.  In the latter case the
+    # provision exactly the solver's DECLARED stats (core/solvers.py):
+    # the pruned-path forward is skipped in the "none" ablation AND when
+    # no declared stat needs the pruned path.  In the latter case the
     # weights are unaffected, but the reported per-operator error becomes
     # the dense-path reconstruction error ||YX - WX|| (the standard metric
     # of the Wanda/SparseGPT literature) instead of the relay error
     # ||YX* - WX|| — cross-solver rel_error comparisons must account for
     # this (benchmarks tag each row with its error_stats mode).
-    ec_none = cfg.error_correction == "none" or not solver.wants_pruned_gram
+    stat_specs = tuple(solvers_lib.stat_spec(s)
+                       for s in solver.stats_required())
+    extra_specs = tuple(sp for sp in stat_specs if sp.is_extra)
+    ec_none = (cfg.error_correction == "none"
+               or not any(sp.needs_pruned_path for sp in stat_specs))
     buckets = _shape_buckets(dense_states)
     # the scan body never reads the pruned states when ec_none —
     # pass cheap placeholders instead of stacking a copy of every state
@@ -268,13 +300,18 @@ def prune_unit(model: ModelDef, spec: UnitSpec, dense_unit: Any,
         group_keys = tuple(group)
         ws = {k: get_weight(dense_unit, k) for k in group_keys}
         stats: Dict[str, GramStats] = {
-            k: gram_lib.init_stats(ws[k].shape[0]) for k in group_keys}
+            k: gram_lib.init_stats(
+                ws[k].shape[0],
+                extras={sp.name: sp.init(ws[k].shape[0])
+                        for sp in extra_specs})
+            for k in group_keys}
         for idx, pstacked in zip(buckets, pruned_stacked):
             caps_stacked = tree_stack([{k: dense_caps[i][k] for k in group_keys}
                                        for i in idx])
             static_kw = dict(unit_apply=model.unit_apply,
                              layer_index=spec.layer_index,
-                             group_keys=group_keys, ec_none=ec_none)
+                             group_keys=group_keys, ec_none=ec_none,
+                             extra_specs=extra_specs)
             if executor is not None and executor.can_shard_batches(len(idx)):
                 # data-parallel accumulation: per-shard Gram scan + one
                 # psum over "data" (DESIGN.md §10)
@@ -314,11 +351,14 @@ def prune_unit(model: ModelDef, spec: UnitSpec, dense_unit: Any,
                 reports.append(rep)
                 current = set_weight(current, key, res.weight.T)
 
-    # relay: pruned next states through the fully-pruned unit
-    pruned_next = []
-    for b in range(len(pruned_states)):
-        nxt, _ = fwd(current, pruned_states[b])
-        pruned_next.append(nxt)
+    # relay: pruned next states through the fully-pruned unit — only the
+    # serial cross-unit modes consume them.  Under "intra"/"none" the
+    # caller discards the relay, so skip the capture forwards entirely
+    # (on grouped MoE units each one is a per-expert capture loop).
+    if cfg.error_correction in ("full", "cross"):
+        pruned_next = [fwd(current, s)[0] for s in pruned_states]
+    else:
+        pruned_next = []
     return current, reports, pruned_next
 
 
@@ -341,19 +381,29 @@ def prune_model(model: ModelDef, params: Any, calib_batches: Sequence[Dict],
     for spec in units:
         dense_unit = _unit_params_of(params, spec)
         if cfg.error_correction == "full":
-            unit_in_pruned = pruned_states
+            # beyond-paper: X stays dense-relayed, X* relays across units
+            unit_in_dense, unit_in_pruned = dense_states, pruned_states
+        elif cfg.error_correction == "cross":
+            # cross-unit realized calibration: BOTH paths start from the
+            # activations the pruned net actually produces at this unit's
+            # input (targets become W X~, LLM-Surgeon style); X* still
+            # relays within the unit through the pruned prefix
+            unit_in_dense = pruned_states
+            unit_in_pruned = [dict(s) for s in pruned_states]
         else:  # paper: units are independent — pruned stream restarts at
-            unit_in_pruned = [dict(s) for s in dense_states]  # the dense input
+            unit_in_dense = dense_states                      # the dense input
+            unit_in_pruned = [dict(s) for s in dense_states]
         pruned_unit, reps, pruned_next = prune_unit(
-            model, spec, dense_unit, dense_states, unit_in_pruned, cfg)
+            model, spec, dense_unit, unit_in_dense, unit_in_pruned, cfg)
         reports.extend(reps)
         new_params = _write_unit_params(new_params, spec, pruned_unit)
         # advance the dense relay (and post-unit hooks, e.g. whisper enc_norm)
         fwd = _capture_forward(model, spec)
-        dense_states = [fwd(dense_unit, s)[0] for s in dense_states]
-        dense_states = [model.post_unit(params, spec.layer_index, s)
-                        for s in dense_states]
-        if cfg.error_correction == "full":
+        if cfg.error_correction != "cross":   # cross never reads it again
+            dense_states = [fwd(dense_unit, s)[0] for s in dense_states]
+            dense_states = [model.post_unit(params, spec.layer_index, s)
+                            for s in dense_states]
+        if cfg.error_correction in ("full", "cross"):
             pruned_states = [model.post_unit(new_params, spec.layer_index, s)
                              for s in pruned_next]
         if progress is not None:

@@ -11,15 +11,24 @@ owns exactly that per-operator solve:
     solve(w, stats, spec) -> PruneResult          # paper layout (out, in)
     solve_group(ws, stats, spec) -> [PruneResult] # same-shape batch
 
-plus two capability flags the pipeline consults:
+plus two capabilities the pipeline consults:
 
 * ``supports_group_batch`` — the solver can batch all same-shape
   operators of a pruning group into one dispatch (core/sequential.py
   partitions groups by shape and calls ``solve_group``);
-* ``wants_pruned_gram``    — the solver reads the pruned-path statistics
-  G = X* X*^T / C = X X*^T.  When no solver in play wants them, the
+* ``stat_deps``            — the names of the registered calibration
+  statistics the solver reads (see :func:`register_stat`).  The built-in
+  stats are ``dense_gram`` (H = X X^T, always accumulated) and
+  ``pruned_gram`` (G = X* X*^T / C = X X*^T, which requires the
+  pruned-path forward).  core/sequential.py provisions exactly the
+  declared stats: when no stat in play needs the pruned path, the
   group-stats scan skips the pruned-path forward entirely (the baselines
-  only read the dense-path H / diag(H)).
+  only read the dense-path H / diag(H)).  A solver may register a novel
+  stat (``StatSpec`` with ``init``/``update`` hooks) and declare it —
+  the scan accumulates it into ``GramStats.extras`` with zero edits to
+  the pipeline.  ``wants_pruned_gram`` remains as a derived read-only
+  view (and legacy solvers that still declare it as a plain bool are
+  honored by :meth:`LayerSolver.stats_required`).
 
 Adding a method is one registered class — zero edits to
 core/sequential.py, the driver, or the launchers:
@@ -43,12 +52,88 @@ import numpy as np
 
 from repro.core import admm as admm_lib
 from repro.core import baselines as baselines_lib
+from repro.core import frankwolfe as fw_lib
 from repro.core import gram as gram_lib
 from repro.core import pruner as pruner_lib
 from repro.core.admm import AdmmConfig
+from repro.core.frankwolfe import FrankWolfeConfig
 from repro.core.gram import GramStats
 from repro.core.pruner import PruneResult, PrunerConfig, _make_result
 from repro.core.sparsity import SparsitySpec
+
+
+# ---------------------------------------------------------------------------
+# calibration-statistic registry (the declared stats-dependency contract)
+# ---------------------------------------------------------------------------
+#: registry names of the two built-in statistics every GramStats carries
+DENSE_GRAM = "dense_gram"    # H = X X^T (+ h, count): dense-path only
+PRUNED_GRAM = "pruned_gram"  # G = X* X*^T / C = X X*^T: needs pruned forward
+
+
+@dataclasses.dataclass(frozen=True)
+class StatSpec:
+    """One named calibration statistic the stats scan can provision.
+
+    ``needs_pruned_path`` marks stats that read the pruned-path
+    activations X*: the per-group scan only runs the (expensive)
+    pruned-path forward when some declared stat needs it.
+
+    Built-in stats live directly on :class:`~repro.core.gram.GramStats`
+    and leave ``init``/``update`` as None.  A NOVEL stat provides both
+    hooks and its accumulator is carried in ``GramStats.extras[name]``:
+
+        init(n)                    -> initial accumulator for an operator
+                                      with n input features
+        update(acc, xd, xp, wx)    -> new accumulator given one batch's
+                                      (p, n) dense / pruned activations
+                                      and (p, m) dense targets (traced —
+                                      must be jit-compatible)
+    """
+
+    name: str
+    needs_pruned_path: bool = False
+    init: Optional[Callable[[int], Any]] = None
+    update: Optional[Callable[..., Any]] = None
+
+    @property
+    def is_extra(self) -> bool:
+        """Novel stat (carried in GramStats.extras) vs a built-in field."""
+        return self.init is not None
+
+
+_STATS: Dict[str, StatSpec] = {}
+
+
+def register_stat(spec: StatSpec) -> StatSpec:
+    """Register a calibration statistic by name (idempotent overwrite)."""
+    if spec.is_extra and spec.update is None:
+        raise ValueError(f"stat {spec.name!r} declares init without update")
+    _STATS[spec.name] = spec
+    return spec
+
+
+def unregister_stat(name: str) -> None:
+    """Remove a registered stat (test helper for toy stats)."""
+    if name in (DENSE_GRAM, PRUNED_GRAM):
+        raise ValueError(f"cannot unregister built-in stat {name!r}")
+    _STATS.pop(name, None)
+
+
+def known_stats() -> Tuple[str, ...]:
+    return tuple(sorted(_STATS))
+
+
+def stat_spec(name: str) -> StatSpec:
+    """Look up a registered stat; unknown names list the known stats."""
+    try:
+        return _STATS[name]
+    except KeyError:
+        raise KeyError(f"unknown stat {name!r}; known stats: "
+                       f"{', '.join(known_stats())}") from None
+
+
+register_stat(StatSpec(DENSE_GRAM, needs_pruned_path=False))
+register_stat(StatSpec(PRUNED_GRAM, needs_pruned_path=True))
 
 
 class LayerSolver(abc.ABC):
@@ -60,7 +145,27 @@ class LayerSolver(abc.ABC):
     """
 
     name: str = "?"              # set by @register_solver
-    wants_pruned_gram: bool = True
+    #: names of the registered stats this solver reads (class or instance
+    #: attribute).  None = legacy solver: fall back to its declared
+    #: ``wants_pruned_gram`` bool, defaulting to both built-in Grams.
+    stat_deps: Optional[Tuple[str, ...]] = None
+
+    def stats_required(self) -> Tuple[str, ...]:
+        """The validated stat names core/sequential.py must provision."""
+        deps = self.stat_deps
+        if deps is None:
+            legacy = _declared_wants_pruned_gram(self)
+            deps = (DENSE_GRAM,) if legacy is False \
+                else (DENSE_GRAM, PRUNED_GRAM)
+        for name in deps:
+            stat_spec(name)        # raises KeyError listing known stats
+        return tuple(deps)
+
+    @property
+    def wants_pruned_gram(self) -> bool:
+        """Derived view of ``stat_deps`` kept for telemetry/benchmarks."""
+        return any(stat_spec(s).needs_pruned_path
+                   for s in self.stats_required())
 
     def bind_executor(self, executor: Any) -> None:
         """Attach a MeshExecutor (distributed/executor.py).  Solvers that
@@ -97,6 +202,26 @@ class LayerSolver(abc.ABC):
     def describe(self) -> Dict[str, Any]:
         """Scheduler/driver telemetry payload."""
         return {"name": self.name, "group_batch": self.supports_group_batch}
+
+
+def _declared_wants_pruned_gram(solver: LayerSolver) -> Optional[bool]:
+    """A legacy solver's own ``wants_pruned_gram`` declaration, if any.
+
+    Pre-stat_deps solvers declared the flag as a plain bool (instance or
+    subclass attribute, shadowing the base-class property).  Looked up
+    without touching the property to avoid recursing through
+    :meth:`LayerSolver.stats_required`.
+    """
+    v = solver.__dict__.get("wants_pruned_gram")
+    if isinstance(v, bool):
+        return v
+    for klass in type(solver).__mro__:
+        if klass is LayerSolver:
+            break
+        v = klass.__dict__.get("wants_pruned_gram")
+        if isinstance(v, bool):
+            return v
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -155,7 +280,7 @@ def from_legacy(method: str,
 class FistaSolver(LayerSolver):
     """The paper's Algorithm 1 (core/pruner.py): FISTA + lambda bisection."""
 
-    wants_pruned_gram = True
+    stat_deps = (DENSE_GRAM, PRUNED_GRAM)
 
     def __init__(self, cfg: Optional[PrunerConfig] = None, **overrides: Any):
         self.cfg = dataclasses.replace(cfg or PrunerConfig(), **overrides)
@@ -206,7 +331,7 @@ class FistaSolver(LayerSolver):
 class AdmmSolver(LayerSolver):
     """ALPS-style ADMM on the same objective (core/admm.py)."""
 
-    wants_pruned_gram = True
+    stat_deps = (DENSE_GRAM, PRUNED_GRAM)
 
     def __init__(self, cfg: Optional[AdmmConfig] = None, **overrides: Any):
         self.cfg = dataclasses.replace(cfg or AdmmConfig(), **overrides)
@@ -226,6 +351,32 @@ class AdmmSolver(LayerSolver):
                 "group_batch": True}
 
 
+@register_solver("frankwolfe")
+class FrankWolfeSolver(LayerSolver):
+    """Projection-free Frank-Wolfe on the same objective (core/frankwolfe.py):
+    LMO = top-k of the gradient, exact line search, rounding + polish."""
+
+    stat_deps = (DENSE_GRAM, PRUNED_GRAM)
+
+    def __init__(self, cfg: Optional[FrankWolfeConfig] = None,
+                 **overrides: Any):
+        self.cfg = dataclasses.replace(cfg or FrankWolfeConfig(), **overrides)
+
+    @property
+    def supports_group_batch(self) -> bool:
+        return True
+
+    def solve(self, w, stats, spec):
+        return fw_lib.prune_operator_fw(w, stats, spec, self.cfg)
+
+    def solve_group(self, ws, stats, spec):
+        return fw_lib.prune_group_fw(list(ws), list(stats), spec, self.cfg)
+
+    def describe(self):
+        return {"name": self.name, "radius_rel": self.cfg.radius_rel,
+                "max_iters": self.cfg.max_iters, "group_batch": True}
+
+
 # ---------------------------------------------------------------------------
 # one-shot solvers (the paper's baselines)
 # ---------------------------------------------------------------------------
@@ -234,7 +385,7 @@ class OneShotSolver(LayerSolver):
     Gram-form error of the candidate.  Group solves vmap the candidate
     construction + error evaluation into one dispatch."""
 
-    wants_pruned_gram = False
+    stat_deps = (DENSE_GRAM,)
 
     @property
     def supports_group_batch(self) -> bool:
@@ -286,8 +437,9 @@ class SparseGptSolver(OneShotSolver):
         self.blocksize = blocksize
         self.damp_rel = damp_rel
         self.use_pruned_gram = use_pruned_gram
-        # capability follows the Gram the sweep actually reads
-        self.wants_pruned_gram = use_pruned_gram
+        # dependency follows the Gram the sweep actually reads
+        self.stat_deps = (DENSE_GRAM, PRUNED_GRAM) if use_pruned_gram \
+            else (DENSE_GRAM,)
 
     def _candidate(self, w, stats, spec):
         return baselines_lib.sparsegpt(

@@ -21,6 +21,15 @@ regression check.
 Each unit is audited at its DENSE input (units are independent under the
 paper's scheme), so the audit runs layer-parallel-safe on any
 checkpoint-store run.
+
+The audit also spans unit boundaries: a REALIZED relay (the pruned net's
+own activations) is advanced alongside the dense one, giving each row
+
+* ``realized_rel_err``  — the unit's output error measured at the input
+  the pruned net actually sees (what ``correction="cross"`` optimizes);
+* ``cumulative_rel_err`` — end-to-end drift of the pruned relay vs the
+  dense relay at this unit's output, i.e. how much error has compounded
+  across ALL units so far.
 """
 from __future__ import annotations
 
@@ -44,6 +53,9 @@ class UnitBudgetRow:
     ratio: float                # output_rel_err / op_budget (nan without reports)
     within_budget: bool         # ratio <= slack (true when budget unknown)
     ops: int                    # operator reports attributed to this unit
+    # cross-unit view (defaults keep persisted pre-PR rows loadable)
+    realized_rel_err: float = float("nan")   # unit error at the REALIZED input
+    cumulative_rel_err: float = float("nan")  # pruned-vs-dense relay drift here
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -73,6 +85,7 @@ def error_budget_report(model: ModelDef, dense_params: Any, pruned_params: Any,
         batches = [dict(b, **{k: jnp.asarray(v[:cfg.batch_size])
                               for k, v in extras.items()}) for b in batches]
     states = [model.embed(dense_params, b) for b in batches]
+    real_states = [dict(s) for s in states]   # the pruned net's own relay
     rows: List[UnitBudgetRow] = []
     units = list(model.units())
     for i, spec in enumerate(units):
@@ -80,6 +93,18 @@ def error_budget_report(model: ModelDef, dense_params: Any, pruned_params: Any,
         pruned_unit = seq_lib._unit_params_of(pruned_params, spec)
         out_err = seq_lib.unit_output_error(model, spec, dense_unit,
                                             pruned_unit, states)
+        # cross-unit view: this unit at the input the pruned net really
+        # sees, and the total relay drift at its output
+        real_err = seq_lib.unit_output_error(model, spec, dense_unit,
+                                             pruned_unit, real_states)
+        fwd = seq_lib._capture_forward(model, spec)
+        num = den = 0.0
+        for ds, rs in zip(states, real_states):
+            yd = np.asarray(fwd(dense_unit, ds)[0]["x"], np.float32)
+            yp = np.asarray(fwd(pruned_unit, rs)[0]["x"], np.float32)
+            num += float(np.sum((yp - yd) ** 2))
+            den += float(np.sum(yd ** 2))
+        cum_err = float(np.sqrt(num / max(den, 1e-30)))
         budget, n_ops = _budget_of(reports, spec.name)
         ratio = out_err / budget if budget and np.isfinite(budget) else float("nan")
         rows.append(UnitBudgetRow(
@@ -87,10 +112,13 @@ def error_budget_report(model: ModelDef, dense_params: Any, pruned_params: Any,
             op_budget=budget, ratio=float(ratio),
             within_budget=bool(not np.isfinite(ratio)
                                or ratio <= cfg.budget_slack),
-            ops=n_ops))
-        if i + 1 < len(units):  # advance the dense relay to the next unit
-            fwd = seq_lib._capture_forward(model, spec)
+            ops=n_ops, realized_rel_err=float(real_err),
+            cumulative_rel_err=cum_err))
+        if i + 1 < len(units):  # advance both relays to the next unit
             states = [fwd(dense_unit, s)[0] for s in states]
             states = [model.post_unit(dense_params, spec.layer_index, s)
                       for s in states]
+            real_states = [fwd(pruned_unit, s)[0] for s in real_states]
+            real_states = [model.post_unit(pruned_params, spec.layer_index, s)
+                           for s in real_states]
     return rows

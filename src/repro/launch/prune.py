@@ -86,7 +86,8 @@ def main() -> int:
     ap.add_argument("--method", default="fista",
                     choices=sorted(registered_solvers()))
     ap.add_argument("--sparsity", default="50%", help="'50%%' or '2:4'")
-    ap.add_argument("--correction", default="intra", choices=["intra", "none", "full"])
+    ap.add_argument("--correction", default="intra",
+                    choices=["intra", "none", "full", "cross"])
     ap.add_argument("--warm-start", default="wanda",
                     choices=["wanda", "sparsegpt", "magnitude", "dense"])
     ap.add_argument("--outer-impl", default="fused", choices=["fused", "host"],

@@ -1,6 +1,7 @@
 """Golden regression tests: pinned solver quality on fixed-seed problems.
 
-The fista and admm backends are the repo's quality-bearing solvers; a
+The fista, admm and frankwolfe backends are the repo's quality-bearing
+solvers; a
 refactor that silently degrades their solutions would pass every
 equivalence/invariant test and only show up (noisily) in benchmark
 perplexity.  These tests pin the exact ``PruneResult`` quality — relative
@@ -27,17 +28,24 @@ RTOL = 2e-3                    # committed tolerance band on rel_error
 
 FISTA_KW = dict(fista_iters=20, max_outer=12, patience=3, eps=1e-6)
 
+#: per-method constructor kwargs used for every golden solve
+SOLVER_KW = {"fista": FISTA_KW, "admm": {}, "frankwolfe": {}}
+
 # (seed, method, sparsity) -> (rel_error, exact nnz).  m*n = 768 weights:
 # both 50% and 2:4 keep exactly 384.
 GOLDEN = {
     (0, "fista", "50%"): (0.282221, 384),
     (0, "admm", "50%"): (0.273067, 384),
+    (0, "frankwolfe", "50%"): (0.272393, 384),
     (0, "fista", "2:4"): (0.379089, 384),
     (0, "admm", "2:4"): (0.367955, 384),
+    (0, "frankwolfe", "2:4"): (0.365348, 384),
     (1, "fista", "50%"): (0.275195, 384),
     (1, "admm", "50%"): (0.267110, 384),
+    (1, "frankwolfe", "50%"): (0.267403, 384),
     (1, "fista", "2:4"): (0.361894, 384),
     (1, "admm", "2:4"): (0.351150, 384),
+    (1, "frankwolfe", "2:4"): (0.349776, 384),
 }
 
 
@@ -57,7 +65,7 @@ def golden_problem(seed: int, drift: float = 0.1):
 def test_pinned_quality(seed, method, sparsity):
     want_rel, want_nnz = GOLDEN[(seed, method, sparsity)]
     w, stats = golden_problem(seed)
-    solver = get_solver(method, **(FISTA_KW if method == "fista" else {}))
+    solver = get_solver(method, **SOLVER_KW[method])
     res = solver.solve(w, stats, SparsitySpec.parse(sparsity))
 
     weight = np.asarray(res.weight, np.float32)
@@ -75,7 +83,7 @@ def test_group_solve_matches_golden(sparsity):
     """The vmap-batched group path must hit the same pinned quality —
     group batching is a dispatch optimization, not a math change."""
     problems = [golden_problem(s) for s in (0, 1)]
-    for method, kw in (("fista", FISTA_KW), ("admm", {})):
+    for method, kw in sorted(SOLVER_KW.items()):
         solver = get_solver(method, **kw)
         results = solver.solve_group([w for w, _ in problems],
                                      [st for _, st in problems],

@@ -10,9 +10,10 @@ from hypothesis import given, settings, strategies as st
 import hypothesis.extra.numpy as hnp
 
 from repro.core import fista as fista_lib
+from repro.core import frankwolfe as fw_lib
 from repro.core import gram as gram_lib
 from repro.core.sparsity import (SparsitySpec, mask_by_score, round_nm,
-                                 round_unstructured, satisfies)
+                                 round_to, round_unstructured, satisfies)
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.utils import tree as tree_lib
@@ -101,6 +102,115 @@ class TestGramProps:
         merged = gram_lib.merge(sa, sb)
         np.testing.assert_allclose(np.asarray(merged.G), np.asarray(joint.G), rtol=1e-4, atol=1e-4)
         np.testing.assert_allclose(float(merged.h), float(joint.h), rtol=1e-4)
+
+
+FW_SPECS = [SparsitySpec(ratio=0.5), SparsitySpec(ratio=0.25),
+            SparsitySpec(kind="nm", n=2, m=4), SparsitySpec(kind="nm", n=1, m=4)]
+
+
+def _fw_problem(seed, m=8, n=16, p=64):
+    """Random well-posed Gram problem (G PSD by construction)."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(m, n)).astype(np.float32)
+    x = rng.normal(size=(n, p)).astype(np.float32)
+    xs = x + 0.1 * rng.normal(size=(n, p)).astype(np.float32)
+    stats = gram_lib.accumulate(gram_lib.init_stats(n), jnp.asarray(x.T),
+                                jnp.asarray(xs.T), jnp.asarray((w @ x).T))
+    b = gram_lib.target_correlation(stats, jnp.asarray(w))
+    return jnp.asarray(w), stats, b
+
+
+class TestFrankWolfeProps:
+    """Invariants of the projection-free Frank-Wolfe solver
+    (core/frankwolfe.py)."""
+
+    @given(st.integers(0, 2**31 - 1), st.sampled_from(range(len(FW_SPECS))))
+    @settings(max_examples=20, deadline=None)
+    def test_lmo_atom_support_within_budget(self, seed, spec_i):
+        """The LMO's atom is spec-pattern k-sparse: support <= keep budget,
+        n:m pattern exact, and it is a descent atom (<grad, s> <= 0)."""
+        spec = FW_SPECS[spec_i]
+        rng = np.random.default_rng(seed)
+        grad = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+        atom = np.asarray(fw_lib.lmo_atom(grad, spec, jnp.float32(1.0)))
+        assert int(np.count_nonzero(atom)) <= fw_lib.keep_count(atom.shape, spec)
+        assert satisfies(atom, spec)
+        assert float(np.sum(np.asarray(grad) * atom)) <= 1e-6
+        # atom lives on the tau-radius ball (radius 1 here)
+        assert float(np.linalg.norm(atom)) <= 1.0 + 1e-5
+
+    @given(st.integers(0, 2**31 - 1), st.sampled_from(range(len(FW_SPECS))))
+    @settings(max_examples=15, deadline=None)
+    def test_objective_monotone_nonincreasing(self, seed, spec_i):
+        """Exact line search on the quadratic: f never increases along the
+        FW iterates, and the dual gap stays nonnegative in the hull."""
+        spec = FW_SPECS[spec_i]
+        w, stats, b = _fw_problem(seed)
+        y = round_to(w.astype(jnp.float32), spec)
+        tau = 1.25 * jnp.linalg.norm(y) + 1e-8
+        f = lambda z: 0.5 * float(gram_lib.frob_error_sq_gh(stats.G, stats.h,
+                                                            z, b))
+        prev = f(y)
+        for _ in range(6):
+            y, gap = fw_lib.fw_step(y, stats.G, b, spec, tau)
+            cur = f(y)
+            assert float(gap) >= -1e-3 * (prev + 1.0)
+            assert cur <= prev + 1e-3 * (prev + 1.0)
+            prev = cur
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_resolve_already_feasible_is_noop(self, seed):
+        """Solving a problem whose weight is already feasible AND already
+        exact (X* = X, target = W X) returns the input bitwise — strict
+        best-tracking never replaces a zero-error candidate.
+
+        Small-integer data keeps every Gram matmul exact in fp32, so the
+        input's measured error is exactly 0 (float data would bury the
+        true 0 under catastrophic cancellation in <YG,Y> - 2<Y,B> + h)."""
+        rng = np.random.default_rng(seed)
+        spec = SparsitySpec(kind="nm", n=2, m=4)
+        w = np.asarray(round_to(jnp.asarray(
+            rng.integers(-3, 4, size=(6, 16)).astype(np.float32)), spec))
+        x = rng.integers(-2, 3, size=(16, 48)).astype(np.float32)
+        stats = gram_lib.accumulate(gram_lib.init_stats(16), jnp.asarray(x.T),
+                                    jnp.asarray(x.T), jnp.asarray((w @ x).T))
+        res = fw_lib.prune_operator_fw(jnp.asarray(w), stats, spec)
+        assert res.error == 0.0
+        assert np.array_equal(np.asarray(res.weight), w)
+
+
+class TestCrossUnitStatsProps:
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+    @settings(max_examples=10, deadline=None)
+    def test_realized_accumulation_conserves_psd(self, seed, nbatches):
+        """Cross-unit provisioning feeds REALIZED (pruned-relay) activations
+        into both Gram paths; accumulated G and H must stay PSD however the
+        realized inputs drift, including across shard merges."""
+        rng = np.random.default_rng(seed)
+        n, p = 10, 24
+        w = rng.normal(size=(4, n)).astype(np.float32)
+        stats = gram_lib.init_stats(n)
+        shards = []
+        for _ in range(nbatches):
+            xr = rng.normal(size=(n, p)).astype(np.float32)       # realized X~
+            xs = xr + rng.normal(size=(n, p)).astype(np.float32)  # intra relay
+            stats = gram_lib.accumulate(stats, jnp.asarray(xr.T),
+                                        jnp.asarray(xs.T),
+                                        jnp.asarray((w @ xr).T))
+            shards.append(gram_lib.accumulate(
+                gram_lib.init_stats(n), jnp.asarray(xr.T), jnp.asarray(xs.T),
+                jnp.asarray((w @ xr).T)))
+        merged = shards[0]
+        for s in shards[1:]:
+            merged = gram_lib.merge(merged, s)
+        for st_ in (stats, merged):
+            for mat in (st_.G, st_.H):
+                eig = np.linalg.eigvalsh(np.asarray(mat, np.float64))
+                assert eig.min() >= -1e-3 * max(1.0, eig.max())
+            assert float(st_.h) >= 0.0
+        np.testing.assert_allclose(np.asarray(merged.G), np.asarray(stats.G),
+                                   rtol=1e-4, atol=1e-4)
 
 
 class TestTwoFourProps:

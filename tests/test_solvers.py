@@ -97,6 +97,124 @@ class TestRegistry:
             get_solver("toy-topk")
 
 
+class TestDeclaredStats:
+    """The declared stats-dependency contract (ISSUE 8): solvers name the
+    calibration statistics they read; core/sequential.py provisions them
+    generically — zero per-solver edits."""
+
+    def test_builtin_declarations(self):
+        assert get_solver("fista").wants_pruned_gram
+        assert get_solver("admm").wants_pruned_gram
+        assert get_solver("frankwolfe").wants_pruned_gram
+        for name in ("wanda", "magnitude", "dense"):
+            s = get_solver(name)
+            assert s.stats_required() == (solvers_lib.DENSE_GRAM,)
+            assert not s.wants_pruned_gram
+
+    def test_undeclared_stat_raises_listing_known_stats(self):
+        class Bad(LayerSolver):
+            stat_deps = (solvers_lib.DENSE_GRAM, "no-such-stat")
+
+            def solve(self, w, stats, spec):   # pragma: no cover
+                raise AssertionError
+
+        with pytest.raises(KeyError) as exc:
+            Bad().stats_required()
+        msg = str(exc.value)
+        assert "no-such-stat" in msg
+        for known in (solvers_lib.DENSE_GRAM, solvers_lib.PRUNED_GRAM):
+            assert known in msg
+
+    def test_toy_solver_with_novel_stat_needs_no_sequential_edits(self):
+        """A solver declaring a brand-new registered stat gets it
+        accumulated into GramStats.extras by the generic provisioning —
+        verified against the closed form diag(G) = sum_p X*_p^2."""
+        solvers_lib.register_stat(solvers_lib.StatSpec(
+            "pruned_sqnorms", needs_pruned_path=True,
+            init=lambda n: jnp.zeros((n,), jnp.float32),
+            update=lambda acc, xd, xp, wx: acc + jnp.sum(xp * xp, axis=0)))
+        seen = []
+
+        @register_solver("toy-novel-stat")
+        class ToyNovel(LayerSolver):
+            stat_deps = (solvers_lib.DENSE_GRAM, solvers_lib.PRUNED_GRAM,
+                         "pruned_sqnorms")
+
+            def solve(self, w, stats, spec):
+                from repro.core.pruner import _make_result
+                from repro.core.sparsity import round_to
+                seen.append((np.asarray(stats.extras["pruned_sqnorms"]),
+                             np.asarray(jnp.diag(stats.G))))
+                y = round_to(jnp.asarray(w, jnp.float32), spec)
+                b = gram_lib.target_correlation(stats, w)
+                e = float(gram_lib.frob_error(stats, y, b))
+                return _make_result(y, e, 0.0, 0, 0, e, float(stats.h))
+
+        try:
+            model, params, calib = tiny_model()
+            cfg = SequentialConfig(spec=SparsitySpec(ratio=0.5),
+                                   solver=get_solver("toy-novel-stat"))
+            _, reports = prune_model(model, params, calib, cfg)
+            assert reports and seen
+            for sq, diag_g in seen:
+                assert sq.shape == diag_g.shape
+                np.testing.assert_allclose(sq, diag_g, rtol=1e-4, atol=1e-4)
+        finally:
+            unregister_solver("toy-novel-stat")
+            solvers_lib.unregister_stat("pruned_sqnorms")
+
+    def test_builtin_stats_cannot_be_unregistered(self):
+        with pytest.raises(ValueError):
+            solvers_lib.unregister_stat(solvers_lib.PRUNED_GRAM)
+
+    def test_dense_stats_solver_skips_pruned_capture_on_moe(self, monkeypatch):
+        """The wants_pruned_gram asymmetry fix: a dense-stats-only baseline
+        must not trigger the pruned-path capture forwards on a grouped MoE
+        unit — the dispatch count is pinned at exactly one capture per
+        calibration micro-batch (pre-fix it was 2x: a wasted per-expert
+        relay pass).  Cross-unit modes still relay (2x)."""
+        from repro.core import sequential as seq_lib
+        from repro.models.registry import load_arch
+
+        model = load_arch("mixtral-8x7b", smoke=True)
+        params = model.init(jax.random.PRNGKey(0))
+        batches = [model.make_batch(jax.random.PRNGKey(i + 1), 2, 16)
+                   for i in range(3)]
+        states = [model.embed(params, b) for b in batches]
+        spec = list(model.units())[0]
+        dense_unit = seq_lib._unit_params_of(params, spec)
+        assert any("/expert" in k for g in spec.groups for k in g)
+
+        calls = {"n": 0}
+        orig = seq_lib._capture_forward
+
+        def counting(model_, uspec):
+            fwd = orig(model_, uspec)
+
+            def wrapped(unit_params, state):
+                calls["n"] += 1
+                return fwd(unit_params, state)
+
+            return wrapped
+
+        monkeypatch.setattr(seq_lib, "_capture_forward", counting)
+        cfg = SequentialConfig(spec=SparsitySpec(kind="nm", n=2, m=4),
+                               solver=get_solver("wanda"))
+        _, reports, pruned_next = seq_lib.prune_unit(
+            model, spec, dense_unit, states, [dict(s) for s in states], cfg)
+        assert reports
+        assert pruned_next == []
+        assert calls["n"] == len(batches)          # dense captures ONLY
+
+        calls["n"] = 0
+        cfg_full = dataclasses.replace(cfg, error_correction="full")
+        _, _, nxt = seq_lib.prune_unit(
+            model, spec, dense_unit, states, [dict(s) for s in states],
+            cfg_full)
+        assert len(nxt) == len(batches)
+        assert calls["n"] == 2 * len(batches)      # captures + pruned relay
+
+
 class TestAdmm:
     @pytest.mark.parametrize("spec", SPECS, ids=str)
     @pytest.mark.parametrize("seed", [0, 1])
