@@ -33,6 +33,14 @@ modeled throughput within ``tolerance`` (5%) at every pressure level
 (the benchmark also asserts modeled packed >= dense everywhere), and
 the measured packed-vs-dense ratio within ``measured_tolerance`` (15%,
 generous — CPU wall noise) of the baselined ratio.
+
+One extra row measures the observability tax (``bench_obs_overhead``):
+the high-pressure packed run repeated bare vs with ``repro.obs``
+recording on, gated at ``obs_overhead_max_ratio`` (1.02 — recording is
+a guarded attribute access + a bisect per tick, so the instrumented
+step must stay within 2% of bare) and pinned token-identical.  The
+instrumented run's spans are exported as a Perfetto trace for the CI
+artifact (``TRACE_PATH``).
 """
 from __future__ import annotations
 
@@ -47,6 +55,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
+from repro import obs
 from repro.core.sparsity import round_tree_nm
 from repro.models.registry import model_def
 from repro.serve import BatchConfig, ContinuousBatcher, synthetic_trace
@@ -233,6 +242,66 @@ def bench_serve_matrix() -> List[Dict]:
     return rows
 
 
+#: where the instrumented run's Perfetto trace lands (uploaded by CI)
+TRACE_PATH = "experiments/bench/serve_trace.json"
+
+
+def bench_obs_overhead(model, params) -> Dict:
+    """The observability tax row: the 'high'-pressure packed run, once
+    bare and once with ``repro.obs`` recording (spans + the batcher's SLO
+    instruments), paired within each of ``MEASURE_REPEATS`` repeats.
+
+    The GATED number is ``obs_overhead_ratio`` = 1 + (measured per-tick
+    recording cost / bare median step time), where the recording cost
+    times the batcher's own ``_record_tick_obs`` — the exact sequence the
+    decode loop runs per tick.  Raw step-wall ratios cannot carry the 2%
+    gate: recording happens *between* the measured step windows (OBS001
+    keeps it out of the jitted step), so the off/on wall ratio is pure
+    CPU noise at +-3-5% per session — it is still reported
+    (``paired_wall_ratio``, median of per-repeat paired ratios) as a
+    cross-check that nothing structural crept into the step.  The decoded
+    tokens are asserted identical with recording on, and the instrumented
+    run's spans are exported as a Perfetto trace (``TRACE_PATH``)."""
+    n = PRESSURES["high"]
+    meds: Dict[str, List[float]] = {"off": [], "on": []}
+    first = {}
+    for rep in range(MEASURE_REPEATS):
+        for mode in ("off", "on"):
+            # enable() resets recorder+registry, so each instrumented
+            # repeat pays the same (fresh-instrument) recording cost
+            obs.enable() if mode == "on" else obs.disable()
+            b, res, _ = _one_run(model, params, "packed", n)
+            if rep == 0:
+                first[mode] = res
+            meds[mode].append(_median_step(b))
+    # time the real per-tick recording path on the last instrumented
+    # batcher (its instruments and pool state are live)
+    reps = 2000
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        b._record_tick_obs(BATCH.slots)
+    rec_s = (time.perf_counter() - t0) / reps
+    from repro.obs import spans as spans_lib
+    spans_lib.export_perfetto(obs.recorder().spans(), TRACE_PATH)
+    obs.disable()
+    assert [r.tokens.tolist() for r in first["on"]] == \
+           [r.tokens.tolist() for r in first["off"]], \
+        "obs recording changed the decoded tokens"
+    wall_ratios = [on / max(off, 1e-12)
+                   for off, on in zip(meds["off"], meds["on"])]
+    off, on = min(meds["off"]), min(meds["on"])
+    row = {"mode": "packed-obs", "pressure": "high", "requests": n,
+           "step_us_off": off * 1e6, "step_us_on": on * 1e6,
+           "recording_us_per_tick": rec_s * 1e6,
+           "paired_wall_ratio": round(float(np.median(wall_ratios)), 3),
+           "obs_overhead_ratio": round(1.0 + rec_s / max(off, 1e-12), 4)}
+    print(f" high packed-obs: recording {row['recording_us_per_tick']:.2f} "
+          f"us/tick on a {row['step_us_off']:.0f} us bare step "
+          f"(overhead ratio {row['obs_overhead_ratio']:.4f}; paired wall "
+          f"ratio {row['paired_wall_ratio']:.3f}); trace -> {TRACE_PATH}")
+    return row
+
+
 def check_regression(rows: List[Dict], baseline_path: str = BASELINE_PATH
                      ) -> Tuple[bool, str]:
     """Gate: packed modeled throughput within ``tolerance`` of the
@@ -269,6 +338,13 @@ def check_regression(rows: List[Dict], baseline_path: str = BASELINE_PATH
             msgs.append(f"{level} measured-ratio "
                         f"{row['measured_packed_vs_dense']:.2f}>= "
                         f"{mlimit:.2f} {'PASS' if mgood else 'FAIL'}")
+    cap = base.get("obs_overhead_max_ratio")
+    orow = next((r for r in rows if r.get("mode") == "packed-obs"), None)
+    if cap is not None and orow is not None:
+        ogood = orow["obs_overhead_ratio"] <= float(cap)
+        ok &= ogood
+        msgs.append(f"obs-overhead {orow['obs_overhead_ratio']:.3f}<= "
+                    f"{float(cap):.2f} {'PASS' if ogood else 'FAIL'}")
     return ok, (f"packed vs baseline (modeled -{tol:.0%}, measured ratio "
                 f"-{mtol:.0%}): " + "; ".join(msgs))
 
@@ -280,7 +356,8 @@ def _protocol() -> Dict:
 
 def write_baseline(rows: List[Dict], path: str = BASELINE_PATH,
                    tolerance: float = 0.05,
-                   measured_tolerance: float = 0.15) -> None:
+                   measured_tolerance: float = 0.15,
+                   obs_overhead_max_ratio: float = 1.02) -> None:
     packed = [r for r in rows if r["mode"] == "packed"]
     with open(path, "w") as f:
         json.dump({"levels": {r["pressure"]: r["modeled_tok_s"]
@@ -290,6 +367,10 @@ def write_baseline(rows: List[Dict], path: str = BASELINE_PATH,
                        {r["pressure"]: r["measured_packed_vs_dense"]
                         for r in packed},
                    "measured_tolerance": measured_tolerance,
+                   # a FIXED cap, not baselined-run-relative: recording is
+                   # a few guarded attribute accesses + bisects per tick,
+                   # so instrumented/bare step time must stay within 2%
+                   "obs_overhead_max_ratio": obs_overhead_max_ratio,
                    "protocol": _protocol()}, f, indent=1)
         f.write("\n")
 
@@ -299,6 +380,7 @@ def run_all(out_path: str = OUT_PATH, baseline_path: str = BASELINE_PATH,
     print("\n== Continuous-batching serve (modeled TPU roofline, "
           "dense vs packed 2:4) ==")
     rows = bench_serve_matrix()
+    rows.append(bench_obs_overhead(*_sparse_model()))
     packed_ge_dense = all(
         next(r for r in rows if r["pressure"] == lv and r["mode"] == "packed")
         ["modeled_tok_s"] >=

@@ -9,6 +9,8 @@ actually shipped and reverted:
                    budgets, tile alignment, oracle + dispatch gates.
 * ``rules_mesh``   MESH001-MESH002: explicit shard_map check_rep,
                    replicate-before-sample domination.
+* ``rules_obs``    OBS001: obs recording calls inside jitted function
+                   bodies or hot-path loop bodies.
 * ``trace_budget`` TRB001-TRB002: runtime jit trace budgets over the
                    tier-1 entry points (``--runtime``).
 
@@ -29,8 +31,9 @@ def run_source_rules(paths: Iterable[str],
                      hot: Optional[Iterable[str]] = None,
                      budgets: Optional[Dict[str, int]] = None
                      ) -> List[Finding]:
-    """AST rule families (JAX + MESH) over every .py under ``paths``."""
-    from . import rules_jax, rules_mesh
+    """AST rule families (JAX + MESH + OBS) over every .py under
+    ``paths``."""
+    from . import rules_jax, rules_mesh, rules_obs
     findings: List[Finding] = []
     for path in iter_py_files(paths):
         try:
@@ -43,4 +46,5 @@ def run_source_rules(paths: Iterable[str],
             continue
         findings += rules_jax.check_module(ctx, hot=hot, budgets=budgets)
         findings += rules_mesh.check_module(ctx)
+        findings += rules_obs.check_module(ctx, hot=hot)
     return findings

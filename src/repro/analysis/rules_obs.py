@@ -1,0 +1,196 @@
+"""AST rule OBS001: obs recording must stay off the device hot paths.
+
+The observability layer (``repro.obs``, DESIGN.md §14) is host-side by
+contract: spans and metric recordings happen around dispatches, never
+inside them.  Two placements break that contract:
+
+* **inside a jitted function body** — the recording runs at *trace*
+  time (so it fires once per compilation, not once per call) and drags
+  host state into a traced context;
+* **inside a ``for``/``while`` body of a serving hot-path module** —
+  the per-token sibling of JAX003: even a cheap counter bump per token
+  adds up, and a span per token floods the ring buffer.  Record once
+  per tick at the loop's top level (what ``serve/batcher.py`` does), or
+  once after the loop.
+
+Recording calls are recognized structurally, mirroring how JAX003 finds
+device values: names bound from registry instrument constructors
+(``reg.counter(...)``, ``obs.registry().histogram(...)``) are
+*instruments*; ``.observe``/``.inc``/``.set``/``.append`` on an
+instrument — or chained directly onto a constructor — and any
+``span(...)``/``*.span(...)`` call are *recordings*.  Modules that never
+import ``repro.obs`` are skipped entirely.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set, Tuple
+
+from .core import Finding, ModuleCtx, assigned_names, dotted_name, unparse
+from .rules_jax import _qualname, collect_jit_sites
+
+# modules whose loop bodies are per-token hot paths (prefix match, same
+# contract as rules_jax.HOT_PATH_PREFIXES for JAX003)
+HOT_PATH_PREFIXES: Tuple[str, ...] = ("repro.serve.",)
+
+# MetricsRegistry constructors whose results are recording instruments
+_INSTRUMENT_MAKERS = {"counter", "gauge", "histogram", "series"}
+# methods that record on an instrument
+_RECORDING_METHODS = {"observe", "inc", "set", "append"}
+
+
+def _uses_obs(ctx: ModuleCtx) -> bool:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            if any(a.name == "repro.obs" or a.name.startswith("repro.obs.")
+                   for a in node.names):
+                return True
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == "repro.obs" or mod.startswith("repro.obs."):
+                return True
+            if mod == "repro" and any(a.name == "obs" for a in node.names):
+                return True
+    return False
+
+
+def _instrument_names(tree: ast.Module) -> Set[str]:
+    """Plain names and attribute leaves (``self._m_ttft``) assigned from
+    an instrument constructor anywhere in the module."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            f = node.value.func
+            if isinstance(f, ast.Attribute) and f.attr in _INSTRUMENT_MAKERS:
+                for t in node.targets:
+                    if isinstance(t, ast.Attribute):
+                        names.add(t.attr)
+                    names.update(assigned_names(t))
+    return names
+
+
+def _is_recording_call(node: ast.AST, instruments: Set[str]) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    leaf = f.attr if isinstance(f, ast.Attribute) else (
+        f.id if isinstance(f, ast.Name) else "")
+    if leaf == "span":
+        return True
+    if leaf in _RECORDING_METHODS and isinstance(f, ast.Attribute):
+        recv = f.value
+        if isinstance(recv, ast.Name) and recv.id in instruments:
+            return True
+        if isinstance(recv, ast.Attribute) and recv.attr in instruments:
+            return True
+        # chained onto the constructor: reg.histogram("x").observe(v)
+        if isinstance(recv, ast.Call) and isinstance(recv.func, ast.Attribute) \
+                and recv.func.attr in _INSTRUMENT_MAKERS:
+            return True
+    return False
+
+
+class _LoopRecordingChecker(ast.NodeVisitor):
+    """JAX003's loop walk, retargeted: recording calls at loop depth >= 1
+    are per-token recordings."""
+
+    def __init__(self, ctx: ModuleCtx, qualname: str, instruments: Set[str],
+                 findings: List[Finding]) -> None:
+        self.ctx = ctx
+        self.qualname = qualname
+        self.instruments = instruments
+        self.findings = findings
+        self.loop_depth = 0
+
+    def visit_For(self, node: ast.For) -> None:
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    def visit_While(self, node: ast.While) -> None:
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self.generic_visit(node)
+        if self.loop_depth > 0 and _is_recording_call(node, self.instruments):
+            self.findings.append(Finding(
+                rule="OBS001", path=self.ctx.rel, line=node.lineno,
+                context=self.qualname, detail=f"loop:{unparse(node)}",
+                message=f"obs recording `{unparse(node)}` inside a hot-path "
+                        f"loop body — record once per tick at the loop's "
+                        f"top level, or once after the loop"))
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        return  # nested functions are checked as their own scope
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+
+def check_jit_recordings(ctx: ModuleCtx) -> List[Finding]:
+    """Recording calls inside jitted function bodies (any module)."""
+    if not _uses_obs(ctx):
+        return []
+    instruments = _instrument_names(ctx.tree)
+    findings: List[Finding] = []
+    seen: Set[int] = set()
+    for site in collect_jit_sites(ctx):
+        if site.fn is None or id(site.fn) in seen:
+            continue
+        seen.add(id(site.fn))
+        qn = getattr(site.fn, "_analysis_qualname", site.fn.name)
+        for stmt in site.fn.body:
+            for node in ast.walk(stmt):
+                if _is_recording_call(node, instruments):
+                    findings.append(Finding(
+                        rule="OBS001", path=ctx.rel, line=node.lineno,
+                        context=qn, detail=f"jit:{unparse(node)}",
+                        message=f"obs recording `{unparse(node)}` inside a "
+                                f"jitted function — it runs at trace time, "
+                                f"not per call; record after the dispatch"))
+    return findings
+
+
+def check_loop_recordings(ctx: ModuleCtx,
+                          hot: Optional[Iterable[str]] = None
+                          ) -> List[Finding]:
+    """Recording calls inside loop bodies of hot-path modules."""
+    prefixes = tuple(hot) if hot is not None else HOT_PATH_PREFIXES
+    if not any(ctx.modname.startswith(p) or ctx.modname == p.rstrip(".")
+               for p in prefixes):
+        return []
+    if not _uses_obs(ctx):
+        return []
+    instruments = _instrument_names(ctx.tree)
+    findings: List[Finding] = []
+    stack: List[ast.AST] = []
+
+    def walk(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qn = _qualname(stack + [child])
+                chk = _LoopRecordingChecker(ctx, qn, instruments, findings)
+                for st in child.body:
+                    chk.visit(st)
+                stack.append(child)
+                walk(child)
+                stack.pop()
+            elif isinstance(child, ast.ClassDef):
+                stack.append(child)
+                walk(child)
+                stack.pop()
+            else:
+                walk(child)
+
+    walk(ctx.tree)
+    return findings
+
+
+def check_module(ctx: ModuleCtx,
+                 hot: Optional[Iterable[str]] = None) -> List[Finding]:
+    """All OBS rules for one module."""
+    out: List[Finding] = []
+    out += check_jit_recordings(ctx)
+    out += check_loop_recordings(ctx, hot)
+    return out

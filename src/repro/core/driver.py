@@ -18,11 +18,14 @@ sequential.py.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import store
 from repro.core import sequential as seq_lib
 from repro.core.scheduler import PruneScheduler, SchedulerConfig
@@ -72,8 +75,9 @@ def parallel_prune(model: ModelDef, params: Any, calib_batches: Sequence[Dict],
         dense_unit = seq_lib._unit_params_of(params, spec)
         dense_states = unit_inputs[name]
         pruned_states = [dict(s) for s in dense_states]
-        pruned_unit, reports, _ = seq_lib.prune_unit(
-            model, spec, dense_unit, dense_states, pruned_states, cfg)
+        with obs.span("prune.unit", unit=name):
+            pruned_unit, reports, _ = seq_lib.prune_unit(
+                model, spec, dense_unit, dense_states, pruned_states, cfg)
         telemetry = dict(cfg.solver.describe(),
                          batched_ops=sum(1 for r in reports if r.group_size > 1))
         return {"unit_params": pruned_unit,
@@ -104,6 +108,13 @@ def parallel_prune(model: ModelDef, params: Any, calib_batches: Sequence[Dict],
         save_payload=save_payload if has_store else None,
         load_payload=load_payload if has_store else None)
     results = scheduler.run()
+    if has_store:
+        # run-level telemetry next to the unit checkpoints; consumed by
+        # `python -m repro.obs report <ckpt_dir>`
+        os.makedirs(sched.checkpoint_dir, exist_ok=True)
+        with open(os.path.join(sched.checkpoint_dir, "run_summary.json"),
+                  "w", encoding="utf-8") as f:
+            json.dump(scheduler.run_summary, f, indent=1, default=float)
 
     new_params = params
     reports: List[OperatorReport] = []

@@ -71,6 +71,12 @@ class PrunerConfig:
     # MeshExecutor with model_parallel > 1 is bound to the solver
     # (SequentialConfig.executor / PruneRecipe.mesh); otherwise ignored.
     row_shard: bool = False
+    # keep the first trace_len-1 outer iterations' (e_total, lam) plus the
+    # last one as PruneResult.trace — the convergence trajectory the obs
+    # layer persists (repro.obs, DESIGN.md §14).  The history rides the
+    # fused while_loop as device arrays and is transferred ONCE after the
+    # solve (no per-iteration host sync).  0 (default) records nothing.
+    trace_len: int = 0
 
 
 @dataclasses.dataclass
@@ -82,6 +88,10 @@ class PruneResult:
     outer_iters: int
     fista_iters: int               # total inner iterations across the loop
     warm_error: float              # error of the warm start (for ablation)
+    # per-outer-iteration {"e_total", "lam"} host arrays when
+    # cfg.trace_len > 0 (length min(outer_iters, trace_len); iterations
+    # beyond the budget collapse into the last slot), else None
+    trace: Optional[dict] = None
 
 
 # warm-start dispatch lives with the baselines it selects from
@@ -108,13 +118,20 @@ class OuterState(NamedTuple):
 def _fused_outer(G: jnp.ndarray, B: jnp.ndarray, h: jnp.ndarray,
                  w0: jnp.ndarray, L: jnp.ndarray, spec: SparsitySpec,
                  cfg: PrunerConfig) -> tuple:
-    """Algorithm 1 as one XLA computation.  Returns (OuterState, warm_error).
+    """Algorithm 1 as one XLA computation.  Returns (OuterState,
+    warm_error, trace) — ``trace`` is a {"e_total", "lam"} dict of
+    (trace_len,) device arrays when ``cfg.trace_len > 0``, else None.
 
     Branches of the host loop become ``jnp.where`` selects; the stopping
     rule (t >= T or E_stop < eps, checked after the bisection update)
     becomes the while_loop condition.  Trip count, bisection trajectory and
     accepted candidates match the host reference exactly up to fp32
     round-off of the lambda midpoints.
+
+    The optional convergence trace rides the carry as fixed-shape device
+    arrays written at ``min(k, trace_len - 1)`` — iteration k's candidate
+    error and the lambda that produced it — so the caller can transfer
+    the whole history in one post-solve host sync (the JAX003 discipline).
     """
     w0 = round_to(w0.astype(jnp.float32), spec)  # feasible warm start
     e0 = gram_lib.frob_error_gh(G, h, w0, B)
@@ -124,11 +141,16 @@ def _fused_outer(G: jnp.ndarray, B: jnp.ndarray, h: jnp.ndarray,
         hi=jnp.float32(cfg.lam_hi), t=jnp.int32(0),
         e_stop=jnp.float32(jnp.inf), k=jnp.int32(0),
         inner=jnp.int32(0))
+    tl = int(cfg.trace_len)   # static: the carry's structure is fixed
+    trace0 = None if tl <= 0 else {"e_total": jnp.zeros((tl,), jnp.float32),
+                                   "lam": jnp.zeros((tl,), jnp.float32)}
 
-    def cond(s: OuterState):
+    def cond(carry):
+        s = carry[0]
         return (s.k < cfg.max_outer) & (s.t < cfg.patience) & (s.e_stop >= cfg.eps)
 
-    def body(s: OuterState) -> OuterState:
+    def body(carry):
+        s, tr = carry
         w_k, iters = fista_lib.solve(
             G, B, s.w_best, s.lam, L=L, max_iters=cfg.fista_iters,
             tol=cfg.fista_tol, momentum=cfg.momentum, step_impl=cfg.step_impl)
@@ -152,10 +174,15 @@ def _fused_outer(G: jnp.ndarray, B: jnp.ndarray, h: jnp.ndarray,
         lo = jnp.where(raise_lam, s.lam, s.lo)
         hi = jnp.where(raise_lam, s.hi, s.lam)
         lam = 0.5 * (lo + hi)
-        return OuterState(w_best, e_best, lam, lo, hi, t, e_stop,
-                          s.k + 1, s.inner + iters.astype(jnp.int32))
+        if tr is not None:
+            idx = jnp.minimum(s.k, tl - 1)
+            tr = {"e_total": tr["e_total"].at[idx].set(e_total),
+                  "lam": tr["lam"].at[idx].set(s.lam)}
+        return (OuterState(w_best, e_best, lam, lo, hi, t, e_stop,
+                           s.k + 1, s.inner + iters.astype(jnp.int32)), tr)
 
-    return jax.lax.while_loop(cond, body, state), e0
+    out, trace = jax.lax.while_loop(cond, body, (state, trace0))
+    return out, e0, trace
 
 
 def _solve_one(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
@@ -198,17 +225,31 @@ def _fused_group(ws: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
 
 
 def _make_result(weight, e_best: float, lam: float, outer: int, inner: int,
-                 warm_error: float, stats_h: float) -> PruneResult:
+                 warm_error: float, stats_h: float,
+                 trace: Optional[dict] = None) -> PruneResult:
     wx_norm = float(np.sqrt(max(stats_h, 1e-30)))
     return PruneResult(
         weight=weight, error=e_best, rel_error=e_best / max(wx_norm, 1e-30),
-        lam=lam, outer_iters=outer, fista_iters=inner, warm_error=warm_error)
+        lam=lam, outer_iters=outer, fista_iters=inner, warm_error=warm_error,
+        trace=trace)
 
 
-def _result_from_outer(out: OuterState, e0, w_dtype, stats_h: float) -> PruneResult:
+def _trim_trace(trace: Optional[dict], outer: int, tl: int) -> Optional[dict]:
+    """Host copy of one operator's device trace, cut to the iterations
+    actually executed (one transfer per array, AFTER the solve)."""
+    if trace is None:
+        return None
+    n = min(outer, tl)
+    return {k: np.asarray(v, np.float32)[:n] for k, v in trace.items()}
+
+
+def _result_from_outer(out: OuterState, e0, w_dtype, stats_h: float,
+                       trace: Optional[dict] = None,
+                       trace_len: int = 0) -> PruneResult:
+    outer = int(out.k)
     return _make_result(out.w_best.astype(w_dtype), float(out.e_best),
-                        float(out.lam), int(out.k), int(out.inner), float(e0),
-                        stats_h)
+                        float(out.lam), outer, int(out.inner), float(e0),
+                        stats_h, trace=_trim_trace(trace, outer, trace_len))
 
 
 def prune_operator(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
@@ -226,11 +267,12 @@ def prune_operator(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
         raise ValueError(f"unknown outer_impl {cfg.outer_impl!r}")
     warm_in = cfg.warm_start if warm is None else warm
     if isinstance(warm_in, str):
-        out, e0 = _fused_single(w, stats, spec, cfg, warm_in)
+        out, e0, trace = _fused_single(w, stats, spec, cfg, warm_in)
     else:
-        out, e0 = _fused_single_warm(w, stats, jnp.asarray(warm_in, jnp.float32),
-                                     spec, cfg)
-    return _result_from_outer(out, e0, w.dtype, float(stats.h))
+        out, e0, trace = _fused_single_warm(
+            w, stats, jnp.asarray(warm_in, jnp.float32), spec, cfg)
+    return _result_from_outer(out, e0, w.dtype, float(stats.h),
+                              trace=trace, trace_len=cfg.trace_len)
 
 
 def prune_group(ws: Union[jnp.ndarray, Sequence[jnp.ndarray]],
@@ -270,7 +312,7 @@ def prune_group(ws: Union[jnp.ndarray, Sequence[jnp.ndarray]],
     if cfg.outer_impl != "fused":
         raise ValueError(f"unknown outer_impl {cfg.outer_impl!r}")
 
-    out, e0 = _fused_group(ws, stats, spec, cfg, warm_name)
+    out, e0, trace = _fused_group(ws, stats, spec, cfg, warm_name)
     # one host sync for the whole group
     h_np = np.asarray(stats.h, np.float32)
     e_best = np.asarray(out.e_best, np.float32)
@@ -278,9 +320,14 @@ def prune_group(ws: Union[jnp.ndarray, Sequence[jnp.ndarray]],
     outer = np.asarray(out.k, np.int32)
     inner = np.asarray(out.inner, np.int32)
     warm_err = np.asarray(e0, np.float32)
+    if trace is not None:   # (k, trace_len) leaves — transferred once
+        trace = {k: np.asarray(v, np.float32) for k, v in trace.items()}
     return [_make_result(out.w_best[i], float(e_best[i]), float(lam[i]),
                          int(outer[i]), int(inner[i]), float(warm_err[i]),
-                         float(h_np[i]))
+                         float(h_np[i]),
+                         trace=None if trace is None else
+                         {k: v[i, :min(int(outer[i]), cfg.trace_len)]
+                          for k, v in trace.items()})
             for i in range(ws.shape[0])]
 
 
@@ -312,6 +359,12 @@ def _prune_operator_host(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
     e_stop = float("inf")
     total_inner = 0
     outer = 0
+    # convergence trace matching the fused carry's write-at-min(k, tl-1)
+    # semantics exactly: first tl-1 iterations keep their slot, every
+    # later one overwrites the last slot
+    tl = int(cfg.trace_len)
+    trace_e: List[float] = []
+    trace_lam: List[float] = []
 
     solve = fista_lib.solve if inner_solve is None else inner_solve
     for outer in range(1, cfg.max_outer + 1):
@@ -323,6 +376,13 @@ def _prune_operator_host(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
         e_fista = float(gram_lib.frob_error(stats, w_k, B))
         e_total = float(gram_lib.frob_error(stats, w_k1, B))
         e_round = e_total - e_fista
+        if tl > 0:
+            if len(trace_e) < tl:
+                trace_e.append(e_total)
+                trace_lam.append(lam)
+            else:
+                trace_e[-1] = e_total
+                trace_lam[-1] = lam
 
         if e_total < e_best:
             e_stop = (e_best - e_total) / max(e_best, 1e-30)
@@ -347,7 +407,10 @@ def _prune_operator_host(w: jnp.ndarray, stats: GramStats, spec: SparsitySpec,
     return PruneResult(
         weight=w_best.astype(w.dtype), error=e_best,
         rel_error=e_best / max(wx_norm, 1e-30), lam=lam, outer_iters=outer,
-        fista_iters=total_inner, warm_error=warm_error)
+        fista_iters=total_inner, warm_error=warm_error,
+        trace=None if tl <= 0 else
+        {"e_total": np.asarray(trace_e, np.float32),
+         "lam": np.asarray(trace_lam, np.float32)})
 
 
 def prune_with_method(method: str, w: jnp.ndarray, stats: GramStats,

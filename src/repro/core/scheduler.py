@@ -247,3 +247,26 @@ class PruneScheduler:
             "median_unit_seconds": (sorted(fresh)[len(fresh) // 2]
                                     if fresh else 0.0),
         }
+
+    @property
+    def run_summary(self) -> Dict[str, Any]:
+        """Run-level telemetry persisted as ``run_summary.json`` next to the
+        unit checkpoints and rendered by ``python -m repro.obs report``."""
+        durations = {u: r.seconds for u, r in self._results.items()}
+        fresh = {u: s for u, s in durations.items() if s > 0}
+        hist: Dict[str, int] = {}
+        for u in self._results:
+            a = str(self._attempts.get(u, 1))
+            hist[a] = hist.get(a, 0) + 1
+        slowest = (max(fresh.items(), key=lambda kv: kv[1])
+                   if fresh else None)
+        return {
+            "total_solver_seconds": sum(fresh.values()),
+            "attempts_histogram": hist,
+            "slowest_unit": (None if slowest is None
+                             else {"unit": slowest[0],
+                                   "seconds": slowest[1]}),
+            "completed": len(self._results),
+            "resumed": len(durations) - len(fresh),
+            "duplicated": sorted(self._duplicated),
+        }

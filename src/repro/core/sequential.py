@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import gram as gram_lib
 from repro.core import solvers as solvers_lib
 from repro.core.gram import GramStats
@@ -57,6 +58,34 @@ from repro.utils.tree import (flatten_with_paths, get_path, set_path,
                               tree_index, tree_stack)
 
 log = get_logger("sequential")
+
+
+def _record_solve_obs(unit: str, key: str, res: Any, seconds: float) -> None:
+    """Prune-side observability (repro.obs): per-operator solver counters,
+    iteration/rel-err histograms and — when the solver carried a
+    ``trace_len``-bounded convergence history out of its while_loop — one
+    series record per operator.  No-op while obs is disabled; everything
+    recorded here is already on the host (PruneResult fields)."""
+    if not obs.enabled():
+        return
+    reg = obs.registry()
+    reg.counter("prune.operators").inc()
+    reg.counter("prune.lambda_bisection_steps").inc(
+        int(getattr(res, "outer_iters", 0)))
+    reg.histogram("prune.outer_iters", obs.COUNT_BUCKETS).observe(
+        getattr(res, "outer_iters", 0))
+    reg.histogram("prune.fista_iters", obs.COUNT_BUCKETS).observe(
+        getattr(res, "fista_iters", 0))
+    reg.histogram("prune.rel_err", obs.FRACTION_BUCKETS).observe(res.rel_error)
+    reg.histogram("prune.solve_s", obs.LATENCY_BUCKETS_S).observe(seconds)
+    trace = getattr(res, "trace", None)
+    if trace is not None:
+        reg.series("prune.solver_trace").append({
+            "unit": unit, "key": key,
+            "rel_error": float(res.rel_error),
+            "outer_iters": int(res.outer_iters),
+            "e_total": [float(x) for x in trace["e_total"]],
+            "lam": [float(x) for x in trace["lam"]]})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -305,31 +334,39 @@ def prune_unit(model: ModelDef, spec: UnitSpec, dense_unit: Any,
                 extras={sp.name: sp.init(ws[k].shape[0])
                         for sp in extra_specs})
             for k in group_keys}
-        for idx, pstacked in zip(buckets, pruned_stacked):
-            caps_stacked = tree_stack([{k: dense_caps[i][k] for k in group_keys}
-                                       for i in idx])
-            static_kw = dict(unit_apply=model.unit_apply,
-                             layer_index=spec.layer_index,
-                             group_keys=group_keys, ec_none=ec_none,
-                             extra_specs=extra_specs)
-            if executor is not None and executor.can_shard_batches(len(idx)):
-                # data-parallel accumulation: per-shard Gram scan + one
-                # psum over "data" (DESIGN.md §10)
-                stats = executor.sharded_group_stats(
-                    _group_stats_scan, stats, current, ws, caps_stacked,
-                    pstacked, **static_kw)
-            else:
-                stats = _group_stats_scan(stats, current, ws, caps_stacked,
-                                          pstacked, **static_kw)
+        t_gram = time.perf_counter()
+        with obs.span("prune.gram", unit=spec.name, ops=len(group_keys)):
+            for idx, pstacked in zip(buckets, pruned_stacked):
+                caps_stacked = tree_stack(
+                    [{k: dense_caps[i][k] for k in group_keys} for i in idx])
+                static_kw = dict(unit_apply=model.unit_apply,
+                                 layer_index=spec.layer_index,
+                                 group_keys=group_keys, ec_none=ec_none,
+                                 extra_specs=extra_specs)
+                if executor is not None and executor.can_shard_batches(len(idx)):
+                    # data-parallel accumulation: per-shard Gram scan + one
+                    # psum over "data" (DESIGN.md §10)
+                    stats = executor.sharded_group_stats(
+                        _group_stats_scan, stats, current, ws, caps_stacked,
+                        pstacked, **static_kw)
+                else:
+                    stats = _group_stats_scan(stats, current, ws, caps_stacked,
+                                              pstacked, **static_kw)
+        if obs.enabled():
+            obs.registry().histogram(
+                "prune.gram_scan_s", obs.LATENCY_BUCKETS_S).observe(
+                time.perf_counter() - t_gram)
 
         # prune the group's operators against their statistics: same-shape
         # operators are solved in one batched dispatch when the solver can
         for sub in _shape_subgroups(group, dense_unit):
             if solver.supports_group_batch and len(sub) > 1:
                 t0 = time.perf_counter()
-                results = solver.solve_group(
-                    [jnp.asarray(ws[k], jnp.float32).T for k in sub],
-                    [stats[k] for k in sub], cfg.spec)
+                with obs.span("prune.solve_group", unit=spec.name,
+                              ops=len(sub)):
+                    results = solver.solve_group(
+                        [jnp.asarray(ws[k], jnp.float32).T for k in sub],
+                        [stats[k] for k in sub], cfg.spec)
                 per_op = (time.perf_counter() - t0) / len(sub)
                 for key, res in zip(sub, results):
                     rep = OperatorReport(
@@ -338,11 +375,13 @@ def prune_unit(model: ModelDef, spec: UnitSpec, dense_unit: Any,
                         res.fista_iters, per_op, solver.group_label, len(sub))
                     reports.append(rep)
                     current = set_weight(current, key, res.weight.T)
+                    _record_solve_obs(spec.name, key, res, per_op)
                 continue
             for key in sub:
                 w_paper = jnp.asarray(ws[key], jnp.float32).T   # (out, in)
                 t0 = time.perf_counter()
-                res = solver.solve(w_paper, stats[key], cfg.spec)
+                with obs.span("prune.solve", unit=spec.name, op=key):
+                    res = solver.solve(w_paper, stats[key], cfg.spec)
                 rep = OperatorReport(spec.name, key, tuple(w_paper.shape),
                                      res.error, res.rel_error, res.lam,
                                      res.outer_iters, res.fista_iters,
@@ -350,6 +389,7 @@ def prune_unit(model: ModelDef, spec: UnitSpec, dense_unit: Any,
                 rep.seconds = time.perf_counter() - t0
                 reports.append(rep)
                 current = set_weight(current, key, res.weight.T)
+                _record_solve_obs(spec.name, key, res, rep.seconds)
 
     # relay: pruned next states through the fully-pruned unit — only the
     # serial cross-unit modes consume them.  Under "intra"/"none" the

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.distributed import rowfista, sharding
 from repro.utils import get_logger
 
@@ -278,7 +279,12 @@ class MeshExecutor:
         fn = self._cached(
             ("gram", scan_fn,
              tuple(sorted(static_kw.items(), key=lambda kv: kv[0]))), build)
-        return fn(init, zeros, current, ws, dense_caps, pruned_states)
+        # span covers the sharded dispatch only (recording stays outside
+        # the jitted body — OBS001); async dispatch returns immediately,
+        # so `dur` measures launch overhead, not device seconds
+        with obs.span("mesh.group_stats", data=self.data_size,
+                      model=self.model_size):
+            return fn(init, zeros, current, ws, dense_caps, pruned_states)
 
     # ------------------------------------------------------------------
     # prune: row-sharded FISTA solves over "model" (rowfista path)
@@ -339,4 +345,6 @@ class MeshExecutor:
 
         mapped = build() if cache_key is None else \
             self._cached(("map", cache_key, len(params)), build)
-        return mapped(stacked, *params)
+        with obs.span("mesh.data_map", data=self.data_size,
+                      key=str(cache_key)):
+            return mapped(stacked, *params)

@@ -19,7 +19,7 @@ import dataclasses
 import json
 import sys
 
-from repro import api
+from repro import api, obs
 from repro.checkpoint import store
 from repro.core.solvers import registered_solvers
 from repro.data import CorpusConfig, MarkovCorpus
@@ -65,7 +65,8 @@ def recipe_from_args(args: argparse.Namespace) -> api.PruneRecipe:
     if args.method == "fista":
         solver_kwargs = {"warm_start": args.warm_start,
                          "outer_impl": args.outer_impl,
-                         "group_batch": not args.no_group_batch}
+                         "group_batch": not args.no_group_batch,
+                         "trace_len": args.solver_trace_len}
     elif args.method == "admm":
         solver_kwargs = {"warm_start": args.warm_start}
     return api.PruneRecipe(
@@ -96,6 +97,10 @@ def main() -> int:
     ap.add_argument("--no-group-batch", action="store_true",
                     help="disable the vmap-batched solve of same-shape"
                          " operator groups (wq/wk/wv, gate/up, MoE experts)")
+    ap.add_argument("--solver-trace-len", type=int, default=8,
+                    help="per-operator convergence trace budget: keep this "
+                         "many outer-iteration (error, lambda) pairs per "
+                         "solve, recorded into repro.obs (0 disables)")
     ap.add_argument("--recipe", default=None,
                     help="load the full PruneRecipe from this JSON file "
                          "(overrides every other pruning flag)")
@@ -145,6 +150,7 @@ def main() -> int:
     if executor is not None:
         log.info("mesh-native run: %s", executor.describe())
     calib = api.calibration_for(recipe, corpus)
+    obs.enable()            # spans + prune metrics for the whole prune phase
     pruned, reports, stats = api.prune(model, tr.params, calib, recipe,
                                        executor=executor)
     pruned_ppl = evaluate_ppl(model, pruned, corpus, 8, seq_len, 4)
@@ -155,6 +161,10 @@ def main() -> int:
                         corpus_seed=args.seed, smoke=True,
                         dense_ppl=dense_ppl, pruned_ppl=pruned_ppl)
         log.info("saved %s + %s under %s", DENSE_MODEL, PRUNED_MODEL, ckpt_dir)
+        obs_dir = obs.save_run_dir(ckpt_dir)
+        if obs_dir:
+            log.info("obs artifacts under %s — render with "
+                     "`python -m repro.obs report %s`", obs_dir, ckpt_dir)
 
     rel = sum(r.rel_error for r in reports) / max(len(reports), 1)
     batched = sum(1 for r in reports if r.group_size > 1)

@@ -26,7 +26,7 @@ from typing import List, Optional
 import jax
 import numpy as np
 
-from repro import api
+from repro import api, obs
 from repro.checkpoint import store
 from repro.serve import (BatchConfig, ContinuousBatcher, PoolExhausted,
                          synthetic_trace)
@@ -86,7 +86,8 @@ def serve_trace(model, params, args: argparse.Namespace) -> dict:
     if executor is not None:
         log.info("tensor-parallel serving: %s", executor.describe())
     batcher = ContinuousBatcher(model, params, cfg, executor=executor)
-    results = batcher.run(trace)
+    with obs.span("serve.run", requests=len(trace)):
+        results = batcher.run(trace)
 
     lat = np.asarray([r.latency for r in results])
     tokens = int(sum(len(r.tokens) for r in results))
@@ -149,8 +150,18 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "per the Megatron rules, paged KV pool "
                          "heads-sharded); tokens identical to 1-device")
     ap.add_argument("--out", default=None, help="write the JSON report here")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="record serve SLO metrics (TTFT, inter-token "
+                         "latency, queue depth, pool occupancy) and write "
+                         "them as metrics JSONL here")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace.json of the run's "
+                         "spans here (implies recording, like --metrics-out)")
     args = ap.parse_args(argv)
 
+    if args.metrics_out or args.trace_out:
+        # must precede the batcher build: its instruments bind in __init__
+        obs.enable()
     try:
         model, params, source = load_serving_model(args)
         report = serve_trace(model, params, args)
@@ -165,6 +176,21 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"{report['mean_occupancy']:.2f}/{args.slots})")
     print(f"latency p50 {report['latency_p50_s']*1e3:.0f} ms, "
           f"p99 {report['latency_p99_s']*1e3:.0f} ms")
+    if args.metrics_out or args.trace_out:
+        reg = obs.registry()
+        ttft = reg.get("serve.ttft_s")
+        itl = reg.get("serve.inter_token_s")
+        if ttft is not None and itl is not None and ttft.total and itl.total:
+            print(f"SLO: ttft p50 {ttft.quantile(0.5)*1e3:.0f} ms / "
+                  f"p99 {ttft.quantile(0.99)*1e3:.0f} ms, inter-token "
+                  f"p50 {itl.quantile(0.5)*1e3:.1f} ms")
+        if args.metrics_out:
+            reg.dump_jsonl(args.metrics_out)
+            print(f"wrote {args.metrics_out}")
+        if args.trace_out:
+            from repro.obs import spans as spans_lib
+            spans_lib.export_perfetto(obs.recorder().spans(), args.trace_out)
+            print(f"wrote {args.trace_out}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1)

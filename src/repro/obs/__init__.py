@@ -1,0 +1,96 @@
+"""repro.obs — unified tracing + metrics (DESIGN.md §14).
+
+One process-global :class:`~repro.obs.spans.SpanRecorder` and one
+:class:`~repro.obs.metrics.MetricsRegistry`, toggled by
+:func:`enable`/:func:`disable`.  Instrumentation sites follow two rules:
+
+* **spans** go through :func:`span` — it returns a shared no-op context
+  manager while disabled, so span sites cost one function call;
+* **metrics** in hot loops fetch their instruments ONCE at construction
+  behind an ``enabled()`` check (see ``serve/batcher.py``) so the
+  per-tick cost is a guarded attribute access + a bisect, never a
+  registry lookup; the registry itself is reached via :func:`registry`.
+
+Recording never touches device values before they are already on the
+host: solver convergence traces come out of the fused while_loops as
+device arrays and are transferred once post-solve (the JAX003 rule and
+its OBS001 sibling keep this honest).
+
+``save_run_dir(run_dir)`` persists everything next to the checkpoint
+store's artifacts: ``<run_dir>/obs/spans.jsonl``, ``metrics.jsonl`` and
+a Perfetto-loadable ``trace.json``.  ``python -m repro.obs report`` (see
+``report.py``) renders a saved run.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from repro.obs import metrics as metrics_lib
+from repro.obs import spans as spans_lib
+from repro.obs.metrics import (COUNT_BUCKETS, FRACTION_BUCKETS,
+                               LATENCY_BUCKETS_S, MetricsRegistry)
+from repro.obs.spans import NULL_SPAN, Span, SpanRecorder
+
+__all__ = ["enable", "disable", "enabled", "span", "registry", "recorder",
+           "save_run_dir", "MetricsRegistry", "SpanRecorder", "Span",
+           "LATENCY_BUCKETS_S", "COUNT_BUCKETS", "FRACTION_BUCKETS",
+           "OBS_SUBDIR"]
+
+#: subdirectory of a run dir holding the persisted obs artifacts
+OBS_SUBDIR = "obs"
+
+_enabled = False
+_recorder = SpanRecorder()
+_registry = MetricsRegistry()
+
+
+def enable(capacity: int = 4096, reset: bool = True) -> None:
+    """Turn recording on.  ``reset`` (default) starts from a fresh
+    recorder/registry so back-to-back runs don't bleed into each other
+    (benchmarks interleave instrumented and bare runs)."""
+    global _enabled, _recorder, _registry
+    if reset or _recorder.capacity != capacity:
+        _recorder = SpanRecorder(capacity)
+        _registry = MetricsRegistry()
+    _enabled = True
+
+
+def disable() -> None:
+    global _enabled
+    _enabled = False
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def span(name: str, **attrs):
+    """A context manager timing ``name``; no-op while disabled."""
+    if not _enabled:
+        return NULL_SPAN
+    return _recorder.span(name, **attrs)
+
+
+# named `registry` (not `metrics`) so the accessor never shadows the
+# `repro.obs.metrics` submodule attribute on the package
+def registry() -> MetricsRegistry:
+    return _registry
+
+
+def recorder() -> SpanRecorder:
+    return _recorder
+
+
+def save_run_dir(run_dir: str, subdir: str = OBS_SUBDIR) -> Optional[str]:
+    """Persist spans + metrics + Perfetto trace under ``run_dir/obs/``.
+    Returns the obs directory, or None when nothing was recorded."""
+    if _recorder.total == 0 and len(_registry) == 0:
+        return None
+    out = os.path.join(run_dir, subdir)
+    os.makedirs(out, exist_ok=True)
+    sps = _recorder.spans()
+    spans_lib.dump_jsonl(sps, os.path.join(out, "spans.jsonl"))
+    _registry.dump_jsonl(os.path.join(out, "metrics.jsonl"))
+    spans_lib.export_perfetto(sps, os.path.join(out, "trace.json"))
+    return out

@@ -1,0 +1,59 @@
+"""CLI: render or export a run's observability artifacts.
+
+    python -m repro.obs report /tmp/prune_run            # text summary
+    python -m repro.obs report /tmp/prune_run --json out.json
+    python -m repro.obs trace  /tmp/prune_run -o trace.json   # Perfetto
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from repro.obs import OBS_SUBDIR, report as report_lib
+from repro.obs import spans as spans_lib
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    rp = sub.add_parser("report", help="text/JSON summary of a run dir")
+    rp.add_argument("run_dir")
+    rp.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the full summary as JSON here")
+
+    tp = sub.add_parser("trace", help="export Chrome/Perfetto trace.json "
+                                      "from a run dir's spans.jsonl")
+    tp.add_argument("run_dir")
+    tp.add_argument("-o", "--out", default=None,
+                    help="output path (default <run_dir>/obs/trace.json)")
+    args = ap.parse_args(argv)
+
+    if not os.path.isdir(args.run_dir):
+        print(f"error: not a directory: {args.run_dir}", file=sys.stderr)
+        return 2
+
+    if args.cmd == "report":
+        summary = report_lib.summarize_run(args.run_dir)
+        print(report_lib.render_text(summary))
+        if args.json:
+            with open(args.json, "w", encoding="utf-8") as f:
+                json.dump(summary, f, indent=1, default=float)
+            print(f"\nwrote {args.json}")
+        return 0
+
+    spath = os.path.join(args.run_dir, OBS_SUBDIR, "spans.jsonl")
+    if not os.path.exists(spath):
+        print(f"error: no spans at {spath}", file=sys.stderr)
+        return 2
+    out = args.out or os.path.join(args.run_dir, OBS_SUBDIR, "trace.json")
+    spans_lib.export_perfetto(spans_lib.load_jsonl(spath), out)
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,172 @@
+"""Render a run's observability artifacts (``python -m repro.obs``).
+
+A *run dir* is whatever ``launch/prune.py --ckpt-dir`` (or any caller of
+``obs.save_run_dir``) left behind:
+
+* ``obs/spans.jsonl`` + ``obs/metrics.jsonl`` + ``obs/trace.json`` —
+  written by ``repro.obs.save_run_dir``;
+* ``run_summary.json`` — the scheduler's run-level telemetry
+  (``core/driver.py``);
+* ``unit_*/MANIFEST.json`` — per-unit checkpoints whose ``extra``
+  carries the scheduler telemetry (worker / seconds / attempts) and the
+  per-operator solver reports.
+
+``summarize_run`` merges all three into one dict; ``render_text`` prints
+it.  Everything degrades gracefully — a serve-only metrics file, a
+prune run without obs enabled, or a bare spans file each produce a
+partial summary rather than an error.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from repro.obs import OBS_SUBDIR
+from repro.obs import metrics as metrics_lib
+from repro.obs import spans as spans_lib
+
+
+def _load_json(path: str) -> Optional[Dict[str, Any]]:
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def unit_telemetry(run_dir: str) -> List[Dict[str, Any]]:
+    """Scheduler telemetry from every ``unit_*`` checkpoint MANIFEST."""
+    out: List[Dict[str, Any]] = []
+    for mpath in sorted(glob.glob(os.path.join(run_dir, "unit_*",
+                                               "MANIFEST.json"))):
+        manifest = _load_json(mpath)
+        if not manifest:
+            continue
+        extra = manifest.get("extra") or {}
+        tel = dict(extra.get("telemetry") or {})
+        tel["unit"] = os.path.basename(os.path.dirname(mpath))[len("unit_"):]
+        tel["ops"] = len(extra.get("reports") or [])
+        out.append(tel)
+    return out
+
+
+def span_rollup(spans: List[spans_lib.Span]) -> Dict[str, Dict[str, Any]]:
+    """Per-name span aggregate: count, total / max wall seconds."""
+    agg: Dict[str, Dict[str, Any]] = {}
+    for sp in spans:
+        a = agg.setdefault(sp.name, {"count": 0, "total_s": 0.0, "max_s": 0.0})
+        a["count"] += 1
+        a["total_s"] += sp.dur
+        a["max_s"] = max(a["max_s"], sp.dur)
+    return dict(sorted(agg.items()))
+
+
+def summarize_run(run_dir: str) -> Dict[str, Any]:
+    obs_dir = os.path.join(run_dir, OBS_SUBDIR)
+    summary: Dict[str, Any] = {"run_dir": run_dir}
+
+    spath = os.path.join(obs_dir, "spans.jsonl")
+    if os.path.exists(spath):
+        spans = spans_lib.load_jsonl(spath)
+        summary["spans"] = span_rollup(spans)
+        summary["num_spans"] = len(spans)
+
+    mpath = os.path.join(obs_dir, "metrics.jsonl")
+    if os.path.exists(mpath):
+        reg = metrics_lib.MetricsRegistry.load_jsonl(mpath)
+        summary["metrics"] = reg.snapshot()
+
+    rs = _load_json(os.path.join(run_dir, "run_summary.json"))
+    if rs is not None:
+        summary["run_summary"] = rs
+
+    units = unit_telemetry(run_dir)
+    if units:
+        summary["units"] = units
+    return summary
+
+
+def _fmt_seconds(s: Optional[float]) -> str:
+    if s is None:
+        return "-"
+    if s < 1e-3:
+        return f"{s * 1e6:.0f}us"
+    if s < 1.0:
+        return f"{s * 1e3:.1f}ms"
+    return f"{s:.2f}s"
+
+
+def render_text(summary: Dict[str, Any]) -> str:
+    lines: List[str] = [f"run: {summary['run_dir']}"]
+
+    rs = summary.get("run_summary", {}).get("run_summary") \
+        or summary.get("run_summary")
+    if rs:
+        lines.append("\n== scheduler run summary ==")
+        lines.append(f"  total solver seconds: "
+                     f"{rs.get('total_solver_seconds', 0.0):.2f}")
+        slow = rs.get("slowest_unit")
+        if slow:
+            lines.append(f"  slowest unit: {slow['unit']} "
+                         f"({_fmt_seconds(slow['seconds'])})")
+        hist = rs.get("attempts_histogram") or {}
+        if hist:
+            parts = ", ".join(f"{a} attempt(s): {n} unit(s)"
+                              for a, n in sorted(hist.items()))
+            lines.append(f"  attempts: {parts}")
+
+    units = summary.get("units")
+    if units:
+        lines.append("\n== unit telemetry ==")
+        lines.append(f"  {'unit':<16} {'worker':>6} {'attempts':>8} "
+                     f"{'seconds':>9} {'ops':>4}")
+        for u in units:
+            lines.append(f"  {u['unit']:<16} {u.get('worker', '-')!s:>6} "
+                         f"{u.get('attempts', '-')!s:>8} "
+                         f"{_fmt_seconds(u.get('seconds')):>9} "
+                         f"{u['ops']:>4}")
+
+    met = summary.get("metrics")
+    if met:
+        lines.append("\n== metrics ==")
+        for name, m in met.items():
+            kind = m["kind"]
+            if kind == "counter":
+                lines.append(f"  {name:<32} {m['value']}")
+            elif kind == "gauge":
+                lines.append(f"  {name:<32} {m['value']:.4g} "
+                             f"(min {m['min']:.4g}, max {m['max']:.4g})"
+                             if m.get("n") else f"  {name:<32} (unset)")
+            elif kind == "histogram":
+                h = metrics_lib.Histogram.from_dict(m)
+                # latency histograms by convention carry a `_s` suffix;
+                # everything else (iteration counts, depths, fractions)
+                # prints as plain numbers
+                fmt = _fmt_seconds if name.endswith("_s") else \
+                    (lambda v: "-" if v is None else f"{v:.4g}")
+                lines.append(
+                    f"  {name:<32} n={h.total} mean={fmt(h.mean)} "
+                    f"p50={fmt(h.quantile(0.5))} "
+                    f"p99={fmt(h.quantile(0.99))} "
+                    f"max={fmt(None if h.total == 0 else h.vmax)}")
+            elif kind == "series":
+                lines.append(f"  {name:<32} {len(m['records'])} record(s)")
+
+    sps = summary.get("spans")
+    if sps:
+        lines.append("\n== spans (top by total wall) ==")
+        top = sorted(sps.items(), key=lambda kv: -kv[1]["total_s"])[:20]
+        for name, a in top:
+            lines.append(f"  {name:<32} x{a['count']:<6} "
+                         f"total {_fmt_seconds(a['total_s'])}, "
+                         f"max {_fmt_seconds(a['max_s'])}")
+        lines.append(f"  ({summary.get('num_spans', 0)} spans retained; "
+                     f"export with `python -m repro.obs trace <run_dir>`)")
+
+    if len(lines) == 1:
+        lines.append("(no observability artifacts found — run with "
+                     "obs enabled, e.g. launch/serve.py --metrics-out or "
+                     "launch/prune.py --ckpt-dir)")
+    return "\n".join(lines)

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models.registry import ModelDef
 from repro.serve import kv_cache, sampling
 from repro.serve import packed as packed_lib
@@ -155,6 +156,34 @@ class ContinuousBatcher:
                       "active_slot_steps": 0, "context_tokens": 0,
                       "step_walls": []}   # measured per-tick decode seconds
 
+        # serve-side SLO metrics (repro.obs): instruments are fetched ONCE
+        # here behind enabled(), so the per-tick cost while disabled is a
+        # single attribute check; recording only touches values the loop
+        # already holds on the host (no extra device syncs — OBS001)
+        self._obs = obs.enabled()
+        if self._obs:
+            reg = obs.registry()
+            self._m_ttft = reg.histogram("serve.ttft_s",
+                                         obs.LATENCY_BUCKETS_S)
+            self._m_itl = reg.histogram("serve.inter_token_s",
+                                        obs.LATENCY_BUCKETS_S)
+            self._m_wait = reg.histogram("serve.admission_wait_s",
+                                         obs.LATENCY_BUCKETS_S)
+            self._m_step = reg.histogram("serve.step_s",
+                                         obs.LATENCY_BUCKETS_S)
+            self._m_queue = reg.histogram("serve.queue_depth",
+                                          obs.COUNT_BUCKETS)
+            self._m_occ = reg.histogram("serve.pool_occupancy",
+                                        obs.FRACTION_BUCKETS)
+            self._m_active = reg.histogram("serve.active_slots",
+                                           obs.COUNT_BUCKETS)
+            self._c_decode_steps = reg.counter("serve.decode_steps")
+            self._c_prefills = reg.counter("serve.prefills")
+            self._c_prefill_tokens = reg.counter("serve.prefill_tokens")
+            self._c_decode_tokens = reg.counter("serve.decode_tokens")
+            self._c_defrags = reg.counter("serve.defrags")
+            self._c_defrag_blocks = reg.counter("serve.defrag_blocks_moved")
+
         def step(params, pool, tables, pos, token, req_ids, tok_idx, active,
                  temps):
             logits, pool = model.paged_step(params, pool, tables, token, pos,
@@ -234,7 +263,8 @@ class ContinuousBatcher:
         prompt = jnp.asarray(np.asarray(r.prompt, np.int32)[None, :])
         # eager, exact-length prefill: identical values to the solo
         # engine's (prefill K/V and logits do not depend on cache width)
-        logits, kv = self.model.prefill(self._exec_params, prompt, P, None)
+        with obs.span("serve.prefill", req=r.id, tokens=P):
+            logits, kv = self.model.prefill(self._exec_params, prompt, P, None)
         flat = kv_cache.flat_slots(blocks, P, cfg.block_size)
         self.pool_state = kv_cache.scatter_prefill(
             self.pool_state, {k: v[:, 0] for k, v in kv.items()}, flat)
@@ -246,6 +276,13 @@ class ContinuousBatcher:
         first = sampling.sample(first_logits, keys0, r.temperature)
         self.stats["prefills"] += 1
         self.stats["prefill_tokens"] += P
+        if self._obs:
+            # first token is sampled at admission, so TTFT and admission
+            # wait coincide unless the request queued before a free slot
+            self._m_wait.observe(max(now - r.arrival, 0.0))
+            self._m_ttft.observe(max(now - r.arrival, 0.0))
+            self._c_prefills.inc()
+            self._c_prefill_tokens.inc(P)
 
         self._tables[slot] = kv_cache.table_row(blocks,
                                                 cfg.max_blocks_per_request)
@@ -292,8 +329,11 @@ class ContinuousBatcher:
         token = np.asarray(token)   # device sync: the step really finished
         self.stats["step_walls"].append(time.perf_counter() - t0)
         self.stats["steps"] += 1
-        self.stats["active_slot_steps"] += int(self._active.sum())
+        n_active = int(self._active.sum())
+        self.stats["active_slot_steps"] += n_active
         self.stats["context_tokens"] += int((self._pos[self._active] + 1).sum())
+        if self._obs:
+            self._record_tick_obs(n_active)
         for slot in range(self.cfg.slots):
             if not self._active[slot]:
                 continue
@@ -302,6 +342,20 @@ class ContinuousBatcher:
             self._pos[slot] += 1
             self._tok_idx[slot] += 1
             self._maybe_finish(slot, now)
+
+    def _record_tick_obs(self, n_active: int) -> None:
+        """Per-tick SLO recordings: everything here is host state the
+        decode loop already computed (the token sync in ``_tick`` is the
+        baseline sync, not one obs added).  Kept as ONE method so
+        ``benchmarks/serve_bench.bench_obs_overhead`` can time the exact
+        recording sequence the loop runs to derive its overhead gate."""
+        self._m_step.observe(self.stats["step_walls"][-1])
+        self._m_queue.observe(len(self.queue))
+        self._m_occ.observe(self.pool.num_live
+                            / max(self.cfg.num_blocks - 1, 1))
+        self._m_active.observe(n_active)
+        self._c_decode_steps.inc()
+        self._c_decode_tokens.inc(n_active)
 
     def _maybe_finish(self, slot: int, now: float) -> None:
         r = self._slot_req[slot]
@@ -314,6 +368,9 @@ class ContinuousBatcher:
         if reason is None:
             return
         meta = self._meta[slot]
+        if self._obs and len(toks) > 1:
+            self._m_itl.observe(max(now - meta["first_token"], 0.0)
+                                / (len(toks) - 1))
         self._reserved -= meta["need"] - len(self.pool.blocks_of(r.id))
         self.pool.free_request(r.id)
         self._active[slot] = False
@@ -353,6 +410,9 @@ class ContinuousBatcher:
         number of blocks moved.  Safe between ticks: tables of active
         slots are rewritten from the allocator's remapped state."""
         remap = self.pool.defrag()
+        if self._obs:
+            self._c_defrags.inc()
+            self._c_defrag_blocks.inc(len(remap))
         if not remap:
             return 0
         self.pool_state = kv_cache.apply_defrag(

@@ -7,21 +7,36 @@ import sys
 import time
 
 
-_CONFIGURED = False
+#: marker attribute stamped on our handler so re-imports of this module
+#: (pytest reloads, importlib.reload) recognize an already-configured
+#: "repro" logger instead of stacking a second handler onto it — a
+#: module-global guard resets with the module and duplicated every line
+_HANDLER_MARK = "_repro_handler"
+
+
+def _resolve_level() -> int:
+    """``REPRO_LOG`` -> logging level; invalid values fall back to INFO
+    with a one-line warning instead of crashing (or silently passing a
+    bogus string level through to logging)."""
+    raw = os.environ.get("REPRO_LOG", "INFO").upper()
+    level = logging.getLevelName(raw)
+    if isinstance(level, int):
+        return level
+    print(f"repro: invalid REPRO_LOG={raw!r}, falling back to INFO",
+          file=sys.stderr)
+    return logging.INFO
 
 
 def _configure() -> None:
-    global _CONFIGURED
-    if _CONFIGURED:
+    root = logging.getLogger("repro")
+    if any(getattr(h, _HANDLER_MARK, False) for h in root.handlers):
         return
-    level = os.environ.get("REPRO_LOG", "INFO").upper()
     handler = logging.StreamHandler(sys.stderr)
     handler.setFormatter(logging.Formatter("%(asctime)s %(name)s %(levelname)s %(message)s", "%H:%M:%S"))
-    root = logging.getLogger("repro")
-    root.setLevel(level)
+    setattr(handler, _HANDLER_MARK, True)
+    root.setLevel(_resolve_level())
     root.addHandler(handler)
     root.propagate = False
-    _CONFIGURED = True
 
 
 def get_logger(name: str) -> logging.Logger:

@@ -1,0 +1,26 @@
+"""OBS001 true positives: recording at trace time and per token."""
+import jax
+
+from repro import obs
+
+
+def make_step(reg):
+    m = reg.histogram("step_s")
+
+    def step(x):
+        m.observe(1.0)                  # recording inside a jitted body
+        return x * 2
+
+    return jax.jit(step)
+
+
+class Driver:
+    def __init__(self, reg):
+        self._m_tok = reg.counter("tokens")
+
+    def drive(self, steps, reg):
+        for _ in range(steps):
+            self._m_tok.inc()           # counter bump per token
+            with obs.span("tick"):      # span per token
+                pass
+            reg.histogram("d").observe(0.1)   # chained constructor record

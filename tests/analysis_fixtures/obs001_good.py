@@ -1,0 +1,24 @@
+"""OBS001 true negatives: record around the loop, never inside it."""
+import jax
+
+from repro import obs
+
+
+def make_step(reg):
+    def step(x):
+        return x * 2                    # jitted body stays recording-free
+
+    return jax.jit(step)
+
+
+class Driver:
+    def __init__(self, reg):
+        self._m_tok = reg.counter("tokens")
+        self._m_drive = reg.histogram("drive_s")
+
+    def drive(self, steps):
+        n = 0
+        with obs.span("drive"):         # ONE span around the whole loop
+            for _ in range(steps):
+                n += 1                  # loop body does the work only
+        self._m_tok.inc(n)              # record once, after the loop

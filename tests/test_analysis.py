@@ -18,7 +18,8 @@ import numpy as np
 import pytest
 
 from repro.analysis import core as acore
-from repro.analysis import rules_jax, rules_mesh, rules_pallas, trace_budget
+from repro.analysis import (rules_jax, rules_mesh, rules_obs, rules_pallas,
+                            trace_budget)
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 ROOT = os.path.dirname(HERE)
@@ -90,6 +91,36 @@ class TestJAX004DeclaredJits:
             "tests.analysis_fixtures.jax004_undeclared:declared_fn": 1,
             "tests.analysis_fixtures.jax004_undeclared:undeclared_fn": 1}
         assert rules_jax.check_jit_declared(ctx, budgets=budgets) == []
+
+
+class TestOBS001RecordingPlacement:
+    def test_bad_flags_jit_and_loop_recordings(self):
+        found = rules_obs.check_module(parse("obs001_bad.py"), hot=HOT)
+        assert rules_of(found) == ["OBS001"]
+        details = sorted(f.detail for f in found)
+        # one recording traced into a jitted body...
+        assert [d for d in details if d.startswith("jit:")] == \
+            ["jit:m.observe(1.0)"]
+        # ...and three per-iteration recordings in the hot loop: a bound
+        # counter, a span-per-token, and a chained constructor record
+        loops = [d for d in details if d.startswith("loop:")]
+        assert len(loops) == 3
+        assert "loop:self._m_tok.inc()" in loops
+        assert any("obs.span" in d for d in loops)
+        assert any("reg.histogram" in d for d in loops)
+
+    def test_good_is_clean(self):
+        assert rules_obs.check_module(parse("obs001_good.py"), hot=HOT) == []
+
+    def test_loop_check_scoped_to_hot_paths(self):
+        # outside the hot-path prefixes only the jit check applies
+        found = rules_obs.check_module(parse("obs001_bad.py"),
+                                       hot=("repro.serve.",))
+        assert [f.detail for f in found] == ["jit:m.observe(1.0)"]
+
+    def test_module_without_obs_imports_skipped(self):
+        # recording-shaped calls don't fire without a repro.obs import
+        assert rules_obs.check_module(parse("jax003_bad.py"), hot=HOT) == []
 
 
 # ---------------------------------------------------------------------------

@@ -61,6 +61,21 @@ def test_prune_then_evaluate_cli(tmp_path):
     assert out.returncode == 0, out.stdout + out.stderr
     assert (run_dir / "pruned_model" / "MANIFEST.json").exists()
 
+    # the prune driver records observability artifacts alongside the
+    # checkpoints: spans + metrics + Perfetto trace + scheduler summary
+    obs_dir = run_dir / "obs"
+    for fname in ("spans.jsonl", "metrics.jsonl", "trace.json"):
+        assert (obs_dir / fname).exists(), fname
+    trace = json.loads((obs_dir / "trace.json").read_text())
+    assert any(e.get("name") == "prune.unit"
+               for e in trace["traceEvents"])
+    summary = json.loads((run_dir / "run_summary.json").read_text())
+    assert summary["completed"] > 0 and summary["slowest_unit"]
+    assert summary["total_solver_seconds"] > 0
+    rep = _run("repro.obs", "report", str(run_dir))
+    assert rep.returncode == 0, rep.stdout + rep.stderr
+    assert "prune.solve" in rep.stdout and "scheduler run summary" in rep.stdout
+
     report = tmp_path / "quality.json"
     out = _run("repro.launch.evaluate", "--checkpoint", str(run_dir),
                "--against-dense", "--out", str(report))
@@ -96,14 +111,26 @@ def test_serve_cli_smoke(tmp_path):
     """Continuous-batching serve driver over a Poisson trace (random-init
     smoke model): must report throughput/latency and write the JSON."""
     report = tmp_path / "serve.json"
+    metrics = tmp_path / "metrics.jsonl"
+    trace = tmp_path / "trace.json"
     out = _run("repro.launch.serve", "--arch", "opt125m-proxy", "--smoke",
                "--requests", "5", "--rate", "16", "--max-new-tokens", "6",
-               "--slots", "2", "--out", str(report))
+               "--slots", "2", "--out", str(report),
+               "--metrics-out", str(metrics), "--trace-out", str(trace))
     assert out.returncode == 0, out.stdout + out.stderr
     assert "tok/s" in out.stdout and "latency" in out.stdout
     rec = json.loads(report.read_text())
     assert rec["requests"] == 5 and rec["tokens"] == 30
     assert rec["steps"] > 0 and rec["latency_p99_s"] >= rec["latency_p50_s"]
+    # SLO observability rides the same run: TTFT/inter-token histograms
+    # in the metrics JSONL, spans in a Perfetto-loadable trace
+    assert "SLO: ttft p50" in out.stdout
+    names = {json.loads(line)["name"]
+             for line in metrics.read_text().splitlines() if line.strip()}
+    assert {"serve.ttft_s", "serve.inter_token_s", "serve.step_s",
+            "serve.pool_occupancy", "serve.decode_steps"} <= names
+    events = json.loads(trace.read_text())["traceEvents"]
+    assert any(e.get("name") == "serve.run" for e in events)
 
 
 def test_serve_cli_rejects_oversized_trace():

@@ -284,3 +284,48 @@ def test_elastic_worker_counts_agree():
                              SchedulerConfig(workers=workers)).run()
         assert {k: v.payload for k, v in res.items()} == \
                {f"u{i}": hash(f"u{i}") % 97 for i in range(6)}
+
+
+def test_run_summary_totals_and_slowest():
+    """run_summary feeds `repro.obs report`: solver seconds, the attempts
+    histogram and the slowest unit must reflect the actual run."""
+    def work(u):
+        time.sleep(0.12 if u == "u1" else 0.01)
+        return u
+
+    s = PruneScheduler(["u0", "u1", "u2"], work,
+                       SchedulerConfig(workers=2, straggler_min_wait=300.0))
+    s.run()
+    rs = s.run_summary
+    assert rs["completed"] == 3 and rs["resumed"] == 0
+    assert rs["slowest_unit"]["unit"] == "u1"
+    assert rs["total_solver_seconds"] >= rs["slowest_unit"]["seconds"] > 0.1
+    assert rs["attempts_histogram"] == {"1": 3}
+    assert rs["duplicated"] == []
+
+
+def test_run_summary_counts_retries_and_resumes(tmp_path):
+    attempts = {}
+    lock = threading.Lock()
+
+    def flaky(u):
+        with lock:
+            attempts[u] = attempts.get(u, 0) + 1
+            if u == "u1" and attempts[u] < 2:
+                raise RuntimeError("transient")
+        return _payload_of(u)
+
+    save, load = _store_io(tmp_path)
+    cfg = SchedulerConfig(workers=2, max_retries=3, retry_backoff=0.01,
+                          checkpoint_dir=str(tmp_path),
+                          straggler_min_wait=300.0)
+    first = PruneScheduler(["u0", "u1"], flaky, cfg, save, load)
+    first.run()
+    assert first.run_summary["attempts_histogram"] == {"1": 1, "2": 1}
+
+    # a restart resumes both units from checkpoint: zero fresh seconds
+    second = PruneScheduler(["u0", "u1", "u2"], flaky, cfg, save, load)
+    second.run()
+    rs = second.run_summary
+    assert rs["completed"] == 3 and rs["resumed"] == 2
+    assert rs["slowest_unit"]["unit"] == "u2"
