@@ -43,7 +43,13 @@ TRACE_BUDGETS: Dict[str, int] = {
     # -- serving hot loop: joins/retirements/token steps must never
     #    re-specialize (the test_serve_stack.py:67 pin, generalized) ----
     "repro.serve.batcher:ContinuousBatcher.__init__.<locals>.step": 1,
+    # chunked prefill: fixed chunk width + fixed pool shapes => one
+    # executable regardless of prompt length / chunk offset / hit depth
+    "repro.serve.batcher:ContinuousBatcher.__init__.<locals>.chunk_step": 1,
     "repro.serve.engine:Engine._decode_step": 1,
+    # engine chunked prefill retraces per distinct prompt-block count
+    # (the private per-row pool is sized ceil(P/bs)+1 blocks)
+    "repro.serve.engine:Engine._chunk_step": 4,
     # -- eval: one CE/KL closure per model, cached weak-keyed ----------
     "repro.eval.perplexity:_ce_fn.<locals>.fn": 1,
     "repro.eval.divergence:kl_divergence.<locals>._stats": 1,
@@ -194,6 +200,17 @@ def scenario_batcher() -> None:
                     max_new_tokens=n, temperature=0.0)
             for i, (p, n) in enumerate([(5, 6), (9, 4), (3, 8)])]
     ContinuousBatcher(model, params, bc).run(reqs)
+    # chunked prefill + prefix cache: shared prefixes, varying tail
+    # lengths and chunk offsets must all hit ONE chunk executable
+    bc2 = BatchConfig(slots=3, block_size=8, max_blocks_per_request=4,
+                      num_blocks=16, prefill_chunk=8, prefix_cache=True)
+    prefix = rng.integers(0, 128, size=9).astype(np.int32)
+    reqs2 = [Request(id=i, prompt=np.concatenate(
+                         [prefix, rng.integers(0, 128, size=p)]
+                     ).astype(np.int32),
+                     max_new_tokens=n, temperature=0.0, arrival=0.0)
+             for i, (p, n) in enumerate([(4, 4), (7, 3), (2, 5)])]
+    ContinuousBatcher(model, params, bc2).run(reqs2)
 
 
 def scenario_engine_generate() -> None:

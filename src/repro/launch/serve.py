@@ -69,7 +69,9 @@ def serve_trace(model, params, args: argparse.Namespace) -> dict:
     cfg = BatchConfig(slots=args.slots, block_size=args.block_size,
                       max_blocks_per_request=args.max_blocks_per_request,
                       num_blocks=args.blocks, seed=args.seed,
-                      sparse=args.sparse, decode_impl=args.decode_impl)
+                      sparse=args.sparse, decode_impl=args.decode_impl,
+                      prefill_chunk=args.prefill_chunk,
+                      prefix_cache=args.prefix_cache)
     pmax = min(args.prompt_len_max,
                cfg.context_len - args.max_new_tokens,
                model.cfg.max_seq - args.max_new_tokens)
@@ -78,10 +80,19 @@ def serve_trace(model, params, args: argparse.Namespace) -> dict:
             f"prompt lengths [{args.prompt_len_min}, {args.prompt_len_max}] "
             f"don't fit the serving context ({cfg.context_len}) or max_seq "
             f"({model.cfg.max_seq}) with max_new_tokens={args.max_new_tokens}")
+    prefix_len = args.shared_prefix
+    if prefix_len and prefix_len + args.prompt_len_min > pmax:
+        raise ValueError(
+            f"--shared-prefix {prefix_len} leaves no room for prompt tails "
+            f"within the serving context ({cfg.context_len})")
     trace = synthetic_trace(args.requests, args.rate, model.cfg.vocab,
-                            prompt_len=(args.prompt_len_min, pmax),
+                            prompt_len=(args.prompt_len_min,
+                                        pmax - prefix_len),
                             max_new_tokens=args.max_new_tokens,
-                            temperature=args.temperature, seed=args.seed)
+                            temperature=args.temperature, seed=args.seed,
+                            priorities=args.priorities,
+                            deadline_s=args.deadline_s,
+                            shared_prefix_len=prefix_len)
     executor = api.MeshExecutor.from_spec(args.mesh) if args.mesh else None
     if executor is not None:
         log.info("tensor-parallel serving: %s", executor.describe())
@@ -93,6 +104,8 @@ def serve_trace(model, params, args: argparse.Namespace) -> dict:
     tokens = int(sum(len(r.tokens) for r in results))
     wall = max(r.finished for r in results)
     walls = batcher.stats["step_walls"]
+    prompt_tokens = int(sum(len(r.prompt) for r in trace))
+    hit_tokens = int(sum(r.prefix_hit_tokens for r in results))
     return {
         "sparse_mode": batcher.sparse_stats["mode"],
         "decode_impl": cfg.decode_impl,
@@ -105,10 +118,19 @@ def serve_trace(model, params, args: argparse.Namespace) -> dict:
                           / max(batcher.stats["steps"], 1),
         "latency_p50_s": float(np.percentile(lat, 50)),
         "latency_p99_s": float(np.percentile(lat, 99)),
+        "prefill_chunks": batcher.stats["prefill_chunks"],
+        "preemptions": batcher.stats["preemptions"],
+        "resumes": batcher.stats["resumes"],
+        "prefix_hit_tokens": hit_tokens,
+        "prefix_hit_rate": hit_tokens / max(prompt_tokens, 1),
         "config": {"slots": cfg.slots, "block_size": cfg.block_size,
                    "num_blocks": cfg.num_blocks,
                    "context_len": cfg.context_len, "rate": args.rate,
                    "decode_impl": cfg.decode_impl,
+                   "prefill_chunk": cfg.prefill_chunk,
+                   "prefix_cache": cfg.prefix_cache,
+                   "shared_prefix": prefix_len,
+                   "priorities": args.priorities,
                    "mesh": executor.describe() if executor is not None
                            else {"data": 1, "model": 1, "devices": 1}},
     }
@@ -134,6 +156,25 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=4.0,
                     help="Poisson arrival rate (req/s); <=0: all at t=0")
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="C",
+                    help="chunked prefill: admit prompts through C-token "
+                         "chunks interleaved with decode ticks (bounds "
+                         "inter-token stalls under long-prompt arrivals)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prompt-prefix cache over the paged pool "
+                         "(requires --prefill-chunk); cache-hit tokens are "
+                         "bitwise identical to cold prefill")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend one shared N-token prefix to every "
+                         "prompt in the synthetic trace (exercises "
+                         "--prefix-cache hits)")
+    ap.add_argument("--priorities", type=int, default=1, metavar="K",
+                    help="draw request priorities uniformly from [0, K) "
+                         "(0 = most urgent; K>1 enables preemption of "
+                         "lower-priority actives under pool pressure)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline (seconds after arrival) "
+                         "used as the tiebreak within a priority class")
     ap.add_argument("--prompt-len-min", type=int, default=8)
     ap.add_argument("--prompt-len-max", type=int, default=16)
     ap.add_argument("--max-new-tokens", type=int, default=16)
@@ -176,6 +217,12 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"{report['mean_occupancy']:.2f}/{args.slots})")
     print(f"latency p50 {report['latency_p50_s']*1e3:.0f} ms, "
           f"p99 {report['latency_p99_s']*1e3:.0f} ms")
+    if args.prefix_cache or args.prefill_chunk:
+        print(f"prefix hit rate {report['prefix_hit_rate']:.2f} "
+              f"({report['prefix_hit_tokens']} tokens), "
+              f"{report['prefill_chunks']} prefill chunks, "
+              f"{report['preemptions']} preemptions "
+              f"({report['resumes']} resumed)")
     if args.metrics_out or args.trace_out:
         reg = obs.registry()
         ttft = reg.get("serve.ttft_s")
@@ -184,6 +231,14 @@ def main(argv: Optional[List[str]] = None) -> int:
             print(f"SLO: ttft p50 {ttft.quantile(0.5)*1e3:.0f} ms / "
                   f"p99 {ttft.quantile(0.99)*1e3:.0f} ms, inter-token "
                   f"p50 {itl.quantile(0.5)*1e3:.1f} ms")
+        waits = [(name, reg.get(name)) for name in sorted(reg.snapshot())
+                 if name.startswith("serve.admission_wait_s.p")]
+        if waits:
+            parts = [f"{name.rsplit('.', 1)[1]} "
+                     f"{h.quantile(0.5)*1e3:.0f} ms"
+                     for name, h in waits if h is not None and h.total]
+            if parts:
+                print("admission wait p50 by priority: " + ", ".join(parts))
         if args.metrics_out:
             reg.dump_jsonl(args.metrics_out)
             print(f"wrote {args.metrics_out}")

@@ -476,6 +476,61 @@ def mha_decode_paged(cfg: ModelConfig, p: Params, x: jnp.ndarray,
     return dense(out, p["wo"]), new_cache
 
 
+def mha_prefill_paged(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                      pos: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+                      write_idx: jnp.ndarray, gather_idx: jnp.ndarray,
+                      window: Optional[int] = None,
+                      ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One fixed-width prefill *chunk* against the paged KV cache.
+
+    x: (1, C, D) post-ln1 hidden of one prompt chunk for a single
+    request; pos: (C,) absolute positions of the chunk rows; cache:
+    this layer's flat block pool (T, nkv, hd); write_idx: (C,) flat
+    pool slot per row — padded rows (beyond the caller's ``n_valid``)
+    point into the trash block; gather_idx: (W,) flat slots of the
+    request's full fixed-width context in position order, W = table
+    width * block_size.
+
+    Every chunk row gathers the *same* fixed-width context and masks it
+    with :func:`decode_window_mask`, so the reductions run over
+    identical axis widths regardless of chunk size, chunk offset, or
+    how positions are grouped into chunks.  That makes the chunked
+    prefill bitwise self-consistent across chunk groupings — the
+    property the prefix cache's hit path (which resumes mid-prompt at a
+    block boundary) relies on for bitwise-identical outputs
+    (DESIGN.md §15, pinned in tests/test_serve_stack.py).
+    """
+    hd = cfg.resolved_head_dim()
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    g = nq // nkv
+    C = x.shape[1]
+    q = _split_heads(dense(x, p["wq"], bias=p.get("bq")), nq, hd)  # (1,C,nq,hd)
+    k_new = _split_heads(dense(x, p["wk"], bias=p.get("bk")), nkv, hd)
+    v_new = _split_heads(dense(x, p["wv"], bias=p.get("bv")), nkv, hd)
+    if cfg.partial_rotary > 0:
+        inv = rope_freqs(hd, cfg.partial_rotary, cfg.rope_theta)
+        pos_b = pos[None, :]                                      # (1,C)
+        q = apply_rope(q, pos_b, inv)
+        k_new = apply_rope(k_new, pos_b, inv)
+    k = cache["k"].at[write_idx].set(k_new[0].astype(cache["k"].dtype))
+    v = cache["v"].at[write_idx].set(v_new[0].astype(cache["v"].dtype))
+    new_cache = {"k": k, "v": v}
+    kg = jnp.take(k, gather_idx, axis=0)                          # (W,nkv,hd)
+    vg = jnp.take(v, gather_idx, axis=0)
+    idx = jnp.arange(gather_idx.shape[0], dtype=jnp.int32)
+    valid = decode_window_mask(idx[None, :], pos[:, None], window)  # (C,W)
+    qg = q.reshape(1, C, nkv, g, hd)
+    scores = jnp.einsum("bqngh,knh->bngqk", qg, kg).astype(jnp.float32) / np.sqrt(hd)
+    if cfg.attn_logit_softcap > 0:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    scores = jnp.where(valid[None, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bngqk,knh->bqngh", probs, vg)
+    out = out.reshape(1, C, nq * hd)
+    return dense(out, p["wo"]), new_cache
+
+
 # ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------

@@ -46,6 +46,10 @@ class ModelDef:
                                                  #  pos, active, block_size,
                                                  #  impl="reference"|"fused")
                                                  # -> (logits, pool)
+    paged_prefill_chunk: Optional[Callable] = None  # (params, pool, table,
+                                                    #  tokens, pos0, n_valid,
+                                                    #  block_size)
+                                                    # -> (last logits, pool)
 
 
 def _identity_post_unit(params, i, state):
@@ -94,6 +98,10 @@ def _transformer_def(cfg: ModelConfig) -> ModelDef:
                           impl="reference":
             transformer.paged_serve_step(cfg, p, pool, tables, token, pos,
                                          active, block_size, impl=impl),
+        paged_prefill_chunk=lambda p, pool, table, tokens, pos0, n_valid,
+                                   block_size:
+            transformer.paged_prefill_chunk(cfg, p, pool, table, tokens,
+                                            pos0, n_valid, block_size),
     )
 
 

@@ -350,6 +350,73 @@ def paged_serve_step(cfg: ModelConfig, params: Params,
     return unembed(cfg, params, h), new_caches
 
 
+def paged_prefill_chunk(cfg: ModelConfig, params: Params,
+                        caches: Dict[str, jnp.ndarray], table: jnp.ndarray,
+                        tokens: jnp.ndarray, pos0: jnp.ndarray,
+                        n_valid: jnp.ndarray, block_size: int
+                        ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One fixed-width prefill chunk for a single request's block table.
+
+    table (MB,) int32 block table (trash-padded past the prompt);
+    tokens (1, C) int32 chunk (rows past ``n_valid`` are padding);
+    pos0 / n_valid traced scalars — the chunk covers absolute positions
+    ``pos0 .. pos0 + n_valid - 1``.  Returns ``(logits (1,1,V), new
+    caches)``: the logits of the chunk's *last valid* row only (all a
+    prefill needs — the first sampled token), sliced before unembedding
+    so the (C, V) logits tensor is never materialized.
+
+    The chunk is shape-stable in everything but the scalars: the
+    batcher and the solo engine jit it once (declared in
+    ``TRACE_BUDGETS``) and drive any prompt length / chunk offset
+    through the same executable.  Attention gathers the full
+    fixed-width context per row (``common.mha_prefill_paged``), which
+    keeps the chunked prefill bitwise self-consistent across chunk
+    groupings — the prefix cache's hit path resumes mid-prompt through
+    this very executable.  Padded rows write their K/V into the trash
+    block and their outputs are discarded.
+    """
+    MB = table.shape[0]
+    C = tokens.shape[1]
+    pos = pos0 + jnp.arange(C, dtype=jnp.int32)                   # (C,)
+    valid_q = jnp.arange(C, dtype=jnp.int32) < n_valid
+    blk = jnp.take(table, jnp.clip(pos // block_size, 0, MB - 1))
+    write_idx = jnp.where(valid_q, blk * block_size + pos % block_size,
+                          pos % block_size)
+    j = jnp.arange(MB * block_size, dtype=jnp.int32)
+    gather_idx = jnp.take(table, j // block_size) * block_size + j % block_size
+
+    x = params["embed"][tokens] * cfg.emb_scale
+
+    def body(h, xs):
+        lp, cache = xs
+        rs = cfg.residual_scale
+        hn = norm_apply(cfg, lp["ln1"], h)
+        a, new_cache = common.mha_prefill_paged(
+            cfg, lp["attn"], hn, pos, cache, write_idx, gather_idx,
+            window=cfg.window)
+        h = h + a.astype(h.dtype) * rs
+        hn = norm_apply(cfg, lp["ln2"], h)
+        if cfg.moe is not None:
+            f, _ = moe_lib.moe_apply(cfg, lp["moe"], hn)
+        else:
+            f = mlp(cfg, lp["mlp"], hn)
+        return h + f.astype(h.dtype) * rs, new_cache
+
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    else:
+        outs = []
+        for i in range(cfg.num_layers):
+            lp = tree_lib.tree_index(params["layers"], i)
+            ci = jax.tree_util.tree_map(lambda c: c[i], caches)
+            x, co = body(x, (lp, ci))
+            outs.append(co)
+        new_caches = tree_lib.tree_stack(outs)
+    h = norm_apply(cfg, params["final_norm"], x)
+    h_last = jax.lax.dynamic_slice_in_dim(h, n_valid - 1, 1, axis=1)
+    return unembed(cfg, params, h_last), new_caches
+
+
 # ---------------------------------------------------------------------------
 # unit path (pruning relay)
 # ---------------------------------------------------------------------------

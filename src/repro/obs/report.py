@@ -129,6 +129,50 @@ def render_text(summary: Dict[str, Any]) -> str:
                          f"{u['ops']:>4}")
 
     met = summary.get("metrics")
+    if met and any(n.startswith("serve.") for n in met):
+        lines.append("\n== serve SLO ==")
+
+        def _hq(name: str, q: float) -> Optional[float]:
+            m = met.get(name)
+            if not m or m.get("kind") != "histogram":
+                return None
+            h = metrics_lib.Histogram.from_dict(m)
+            return h.quantile(q) if h.total else None
+
+        def _cv(name: str) -> int:
+            m = met.get(name)
+            return int(m["value"]) if m and m.get("kind") == "counter" else 0
+
+        ttft50, ttft99 = _hq("serve.ttft_s", 0.5), _hq("serve.ttft_s", 0.99)
+        itl50, itl99 = (_hq("serve.inter_token_s", 0.5),
+                        _hq("serve.inter_token_s", 0.99))
+        if ttft50 is not None:
+            lines.append(f"  ttft        p50 {_fmt_seconds(ttft50)}  "
+                         f"p99 {_fmt_seconds(ttft99)}")
+        if itl50 is not None:
+            lines.append(f"  inter-token p50 {_fmt_seconds(itl50)}  "
+                         f"p99 {_fmt_seconds(itl99)}")
+        hits, misses = _cv("serve.prefix_hits"), _cv("serve.prefix_misses")
+        if hits + misses:
+            lines.append(f"  prefix cache: {hits}/{hits + misses} lookups "
+                         f"hit ({_cv('serve.prefix_hit_tokens')} tokens "
+                         f"reused, {_cv('serve.prefix_evicted_blocks')} "
+                         f"blocks evicted)")
+        if _cv("serve.prefill_chunks"):
+            lines.append(f"  chunked prefill: "
+                         f"{_cv('serve.prefill_chunks')} chunks")
+        if _cv("serve.preemptions"):
+            lines.append(f"  preemptions: {_cv('serve.preemptions')}")
+        waits = sorted(n for n in met
+                       if n.startswith("serve.admission_wait_s.p"))
+        wparts = []
+        for n in waits:
+            q50 = _hq(n, 0.5)
+            if q50 is not None:
+                wparts.append(f"{n.rsplit('.', 1)[1]} {_fmt_seconds(q50)}")
+        if wparts:
+            lines.append("  admission wait p50: " + ", ".join(wparts))
+
     if met:
         lines.append("\n== metrics ==")
         for name, m in met.items():
@@ -141,11 +185,12 @@ def render_text(summary: Dict[str, Any]) -> str:
                              if m.get("n") else f"  {name:<32} (unset)")
             elif kind == "histogram":
                 h = metrics_lib.Histogram.from_dict(m)
-                # latency histograms by convention carry a `_s` suffix;
+                # latency histograms by convention carry a `_s` suffix
+                # (possibly before a per-class tag, e.g. `_s.p0`);
                 # everything else (iteration counts, depths, fractions)
                 # prints as plain numbers
-                fmt = _fmt_seconds if name.endswith("_s") else \
-                    (lambda v: "-" if v is None else f"{v:.4g}")
+                fmt = _fmt_seconds if name.endswith("_s") or "_s." in name \
+                    else (lambda v: "-" if v is None else f"{v:.4g}")
                 lines.append(
                     f"  {name:<32} n={h.total} mean={fmt(h.mean)} "
                     f"p50={fmt(h.quantile(0.5))} "

@@ -1,11 +1,13 @@
 """Serving: batched decode engine, continuous batcher + paged KV pool,
-packed-2:4 weight store."""
+radix prompt-prefix cache, packed-2:4 weight store."""
 from repro.serve.batcher import (BatchConfig, ContinuousBatcher, Request,
                                  RequestResult, synthetic_trace)
 from repro.serve.engine import Engine, ServeConfig, prepare_serving_params
 from repro.serve.kv_cache import BlockPool, PoolExhausted
 from repro.serve.packed import pack_tree, unpack_tree
+from repro.serve.prefix_cache import PrefixCache
 
 __all__ = ["Engine", "ServeConfig", "prepare_serving_params", "pack_tree",
            "unpack_tree", "ContinuousBatcher", "BatchConfig", "Request",
-           "RequestResult", "synthetic_trace", "BlockPool", "PoolExhausted"]
+           "RequestResult", "synthetic_trace", "BlockPool", "PoolExhausted",
+           "PrefixCache"]

@@ -62,6 +62,15 @@ class ServeConfig:
     seed: int = 0
     sparse: str = "auto"           # auto | packed | dense (fallback flag)
     decode_impl: str = "fused"     # fused | reference (bitwise oracle)
+    prefill_chunk: Optional[int] = None  # tokens per prefill chunk: route
+                                         # the prefill through the same
+                                         # fixed-width paged chunk
+                                         # executable the batcher uses, so
+                                         # solo outputs anchor the chunked
+                                         # batcher bitwise (DESIGN.md §15)
+    block_size: int = 16           # chunked-prefill block/table granularity
+                                   # (must match BatchConfig.block_size for
+                                   # the token-identity anchor)
 
 
 def prepare_serving_params(params: Any, sparse: str
@@ -110,6 +119,17 @@ class Engine:
         if cfg.decode_impl not in DECODE_IMPLS:
             raise ValueError(f"unknown decode_impl {cfg.decode_impl!r}; "
                              f"choices: {DECODE_IMPLS}")
+        if cfg.prefill_chunk is not None:
+            if cfg.prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got "
+                                 f"{cfg.prefill_chunk}")
+            if cfg.block_size < 1:
+                raise ValueError(f"block_size must be >= 1, got "
+                                 f"{cfg.block_size}")
+            if model.paged_prefill_chunk is None:
+                raise ValueError(
+                    f"family {model.cfg.family!r} has no chunked prefill "
+                    f"path (paged_prefill_chunk)")
         self.model, self.cfg = model, cfg
         self.executor = executor
         self.params, self.sparse_stats = prepare_serving_params(params, cfg.sparse)
@@ -126,6 +146,66 @@ class Engine:
                 executor.shard_params(exec_params)
         self._exec_params = exec_params
         self._decode_fn = jax.jit(self._decode_step)
+        if cfg.prefill_chunk is not None:
+            self._chunk_fn = jax.jit(self._chunk_step, donate_argnums=(1,))
+
+    def _chunk_step(self, params, pool, table, tokens, pos0, n_valid):
+        return self.model.paged_prefill_chunk(params, pool, table, tokens,
+                                              pos0, n_valid,
+                                              self.cfg.block_size)
+
+    def _chunked_prefill(self, prompt: jnp.ndarray, cache_len: int,
+                         req_keys: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """Prefill via the fixed-width paged chunk executable, then fold
+        the paged rows into the contiguous serve cache.
+
+        This is the batcher's chunked-prefill machinery run solo: same
+        ``paged_prefill_chunk`` function, same fixed context width
+        (``cache_len``), so the resulting K/V rows and first-token logits
+        are bitwise those of the batcher — which is what lets the
+        chunked batcher anchor token identity against this engine.  The
+        gather into the contiguous cache is a pure data movement (the
+        pool and cache share a dtype), and the contiguous decode read is
+        pinned bitwise-equal to the paged one (tests/test_kv_pool.py).
+        """
+        from repro.serve import kv_cache
+        cfg = self.cfg
+        B, P = prompt.shape
+        bs, C = cfg.block_size, cfg.prefill_chunk
+        MB = cache_len // bs
+        table = jnp.arange(1, MB + 1, dtype=jnp.int32)
+        state = self.model.init_serve_state(self._exec_params, B, cache_len,
+                                            None)
+        if self.executor is not None:
+            state = self.executor.shard_serve_state(state)
+        flat = kv_cache.flat_slots(list(range(1, MB + 1)), P, bs)
+        prompt_np = np.asarray(prompt)
+        firsts, rows = [], {k: [] for k in state}
+        for b in range(B):
+            pool = self.model.init_paged_state(MB + 1, bs)
+            o, last = 0, None
+            while o < P:
+                n_valid = min(C, P - o)
+                toks = np.zeros((1, C), np.int32)
+                toks[0, :n_valid] = prompt_np[b, o:o + n_valid]
+                last, pool = self._chunk_fn(self._exec_params, pool, table,
+                                            jnp.asarray(toks), jnp.int32(o),
+                                            jnp.int32(n_valid))
+                o += n_valid
+            firsts.append(last[:, -1, :])
+            for k in state:
+                rows[k].append(pool[k][:, flat])
+        # cache_len >= P, so decode's non-ring slots are the absolute
+        # positions: rows land at 0..P-1, the tail stays zero (masked)
+        state = {k: state[k].at[:, :, :P].set(jnp.stack(rows[k], axis=1))
+                 for k in state}
+        first_logits = jnp.concatenate(firsts, axis=0).astype(jnp.float32)
+        if self.executor is not None:
+            first_logits = self.executor.replicate_logits(first_logits)
+        token = sampling.sample(first_logits, sampling.step_keys(req_keys, 0),
+                                cfg.temperature)[:, None]
+        return token, state
 
     def _decode_step(self, params, state, token, pos, keys):
         logits, state = self.model.serve_step(params, state, token, pos)
@@ -181,7 +261,17 @@ class Engine:
         req_keys = sampling.request_keys(cfg.seed,
                                          jnp.asarray(request_ids, jnp.int32))
 
-        if self.model.prefill is not None:
+        if cfg.prefill_chunk is not None:
+            if extras is not None:
+                raise ValueError(
+                    "chunked prefill takes token prompts only — serve "
+                    "extras-carrying requests (VLM patches) with "
+                    "prefill_chunk=None")
+            # round the context up to whole blocks for the paged chunk path
+            cache_len = -(-cache_len // cfg.block_size) * cfg.block_size
+            token, state = self._chunked_prefill(prompt, cache_len, req_keys)
+            pos0 = P
+        elif self.model.prefill is not None:
             logits, state = self.model.prefill(self._exec_params, prompt,
                                                cache_len, extras)
             first_logits = logits[:, -1, :].astype(jnp.float32)

@@ -15,7 +15,16 @@ This module owns the host side of that contract:
   inactive decode slots point there, so the jitted decode step writes
   unconditionally (masked slots land in trash) and never branches on
   occupancy.  The allocator therefore hands out blocks ``1..num_blocks-1``
-  and guarantees no block is ever owned by two requests at once.
+  and guarantees no block is ever *writable* by two requests at once.
+
+  Blocks are **refcounted** so the prefix cache (``serve/prefix_cache``)
+  can share read-only prompt blocks across requests: :meth:`alloc` gives
+  the owner the sole reference, :meth:`share` joins an existing live
+  block to another request's table (read-only by contract — sharers
+  write suffix/generated tokens into their own blocks), and
+  :meth:`retain`/:meth:`release` carry the cache's own reference.  A
+  block returns to the free list only when its last reference drops;
+  :meth:`defrag` compacts every referenced block, owned or cache-held.
 * Index helpers (:func:`flat_slots`, :func:`table_row`) shared by the
   batcher and the property tests.
 * Device-side data movement (:func:`scatter_prefill`,
@@ -57,6 +66,7 @@ class BlockPool:
         # LIFO free list, lowest ids popped first (keeps the pool compact)
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
         self._owned: Dict[int, List[int]] = {}
+        self._ref: Dict[int, int] = {}  # block -> refcount (only > 0 entries)
 
     @property
     def num_free(self) -> int:
@@ -64,10 +74,14 @@ class BlockPool:
 
     @property
     def num_live(self) -> int:
-        return sum(len(b) for b in self._owned.values())
+        """Distinct blocks with at least one reference."""
+        return len(self._ref)
 
     def blocks_of(self, request_id: int) -> List[int]:
         return list(self._owned.get(request_id, ()))
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
 
     def alloc(self, request_id: int, n: int = 1) -> List[int]:
         """Allocate ``n`` blocks for ``request_id`` (appended in order)."""
@@ -76,29 +90,80 @@ class BlockPool:
                 f"request {request_id} needs {n} block(s), only "
                 f"{len(self._free)}/{self.num_blocks - 1} free")
         blocks = [self._free.pop() for _ in range(n)]
+        for b in blocks:
+            self._ref[b] = 1
         self._owned.setdefault(request_id, []).extend(blocks)
         return blocks
 
+    def share(self, request_id: int, blocks: Sequence[int]) -> None:
+        """Join live blocks to ``request_id``'s table, read-only.
+
+        Each block gains a reference; it appears in ``blocks_of`` so the
+        request can address it via its block table, but by contract the
+        sharer never writes into it (shared prefix blocks are fully
+        written before they are shared).
+        """
+        for b in blocks:
+            if self._ref.get(b, 0) < 1:
+                raise ValueError(f"cannot share dead block {b}")
+        for b in blocks:
+            self._ref[b] += 1
+        self._owned.setdefault(request_id, []).extend(blocks)
+
+    def retain(self, blocks: Sequence[int]) -> None:
+        """Add a bare reference (no owner) to each live block."""
+        for b in blocks:
+            if self._ref.get(b, 0) < 1:
+                raise ValueError(f"cannot retain dead block {b}")
+        for b in blocks:
+            self._ref[b] += 1
+
+    def release(self, blocks: Sequence[int]) -> List[int]:
+        """Drop one reference per block; blocks reaching zero are freed.
+
+        Returns the blocks actually returned to the free list.
+        """
+        freed = []
+        for b in blocks:
+            r = self._ref.get(b, 0)
+            if r < 1:
+                raise ValueError(f"releasing dead block {b}")
+            if r == 1:
+                del self._ref[b]
+                freed.append(b)
+            else:
+                self._ref[b] = r - 1
+        self._free.extend(sorted(freed, reverse=True))
+        return freed
+
     def free_request(self, request_id: int) -> List[int]:
-        """Return every block owned by ``request_id`` to the free list."""
+        """Drop ``request_id``'s reference on every block it holds.
+
+        Blocks whose last reference this was return to the free list;
+        blocks still referenced elsewhere (prefix-cache entries, other
+        sharers) stay live.  Returns the request's full block list.
+        """
         blocks = self._owned.pop(request_id, [])
-        self._free.extend(sorted(blocks, reverse=True))
+        self.release(blocks)
         return blocks
 
     def defrag(self) -> Dict[int, int]:
         """Compact live blocks onto the lowest ids (trash stays put).
 
-        Returns the ``{old: new}`` remap (identity entries omitted) and
-        rewrites the internal ownership lists.  The caller must apply the
-        same remap to the device pool (:func:`apply_defrag`) and to its
-        block tables before the next decode step.
+        Live means refcount > 0 — owned by a request *or* held by the
+        prefix cache.  Returns the ``{old: new}`` remap (identity entries
+        omitted) and rewrites the internal ownership/refcount maps.  The
+        caller must apply the same remap to the device pool
+        (:func:`apply_defrag`), to its block tables, and to the prefix
+        cache (``PrefixCache.apply_defrag``) before the next decode step.
         """
-        live = sorted(b for bl in self._owned.values() for b in bl)
+        live = sorted(self._ref)
         remap = {old: new for new, old in enumerate(live, start=1)
                  if old != new}
         if remap:
             for rid, bl in self._owned.items():
                 self._owned[rid] = [remap.get(b, b) for b in bl]
+            self._ref = {remap.get(b, b): r for b, r in self._ref.items()}
             self._free = list(range(self.num_blocks - 1, len(live), -1))
         return remap
 

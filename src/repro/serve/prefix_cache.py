@@ -1,0 +1,212 @@
+"""Radix (trie) prefix cache over the paged KV block pool.
+
+Identical prompt prefixes — system prompts, few-shot preambles — are the
+dominant traffic shape at scale, and re-prefilling them per request is
+pure waste.  This module caches *full prompt blocks* keyed by their
+token content: after a request finishes prefilling, each full block of
+its prompt becomes a node in a trie whose edges are the
+``block_size``-token chunks of the prompt.  A later request walks the
+trie with its own prompt and adopts every matched block into its block
+table via :meth:`BlockPool.share` — those positions are never
+recomputed.
+
+Semantics (pinned in tests/test_prefix_cache.py and the serve stack
+anchors):
+
+* **Exact match only.**  An edge matches iff all ``block_size`` tokens
+  are equal; partial blocks are never cached or matched.
+* **Matches are capped at ``(P - 1) // block_size`` blocks** so at least
+  one prompt token is always recomputed — the chunked prefill of that
+  tail both produces the logits the first sampled token needs and
+  writes the tail K/V into the request's *own* blocks.  Shared blocks
+  are read-only by contract.
+* **Bitwise identity.**  A cache hit replays the same fixed-width
+  chunked-prefill executable over the same gathered context rows, so
+  hit-path tokens are bitwise-identical to a cold prefill of the same
+  prompt (the chunked path is bitwise self-consistent across chunk
+  offsets/groupings; see DESIGN.md §15).
+* **Refcount lifecycle.**  The cache holds one pool reference per node
+  (:meth:`BlockPool.retain`); each sharer holds another.  Eviction is
+  LRU over *leaf* nodes whose pool refcount is exactly 1 (only the
+  cache still references them) — interior nodes and blocks shared with
+  in-flight requests are never evicted.
+* **Defrag-aware.**  :meth:`apply_defrag` renames node block ids after
+  a pool compaction; contents move with the blocks, so shared-block
+  bytes are preserved (pinned by property test).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import kv_cache
+
+
+class _Node:
+    __slots__ = ("key", "block", "children", "parent", "last_used")
+
+    def __init__(self, key: Optional[bytes], block: Optional[int],
+                 parent: Optional["_Node"]):
+        self.key = key
+        self.block = block
+        self.children: Dict[bytes, "_Node"] = {}
+        self.parent = parent
+        self.last_used = 0
+
+
+def _block_keys(prompt: Sequence[int], block_size: int) -> List[bytes]:
+    toks = np.asarray(prompt, np.int32)
+    n_full = len(toks) // block_size
+    return [toks[i * block_size:(i + 1) * block_size].tobytes()
+            for i in range(n_full)]
+
+
+class PrefixCache:
+    """Block-granular radix cache of prompt-prefix KV over a BlockPool.
+
+    ``capacity`` bounds the number of cached blocks; inserts past it
+    evict LRU refcount-1 leaves first and simply skip caching when
+    nothing is evictable (in-flight sharers pin their blocks).
+    """
+
+    def __init__(self, pool: kv_cache.BlockPool,
+                 capacity: Optional[int] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.pool = pool
+        self.capacity = capacity
+        self._root = _Node(None, None, None)
+        self._size = 0      # cached blocks (nodes below root)
+        self._clock = 0
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.inserted_blocks = 0
+        self.evicted_blocks = 0
+
+    @property
+    def num_blocks(self) -> int:
+        return self._size
+
+    def _walk(self, prompt: Sequence[int]) -> List[_Node]:
+        """Longest matched node path, capped to keep >= 1 token uncached."""
+        bs = self.pool.block_size
+        max_match = max(0, (len(prompt) - 1) // bs)
+        path: List[_Node] = []
+        node = self._root
+        for key in _block_keys(prompt, bs)[:max_match]:
+            child = node.children.get(key)
+            if child is None:
+                break
+            path.append(child)
+            node = child
+        return path
+
+    def match_tokens(self, prompt: Sequence[int]) -> int:
+        """Tokens a cache hit would cover, without acquiring anything."""
+        return len(self._walk(prompt)) * self.pool.block_size
+
+    def acquire(self, request_id: int, prompt: Sequence[int]
+                ) -> Tuple[List[int], int]:
+        """Match ``prompt`` and share the matched blocks with the request.
+
+        Returns ``(blocks, matched_tokens)``; the blocks are already in
+        ``request_id``'s table order and counted against its ownership
+        (released by the normal ``free_request`` path).
+        """
+        path = self._walk(prompt)
+        self._clock += 1
+        for node in path:
+            node.last_used = self._clock
+        blocks = [node.block for node in path]
+        if blocks:
+            self.pool.share(request_id, blocks)
+            self.hits += 1
+            self.hit_tokens += len(blocks) * self.pool.block_size
+        else:
+            self.misses += 1
+        return blocks, len(blocks) * self.pool.block_size
+
+    def insert(self, prompt: Sequence[int], blocks: Sequence[int]) -> int:
+        """Cache the full prompt blocks of a completed prefill.
+
+        ``blocks`` are the request's table blocks covering the prompt in
+        logical order (shared prefix first, then its own).  Existing
+        nodes are kept (first writer wins — contents are bitwise equal
+        by construction); new nodes retain their block in the pool.
+        Returns the number of newly cached blocks.
+        """
+        bs = self.pool.block_size
+        keys = _block_keys(prompt, bs)
+        if len(blocks) < len(keys):
+            raise ValueError(
+                f"{len(blocks)} blocks cannot cover {len(keys)} full "
+                f"prompt blocks")
+        self._clock += 1
+        added = 0
+        node = self._root
+        for key, block in zip(keys, blocks):
+            child = node.children.get(key)
+            if child is None:
+                if self.capacity is not None and self._size >= self.capacity:
+                    if self.evict(self._size - self.capacity + 1) == 0:
+                        break
+                self.pool.retain([block])
+                child = _Node(key, block, node)
+                node.children[key] = child
+                self._size += 1
+                added += 1
+            child.last_used = self._clock
+            node = child
+        self.inserted_blocks += added
+        return added
+
+    def _evictable_leaves(self) -> List[_Node]:
+        leaves = []
+        stack = list(self._root.children.values())
+        while stack:
+            node = stack.pop()
+            if node.children:
+                stack.extend(node.children.values())
+            elif self.pool.refcount(node.block) == 1:
+                leaves.append(node)
+        leaves.sort(key=lambda n: n.last_used)
+        return leaves
+
+    def evict(self, n: int) -> int:
+        """Evict up to ``n`` LRU leaf blocks held only by the cache.
+
+        Evicting a leaf may expose its parent as the next candidate, so
+        eviction cascades until ``n`` blocks are freed or nothing is
+        evictable.  Returns the number of blocks freed.
+        """
+        freed = 0
+        while freed < n:
+            leaves = self._evictable_leaves()
+            if not leaves:
+                break
+            for node in leaves[:n - freed]:
+                del node.parent.children[node.key]
+                self.pool.release([node.block])
+                self._size -= 1
+                freed += 1
+        self.evicted_blocks += freed
+        return freed
+
+    def apply_defrag(self, remap: Dict[int, int]) -> None:
+        """Rename node block ids after a :meth:`BlockPool.defrag`."""
+        if not remap:
+            return
+        stack = list(self._root.children.values())
+        while stack:
+            node = stack.pop()
+            node.block = remap.get(node.block, node.block)
+            stack.extend(node.children.values())
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_tokens": self.hit_tokens,
+                "inserted_blocks": self.inserted_blocks,
+                "evicted_blocks": self.evicted_blocks,
+                "cached_blocks": self._size}

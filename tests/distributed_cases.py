@@ -390,6 +390,50 @@ def case_batcher_tp_parity():
                     (sparse, temp, a.id, a.tokens, b.tokens)
 
 
+def case_batcher_chunked_prefix_tp_parity():
+    """Chunked prefill + radix prefix cache under tensor parallelism:
+    the chunk executable's scatter/gather runs over the heads-sharded
+    paged pool, and cache-shared blocks are shared ACROSS the shards —
+    tokens must stay identical to the single-device chunked batcher."""
+    import dataclasses
+    from repro.core.sparsity import round_tree_nm
+    from repro.distributed.executor import MeshConfig, MeshExecutor
+    from repro.serve import BatchConfig, ContinuousBatcher, Request
+
+    model, params = _tiny_model()
+    pruned = round_tree_nm(params)
+    bc = BatchConfig(slots=3, block_size=8, max_blocks_per_request=3,
+                     num_blocks=24, prefill_chunk=8, prefix_cache=True)
+    ex = MeshExecutor(MeshConfig(devices=8, data_parallel=2, model_parallel=4))
+
+    rng = np.random.default_rng(31)
+    prefix = rng.integers(0, model.cfg.vocab, size=8).astype(np.int32)
+    spec = [(4, 6), (9, 4), (2, 5), (7, 6)]
+
+    def trace(temp):
+        return [Request(id=i, prompt=np.concatenate(
+                            [prefix, rng.integers(0, model.cfg.vocab, size=p)]
+                        ).astype(np.int32),
+                        max_new_tokens=n, temperature=temp)
+                for i, (p, n) in enumerate(spec)]
+
+    for weights, sparse in ((params, "dense"), (pruned, "packed")):
+        for temp in (0.0, 0.8):
+            reqs = trace(temp)
+            runs = []
+            for executor in (None, ex):
+                b = ContinuousBatcher(model, weights,
+                                      dataclasses.replace(bc, sparse=sparse),
+                                      executor=executor)
+                res = b.run([dataclasses.replace(r) for r in reqs])
+                assert sum(r.prefix_hit_tokens for r in res) > 0, \
+                    (sparse, temp, "no cache hits")
+                runs.append(res)
+            for a, b2 in zip(*runs):
+                assert np.array_equal(a.tokens, b2.tokens), \
+                    (sparse, temp, a.id, a.tokens, b2.tokens)
+
+
 def case_paged_attn_shardmap():
     """The fused decode attention's shard_map boundary (models/common.
     _paged_attn_sharded): with the KV pools heads-sharded over "model"

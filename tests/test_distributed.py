@@ -37,6 +37,7 @@ CASES = [
     ("rowfista_solver_parity", 8),
     ("eval_parity", 8),
     ("batcher_tp_parity", 8),
+    ("batcher_chunked_prefix_tp_parity", 8),
     ("engine_tp_parity", 8),
     # fused decode fast path (block-table flash attention shard_map)
     ("paged_attn_shardmap", 8),

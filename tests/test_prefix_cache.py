@@ -1,0 +1,278 @@
+"""Invariants for the radix prompt-prefix cache (serve/prefix_cache.py).
+
+The cache shares KV blocks across requests via pool refcounts, so the
+properties that matter are allocator-level: refcounts are conserved
+(every block's count equals its sharers plus its trie node), shared
+blocks never alias into the free list, and a pool defrag moves cached
+contents with their renamed ids.  The hypothesis sweeps replay random
+serve histories (acquire -> alloc -> insert -> free / evict / defrag)
+against those invariants; the deterministic pins below them cover the
+exact-match semantics, the >= 1-token-recomputed cap, LRU leaf-only
+eviction, and capacity behavior — and run even without hypothesis
+(optional test dep, pip install '.[test]').
+"""
+import numpy as np
+import pytest
+
+from repro.serve.kv_cache import (TRASH_BLOCK, BlockPool, PoolExhausted,
+                                  apply_defrag)
+from repro.serve.prefix_cache import PrefixCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+NB, BS = 17, 4          # 16 allocatable blocks of 4 token slots
+
+
+def _serve_one(pool: BlockPool, cache: PrefixCache, rid: int,
+               prompt: np.ndarray):
+    """The batcher's admission accounting in miniature: adopt matched
+    blocks, allocate the rest (always >= 1 — the tail chunk writes K/V
+    into the request's own blocks), cache the full prompt blocks."""
+    blocks, matched = cache.acquire(rid, prompt)
+    P = len(prompt)
+    n_own = max(1, -(-P // pool.block_size)) - len(blocks)
+    try:
+        own = pool.alloc(rid, n_own)
+    except PoolExhausted:
+        pool.free_request(rid)                 # roll back the share
+        raise
+    table = blocks + own
+    cache.insert(prompt, table[:P // pool.block_size])
+    return table, matched
+
+
+def _trie_nodes(cache: PrefixCache):
+    out, stack = [], list(cache._root.children.values())
+    while stack:
+        node = stack.pop()
+        out.append(node)
+        stack.extend(node.children.values())
+    return out
+
+
+def _check_invariants(pool: BlockPool, cache: PrefixCache) -> None:
+    nodes = _trie_nodes(cache)
+    assert len(nodes) == cache.num_blocks
+    # refcount conservation: each block's count is its owners (share
+    # appends to the owned list once per sharer) plus its trie node
+    expected: dict = {}
+    for bl in pool._owned.values():
+        for b in bl:
+            expected[b] = expected.get(b, 0) + 1
+    for node in nodes:
+        expected[node.block] = expected.get(node.block, 0) + 1
+    assert pool._ref == expected
+    # live/free partition the allocatable ids; trash is neither
+    live, free = set(pool._ref), set(pool._free)
+    assert not live & free
+    assert live | free == set(range(1, pool.num_blocks))
+    assert TRASH_BLOCK not in live
+    assert pool.num_live == len(live)
+    # every cached block is still live (never aliased into the free list)
+    for node in nodes:
+        assert pool.refcount(node.block) >= 1
+
+
+if HAVE_HYPOTHESIS:
+    PROMPT = st.lists(st.integers(0, 2), min_size=1, max_size=14)
+    OPS = st.lists(st.one_of(
+        st.tuples(st.just("req"), st.integers(0, 3), PROMPT),
+        st.tuples(st.just("free"), st.integers(0, 3)),
+        st.tuples(st.just("evict"), st.integers(1, 4)),
+        st.tuples(st.just("defrag")),
+    ), min_size=1, max_size=30)
+
+    class TestPrefixCacheProps:
+        @given(OPS)
+        @settings(max_examples=60, deadline=None)
+        def test_refcounts_conserved_over_serve_histories(self, ops):
+            pool = BlockPool(NB, BS)
+            cache = PrefixCache(pool)
+            active = set()
+            for op in ops:
+                if op[0] == "req":
+                    _, rid, prompt = op
+                    if rid in active:
+                        continue
+                    try:
+                        _serve_one(pool, cache, rid,
+                                   np.asarray(prompt, np.int32))
+                        active.add(rid)
+                    except PoolExhausted:
+                        pass
+                elif op[0] == "free":
+                    pool.free_request(op[1])
+                    active.discard(op[1])
+                elif op[0] == "evict":
+                    cache.evict(op[1])
+                else:
+                    cache.apply_defrag(pool.defrag())
+                _check_invariants(pool, cache)
+            # drain: free every request, evict everything evictable —
+            # the pool must come all the way back
+            for rid in list(active):
+                pool.free_request(rid)
+            cache.evict(cache.num_blocks)
+            _check_invariants(pool, cache)
+            assert cache.num_blocks == 0
+            assert pool.num_live == 0
+
+        @given(OPS)
+        @settings(max_examples=30, deadline=None)
+        def test_defrag_preserves_shared_contents(self, ops):
+            """Blocks are stamped with the tokens they cover; after any
+            defrag the trie's renamed block ids must still read back the
+            exact prompt bytes (the serving pool moves K/V rows with
+            the same remap — kv_cache.apply_defrag)."""
+            pool = BlockPool(NB, BS)
+            cache = PrefixCache(pool)
+            state = {"k": np.zeros((1, NB * BS, 1, 1), np.int32)}
+            stamped = []
+            active = set()
+            for op in ops:
+                if op[0] == "req":
+                    _, rid, prompt = op
+                    prompt = np.asarray(prompt, np.int32)
+                    if rid in active:
+                        continue
+                    try:
+                        table, matched = _serve_one(pool, cache, rid, prompt)
+                    except PoolExhausted:
+                        continue
+                    active.add(rid)
+                    # the prefill writes each full block's tokens into
+                    # its rows (matched blocks were written by the
+                    # original insert — bitwise equal by construction)
+                    for i in range(matched // BS, len(prompt) // BS):
+                        b = table[i]
+                        state["k"][0, b * BS:(b + 1) * BS, 0, 0] = \
+                            prompt[i * BS:(i + 1) * BS]
+                elif op[0] == "free":
+                    pool.free_request(op[1])
+                    active.discard(op[1])
+                elif op[0] == "evict":
+                    cache.evict(op[1])
+                else:
+                    remap = pool.defrag()
+                    cache.apply_defrag(remap)
+                    state = apply_defrag(state, remap, NB, BS)
+                    stamped.append(len(remap))
+            # every surviving trie path still reads back its tokens
+            def walk(node, tokens):
+                for child in node.children.values():
+                    toks = tokens + list(np.frombuffer(child.key, np.int32))
+                    got = state["k"][0, child.block * BS:
+                                     (child.block + 1) * BS, 0, 0]
+                    assert got.tolist() == toks[-BS:]
+                    walk(child, toks)
+            walk(cache._root, [])
+
+
+class TestPrefixCachePins:
+    """Deterministic pins — run without hypothesis."""
+
+    def _mk(self, capacity=None):
+        pool = BlockPool(NB, BS)
+        return pool, PrefixCache(pool, capacity)
+
+    def test_exact_match_and_one_token_recomputed_cap(self):
+        pool, cache = self._mk()
+        prompt = np.arange(10, dtype=np.int32)          # 2 full blocks + 2
+        _serve_one(pool, cache, 0, prompt)
+        assert cache.num_blocks == 2
+        # identical prompt: both full blocks match... but the cap keeps
+        # >= 1 token uncached, so a 8-token prompt matches only 1 block
+        assert cache.match_tokens(prompt) == 8
+        assert cache.match_tokens(prompt[:8]) == 4
+        # partial-block tails and near-miss tokens never match
+        assert cache.match_tokens(prompt[:7]) == 4
+        wrong = prompt.copy()
+        wrong[2] = 99
+        assert cache.match_tokens(wrong) == 0
+        # matching is per-block prefix: diverge in block 2 -> 1 block
+        wrong2 = prompt.copy()
+        wrong2[6] = 99
+        assert cache.match_tokens(wrong2) == 4
+
+    def test_hit_shares_blocks_and_skips_recompute_region(self):
+        pool, cache = self._mk()
+        prompt = np.arange(12, dtype=np.int32)
+        table0, _ = _serve_one(pool, cache, 0, prompt)
+        table1, matched = _serve_one(pool, cache, 1, prompt)
+        assert matched == 8                      # (12-1)//4 = 2 blocks
+        assert table1[:2] == table0[:2]          # adopted, not copied
+        assert table1[2] not in table0           # own tail block
+        assert cache.hits == 1 and cache.misses == 1
+        # both sharers + the cache hold the shared blocks
+        for b in table1[:2]:
+            assert pool.refcount(b) == 3
+        _check_invariants(pool, cache)
+
+    def test_free_then_evict_returns_blocks(self):
+        pool, cache = self._mk()
+        prompt = np.arange(12, dtype=np.int32)
+        _serve_one(pool, cache, 0, prompt)
+        pool.free_request(0)
+        # cache retains all 3 cached blocks; the tail own-block frees
+        assert pool.num_live == 3
+        assert cache.evict(99) == 3              # cascades leaf -> root
+        assert pool.num_live == 0 and cache.num_blocks == 0
+        _check_invariants(pool, cache)
+
+    def test_eviction_is_lru_and_skips_shared_blocks(self):
+        pool, cache = self._mk()
+        a = np.arange(12, dtype=np.int32)
+        b = np.arange(100, 112, dtype=np.int32)
+        _serve_one(pool, cache, 0, a)
+        _serve_one(pool, cache, 1, b)
+        pool.free_request(0)
+        pool.free_request(1)
+        # touch a's matchable path (the cap bumps only 2 of a's 3
+        # nodes) -> a's third block is the LRU leaf
+        cache.acquire(2, a)
+        pool.free_request(2)
+        a3 = cache._root.children[a[:4].tobytes()].children[
+            a[4:8].tobytes()].children[a[8:12].tobytes()].block
+        assert cache.evict(1) == 1
+        assert all(n.block != a3 for n in _trie_nodes(cache))
+        assert cache.num_blocks == 5
+        # a sharer pins its blocks: a's remaining path survives a full
+        # eviction sweep while request 3 holds it; b's chain cascades out
+        cache.acquire(3, a)
+        freed = cache.evict(99)
+        assert freed == 3                        # b3 -> b2 -> b1
+        assert cache.num_blocks == 2             # a's two shared blocks stay
+        _check_invariants(pool, cache)
+
+    def test_capacity_evicts_then_skips_when_pinned(self):
+        pool, cache = self._mk(capacity=2)
+        a = np.arange(12, dtype=np.int32)
+        _serve_one(pool, cache, 0, a)
+        assert cache.num_blocks == 2
+        pool.free_request(0)
+        b = np.arange(100, 112, dtype=np.int32)
+        _serve_one(pool, cache, 1, b)            # evicts a's LRU leaves
+        assert cache.num_blocks == 2
+        pool.free_request(1)
+        _check_invariants(pool, cache)
+
+    def test_insert_needs_enough_blocks(self):
+        pool, cache = self._mk()
+        with pytest.raises(ValueError):
+            cache.insert(np.arange(8, dtype=np.int32), [1])
+
+    def test_first_writer_wins_on_reinsert(self):
+        pool, cache = self._mk()
+        prompt = np.arange(8, dtype=np.int32)
+        table0, _ = _serve_one(pool, cache, 0, prompt)
+        table1, _ = _serve_one(pool, cache, 1, prompt)
+        node = cache._root.children[prompt[:4].tobytes()]
+        assert node.block == table0[0]
+        assert cache.inserted_blocks == 2        # block 1 + block 2, once
+        pool.free_request(0)
+        pool.free_request(1)
+        _check_invariants(pool, cache)

@@ -25,6 +25,10 @@ from repro.serve import (BatchConfig, ContinuousBatcher, Engine, PoolExhausted,
 BC = BatchConfig(slots=3, block_size=8, max_blocks_per_request=4,
                  num_blocks=16)
 
+#: chunked-prefill + prefix-cache variant of the same serving shape
+import dataclasses as _dc
+CBC = _dc.replace(BC, prefill_chunk=8, prefix_cache=True)
+
 
 @pytest.fixture(scope="module")
 def tiny():
@@ -281,6 +285,160 @@ class TestDecodeImpl:
                 .generate(prompt, max_new_tokens=6)
                 for impl in ("fused", "reference")]
         np.testing.assert_array_equal(outs[0], outs[1])
+
+
+class TestChunkedPrefixServing:
+    """Chunked prefill + radix prefix cache + SLA scheduling: every path
+    stays on the token-identity anchor, and the chunk executable — like
+    the decode step — traces exactly once."""
+
+    def _shared_prefix_requests(self, vocab, temperature=0.0):
+        rng = np.random.default_rng(9)
+        prefix = rng.integers(0, vocab, size=8).astype(np.int32)
+        spec = [(5, 6), (9, 4), (3, 8), (12, 5), (7, 7)]
+        return [Request(id=i, prompt=np.concatenate(
+                            [prefix, rng.integers(0, vocab, size=p)]
+                        ).astype(np.int32),
+                        max_new_tokens=n, temperature=temperature)
+                for i, (p, n) in enumerate(spec)]
+
+    def _solo_chunked(self, model, params, r, temperature=0.0):
+        eng = Engine(model, params,
+                     ServeConfig(cache_len=CBC.context_len,
+                                 temperature=temperature,
+                                 block_size=CBC.block_size,
+                                 prefill_chunk=CBC.prefill_chunk))
+        return eng.generate(jnp.asarray(r.prompt[None, :]),
+                            max_new_tokens=r.max_new_tokens,
+                            request_ids=[r.id])[0]
+
+    @pytest.mark.parametrize("temperature", [0.0, 0.7])
+    def test_token_identity_dense_and_packed(self, tiny, temperature):
+        model, params = tiny
+        for weights in (params, round_tree_nm(params)):
+            reqs = self._shared_prefix_requests(model.cfg.vocab, temperature)
+            batcher = ContinuousBatcher(model, weights, CBC)
+            results = batcher.run(list(reqs))
+            for req, res in zip(reqs, results):
+                np.testing.assert_array_equal(
+                    res.tokens,
+                    self._solo_chunked(model, weights, req, temperature),
+                    err_msg=f"chunked request {req.id} diverged from solo")
+            # shared prefixes actually hit once the first insert lands
+            assert sum(r.prefix_hit_tokens for r in results) > 0
+            # one chunk executable, one decode executable — joins, hits,
+            # and ragged tails never re-specialize
+            assert batcher._chunk_fn._cache_size() == 1
+            assert batcher._step_fn._cache_size() == 1
+
+    def test_cache_hit_bitwise_equals_cold(self, tiny):
+        """The same (prompt, id) served cold and served from a warm
+        cache must produce bitwise-identical tokens (temperature on, so
+        a single logit ULP would flip the comparison)."""
+        model, params = tiny
+        rng = np.random.default_rng(17)
+        prompt = rng.integers(0, model.cfg.vocab, size=13).astype(np.int32)
+        warm = ContinuousBatcher(model, params, CBC)
+        warm.run([Request(id=0, prompt=prompt, max_new_tokens=6,
+                          temperature=0.7)])
+        warm.run([Request(id=1, prompt=prompt, max_new_tokens=6,
+                          temperature=0.7)])
+        hit = warm.results[1]
+        assert hit.prefix_hit_tokens == 8        # (13-1)//8 = 1 block
+        cold = ContinuousBatcher(model, params, CBC).run(
+            [Request(id=1, prompt=prompt, max_new_tokens=6,
+                     temperature=0.7)])[0]
+        assert cold.prefix_hit_tokens == 0
+        np.testing.assert_array_equal(hit.tokens, cold.tokens)
+
+    def test_preempt_then_resume_identity(self, tiny):
+        """An urgent arrival preempts a lower-priority active request
+        (K/V swapped to host, blocks freed); the victim resumes and
+        still matches its solo run bitwise — temperature on, so the
+        restored sampling index is load-bearing.  The batcher is driven
+        manually until both low-priority requests have grown to fill the
+        pool, so the urgent request always lands under pressure."""
+        import dataclasses
+        model, params = tiny
+        cfg = dataclasses.replace(CBC, slots=2, num_blocks=7)
+        rng = np.random.default_rng(23)
+        mk = lambda i, prio: Request(
+            id=i, prompt=rng.integers(0, model.cfg.vocab, size=12)
+            .astype(np.int32), max_new_tokens=12, temperature=0.7,
+            priority=prio)
+        reqs = [mk(0, 5), mk(1, 5), mk(2, 0)]
+        batcher = ContinuousBatcher(model, params, cfg)
+        batcher.submit(reqs[0])
+        batcher.submit(reqs[1])
+        while batcher.queue or not batcher._active.all():
+            batcher._admit(0.0)
+            if not batcher._prefill_tick(0.0) and batcher._active.any():
+                batcher._tick(0.0)
+        while batcher.pool.num_free:   # decode until both grow to 3 blocks
+            batcher._tick(0.0)
+        batcher.submit(reqs[2])
+        results = batcher.run()
+        assert batcher.stats["preemptions"] >= 1
+        assert batcher.stats["resumes"] == batcher.stats["preemptions"]
+        assert any(r.preemptions > 0 for r in results)
+        for req, res in zip(reqs, results):
+            np.testing.assert_array_equal(
+                res.tokens, self._solo_chunked(model, params, req, 0.7),
+                err_msg=f"request {req.id} diverged through preemption")
+
+    def test_defrag_with_cache_and_prefilling_slots(self, tiny):
+        """Defrag on every tick while chunked prefills are in flight and
+        the radix cache holds shared blocks: tables, prefill state, and
+        trie node ids all remap — tokens unchanged."""
+        model, params = tiny
+        reqs = self._shared_prefix_requests(model.cfg.vocab)
+        batcher = ContinuousBatcher(model, params, CBC)
+        for r in reqs:
+            batcher.submit(r)
+        moved = 0
+        while batcher.queue or batcher._busy():
+            batcher._admit(0.0)
+            batcher._prefill_tick(0.0)
+            if batcher._active.any():
+                batcher._tick(0.0)
+            moved += batcher.defrag()
+        for req in reqs:
+            np.testing.assert_array_equal(
+                batcher.results[req.id].tokens,
+                self._solo_chunked(model, params, req),
+                err_msg=f"request {req.id} diverged under defrag")
+        assert moved > 0
+
+    def test_config_validation(self, tiny):
+        import dataclasses
+        model, params = tiny
+        with pytest.raises(ValueError, match="prefix_cache requires"):
+            ContinuousBatcher(model, params,
+                              dataclasses.replace(BC, prefix_cache=True))
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            ContinuousBatcher(model, params,
+                              dataclasses.replace(BC, prefill_chunk=0))
+        with pytest.raises(ValueError, match="token prompts only"):
+            Engine(model, params,
+                   ServeConfig(prefill_chunk=8)).generate(
+                jnp.zeros((1, 4), jnp.int32), max_new_tokens=2,
+                extras={"patches": jnp.zeros((1, 2, 4))})
+
+    def test_sla_queue_orders_by_priority_then_deadline(self, tiny):
+        """One slot: completion order must follow (priority, deadline)
+        for requests that all arrived before the first admission."""
+        import dataclasses
+        model, params = tiny
+        cfg = dataclasses.replace(CBC, slots=1)
+        rng = np.random.default_rng(29)
+        mk = lambda i, prio, dl: Request(
+            id=i, prompt=rng.integers(0, model.cfg.vocab, size=6)
+            .astype(np.int32), max_new_tokens=3, priority=prio, deadline=dl)
+        reqs = [mk(0, 2, None), mk(1, 0, 9.0), mk(2, 0, 1.0), mk(3, 1, None)]
+        batcher = ContinuousBatcher(model, params, cfg)
+        results = batcher.run(list(reqs))
+        order = sorted(results, key=lambda r: r.first_token)
+        assert [r.id for r in order] == [2, 1, 3, 0]
 
 
 class TestEngineRegressions:
